@@ -1,0 +1,52 @@
+"""Shared helpers for the benchmark harness.
+
+The paper has no empirical tables; its "tables" are theorem statements.
+Each benchmark module validates one claim and returns rows of
+(name, value, derived) that run.py emits as CSV and EXPERIMENTS.md
+ingests.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import classify, tasks, weak
+from repro.core.types import BoostConfig
+
+N_DEFAULT = 1 << 12
+
+
+def learn_once(clsname: str, m: int, k: int, noise: int, seed: int,
+               n: int = N_DEFAULT, coreset: int = 400,
+               num_features: int = 8):
+    cls = weak.make_class(clsname, n=n, num_features=num_features)
+    cfg = BoostConfig(
+        k=k, coreset_size=coreset, domain_size=n, opt_budget=96,
+        deterministic_coreset=clsname != "stumps")
+    task = tasks.make_task(cls, m=m, k=k, noise=noise, seed=seed)
+    opt = tasks.true_opt(task)
+    t0 = time.time()
+    f, res = classify.learn(jnp.asarray(task.x), jnp.asarray(task.y),
+                            jax.random.key(seed), cfg, cls)
+    wall = time.time() - t0
+    errs = int(weak.empirical_errors(f(jnp.asarray(task.flat_x)),
+                                     jnp.asarray(task.flat_y)))
+    return {
+        "class": clsname, "m": m, "k": k, "noise": noise, "opt": opt,
+        "errors": errs, "ok": errs <= opt, "attempts": res.attempts,
+        "bits": res.ledger.total_bits, "wall_s": round(wall, 2),
+        "cfg": cfg, "cls": cls,
+    }
+
+
+def timeit(fn, *args, iters: int = 3, **kw):
+    fn(*args, **kw)                      # compile/warm
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6   # µs

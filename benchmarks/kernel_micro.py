@@ -1,0 +1,60 @@
+"""Benchmark 10: kernel microbenches (interpret-mode correctness +
+structure; wall-times on CPU are NOT TPU predictions — the roofline
+table in EXPERIMENTS.md carries the TPU-side analysis)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timeit
+from repro.kernels.flash_attention import ops as flash_ops
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.mw_update import ops as mw_ops
+from repro.kernels.stump import ops as stump_ops
+from repro.kernels.stump.ref import stump_errors_ref
+
+
+def run_all():
+    rows = []
+    rng = np.random.default_rng(0)
+    # mw_update
+    m = 1 << 14
+    hits = jnp.asarray(rng.integers(0, 40, m), jnp.int32)
+    corr = jnp.asarray(rng.random(m) < 0.5)
+    alive = jnp.asarray(rng.random(m) < 0.9)
+    us = timeit(lambda: mw_ops.mw_update(hits, corr, alive))
+    nh, ws = mw_ops.mw_update(hits, corr, alive)
+    ref = jnp.sum(jnp.where(alive, jnp.exp2(-(hits + jnp.where(
+        corr & alive, 1, 0)).astype(jnp.float32)), 0.0))
+    rows.append({"bench": "kernel_mw_update", "us_per_call": round(us, 1),
+                 "derived": f"m={m};allclose="
+                 f"{bool(jnp.allclose(ws, ref, rtol=1e-5))}"})
+    # stump
+    c, F, Q = 512, 8, 128
+    x = jnp.asarray(rng.standard_normal((c, F)), jnp.float32)
+    w = rng.random(c).astype(np.float32)
+    w = jnp.asarray(w / w.sum())
+    y = jnp.asarray(rng.choice([-1.0, 1.0], c), jnp.float32)
+    th = jnp.asarray(np.sort(rng.standard_normal((F, Q)), 1), jnp.float32)
+    us = timeit(lambda: stump_ops.stump_errors(x, w, y, th))
+    ok = bool(jnp.allclose(stump_ops.stump_errors(x, w, y, th),
+                           stump_errors_ref(x, w, y, th), rtol=3e-5,
+                           atol=3e-6))
+    rows.append({"bench": "kernel_stump", "us_per_call": round(us, 1),
+                 "derived": f"cFQ={c}x{F}x{Q};allclose={ok}"})
+    # flash attention
+    B, S, H, KV, hd = 1, 256, 4, 2, 64
+    q = jnp.asarray(rng.standard_normal((B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, KV, hd)), jnp.float32)
+    us = timeit(lambda: flash_ops.flash_attention(q, k, v), iters=1)
+    got = flash_ops.flash_attention(q, k, v)
+    ref = flash_attention_ref(q.transpose(0, 2, 1, 3),
+                              k.transpose(0, 2, 1, 3),
+                              v.transpose(0, 2, 1, 3)).transpose(0, 2, 1, 3)
+    ok = bool(jnp.allclose(got, ref, rtol=2e-5, atol=2e-5))
+    rows.append({"bench": "kernel_flash", "us_per_call": round(us, 1),
+                 "derived": f"BSHKVhd={B},{S},{H},{KV},{hd};allclose={ok}"})
+    return rows

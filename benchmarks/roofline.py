@@ -1,0 +1,52 @@
+"""Benchmark 11: roofline table assembly.
+
+Reads the dry-run JSONs under experiments/roofline_1pod (the unrolled,
+single-pod compiles) and emits the per-(arch × shape) roofline rows
+used by EXPERIMENTS.md §Roofline.  If the unrolled runs are absent it
+falls back to the scan-form gate results (marked approx).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DIRS = ("experiments/roofline_1pod", "experiments/gate_1pod")
+
+
+def load_rows(root: str = "."):
+    rows = {}
+    for d in DIRS:
+        for path in sorted(glob.glob(os.path.join(root, d, "*.json"))):
+            with open(path) as f:
+                r = json.load(f)
+            key = (r["arch"], r["shape"])
+            if key in rows:
+                continue                      # prefer roofline dir
+            exact = r.get("unrolled") == "full"
+            terms = {"compute": r["compute_s"], "memory": r["memory_s"],
+                     "collective": r["collective_s"]}
+            dom = max(terms, key=terms.get)
+            bound = max(terms.values())
+            frac = (r["compute_s"] / bound) if bound else 0.0
+            rows[key] = {
+                "bench": "roofline", "arch": r["arch"],
+                "shape": r["shape"], "exact_counts": exact,
+                "compute_s": f"{r['compute_s']:.4g}",
+                "memory_s": f"{r['memory_s']:.4g}",
+                "collective_s": f"{r['collective_s']:.4g}",
+                "dominant": dom,
+                "roofline_frac": f"{frac:.3f}",
+                "useful_ratio": f"{r.get('useful_ratio', 0):.3f}",
+                "derived": (f"dom={dom};frac={frac:.3f};"
+                            f"exact={exact}"),
+            }
+    return list(rows.values())
+
+
+def run_all(root: str = "."):
+    rows = load_rows(root)
+    if not rows:
+        return [{"bench": "roofline", "derived": "no dry-run data yet"}]
+    return rows

@@ -1,0 +1,72 @@
+"""Benchmark harness entry: one benchmark per paper claim.
+
+Prints ``name,us_per_call,derived`` CSV (plus bench-specific fields in
+the derived column).  ``python -m benchmarks.run [--only NAME]``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def _suite():
+    from benchmarks import (baselines, finite_class, kernel_micro,
+                            paper_claims, roofline)
+    return {
+        "comm_vs_opt": paper_claims.comm_vs_opt,
+        "comm_vs_k": paper_claims.comm_vs_k,
+        "comm_vs_m": paper_claims.comm_vs_m,
+        "comm_vs_d": paper_claims.comm_vs_d,
+        "error_guarantee": paper_claims.error_guarantee,
+        "lower_bound": paper_claims.lower_bound_bench,
+        "resilient_vs_vanilla": baselines.resilient_vs_vanilla,
+        "semi_agnostic": baselines.semi_agnostic_bench,
+        "neural_resilient": baselines.neural_resilient,
+        "finite_class": finite_class.run_all,
+        "kernel_micro": kernel_micro.run_all,
+        "roofline": roofline.run_all,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--out", default="experiments/bench_results.json")
+    args = ap.parse_args()
+    suite = _suite()
+    if args.only:
+        suite = {args.only: suite[args.only]}
+    print("name,us_per_call,derived")
+    all_rows = {}
+    failures = 0
+    for name, fn in suite.items():
+        t0 = time.time()
+        try:
+            rows = fn()
+            us = (time.time() - t0) * 1e6
+            all_rows[name] = rows
+            for row in rows:
+                derived = row.get("derived", "")
+                extra = ";".join(f"{k}={v}" for k, v in row.items()
+                                 if k not in ("bench", "derived", "cfg",
+                                              "cls", "us_per_call"))
+                print(f"{name},{row.get('us_per_call', round(us, 0))},"
+                      f"\"{derived};{extra}\"")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name},-1,\"FAILED: {type(e).__name__}: {e}\"")
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(all_rows, f, indent=1, default=str)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,50 @@
+"""Resilient neural training: the paper's mechanism as a framework
+feature, on a real (reduced) transformer.
+
+Trains a deepseek-family model on a synthetic corpus with planted label
+noise, twice — vanilla vs resilient (multiplicative weights + hard-core
+quarantine) — and compares clean-split eval loss and noise detection.
+
+Default: ~26M params, 150 steps (CPU-feasible).  --full: ~110M params,
+300 steps (the assignment's "~100M for a few hundred steps" scale; run
+on real hardware or be patient).
+
+    PYTHONPATH=src python examples/resilient_training.py [--full]
+"""
+
+import argparse
+
+from repro.launch.train import run
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--steps", type=int, default=None)
+    a = ap.parse_args()
+    if a.full:
+        d_model, steps, batch, seq = 768, 300, 32, 128   # ≈110M params
+    else:
+        d_model, steps, batch, seq = 384, 150, 32, 48    # ≈26M params
+    steps = a.steps or steps
+    results = {}
+    for resilient in (False, True):
+        print(f"\n=== {'RESILIENT' if resilient else 'VANILLA'} ===")
+        args = argparse.Namespace(
+            arch="deepseek-7b", smoke=True, steps=steps, batch=batch,
+            seq_len=seq, d_model=d_model, vocab=2048,
+            num_examples=4096, noise=0.10, resilient=resilient,
+            check_every=25, coreset=64, min_gap=3, lr=1e-3, seed=0,
+            log_every=max(steps // 6, 1), ckpt_dir=None,
+            ckpt_every=10 ** 9)
+        results[resilient] = run(args)
+    dv = results[False]["clean_eval_loss"]
+    dr = results[True]["clean_eval_loss"]
+    print(f"\nclean-eval loss: vanilla={dv:.4f}  resilient={dr:.4f}  "
+          f"(improvement {dv - dr:+.4f})")
+    print(f"noise recall={results[True].get('noise_recall', 0):.2f} "
+          f"precision={results[True].get('noise_precision', 0):.2f}")
+
+
+if __name__ == "__main__":
+    main()

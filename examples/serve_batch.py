@@ -1,0 +1,30 @@
+"""Batched serving example: prefill + decode across architectures.
+
+Runs reduced variants of a dense, an MoE, and an SSM architecture
+through the same prefill/decode code path the production dry-run
+lowers, with batched requests.
+
+    PYTHONPATH=src python examples/serve_batch.py
+"""
+
+import argparse
+
+from repro.launch.serve import run
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--archs", nargs="+",
+                    default=["qwen3-32b", "phi3.5-moe-42b-a6.6b",
+                             "xlstm-1.3b"])
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--gen", type=int, default=12)
+    a = ap.parse_args()
+    for arch in a.archs:
+        args = argparse.Namespace(arch=arch, smoke=True, batch=a.batch,
+                                  prompt_len=64, gen=a.gen, seed=0)
+        run(args)
+
+
+if __name__ == "__main__":
+    main()

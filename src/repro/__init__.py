@@ -1,0 +1,11 @@
+"""repro — A Resilient Distributed Boosting Algorithm (Filmus, Mehalel, Moran; ICML 2022).
+
+A production-grade JAX framework implementing the paper's communication-
+efficient resilient boosting protocol (BoostAttempt / AccuratelyClassify),
+plus a multi-architecture transformer substrate on which the protocol's
+communication pattern (tiny weighted coresets instead of raw data) and
+resilience mechanism (hard-core-set quarantine) are first-class
+distributed-training features.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,5 @@
+"""Checkpointing (msgpack-based; orbax is not available offline)."""
+
+from repro.ckpt.msgpack_ckpt import save_pytree, load_pytree, CheckpointManager
+
+__all__ = ["save_pytree", "load_pytree", "CheckpointManager"]

@@ -1,0 +1,108 @@
+"""Pytree checkpointing on msgpack (atomic write, step management).
+
+Layout: a single ``.msgpack`` file per step holding
+{path: {dtype, shape, data-bytes}} plus a JSON-ish meta dict.
+Host-gathered (fully addressable) arrays only — adequate for the
+CPU-runnable training drivers in this repo; a real multi-host deployment
+would swap in tensorstore/orbax behind the same interface.
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save_pytree(path: str, tree, meta: dict | None = None) -> None:
+    flat = _flatten_with_paths(tree)
+    payload = {
+        "__meta__": meta or {},
+        "arrays": {
+            k: {"dtype": str(v.dtype), "shape": list(v.shape),
+                "data": v.tobytes()}
+            for k, v in flat.items()
+        },
+    }
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(msgpack.packb(payload))
+        os.replace(tmp, path)                      # atomic
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
+def load_pytree(path: str, like=None):
+    """Returns (tree_or_flat_dict, meta).  With ``like``, restores the
+    exact pytree structure of ``like``."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read())
+    arrays = {
+        k: np.frombuffer(v["data"], dtype=np.dtype(v["dtype"])).reshape(
+            v["shape"])
+        for k, v in payload["arrays"].items()
+    }
+    meta = payload.get("__meta__", {})
+    if like is None:
+        return arrays, meta
+    ref = _flatten_with_paths(like)
+    missing = set(ref) - set(arrays)
+    if missing:
+        raise KeyError(f"checkpoint missing keys: {sorted(missing)[:5]}...")
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        leaves.append(jnp.asarray(arrays[key]).astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), leaves), meta
+
+
+class CheckpointManager:
+    """Step-numbered checkpoints with retention."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    def _path(self, step: int) -> str:
+        return os.path.join(self.dir, f"ckpt_{step:08d}.msgpack")
+
+    def steps(self):
+        out = []
+        for f in os.listdir(self.dir):
+            if f.startswith("ckpt_") and f.endswith(".msgpack"):
+                out.append(int(f[5:-8]))
+        return sorted(out)
+
+    def save(self, step: int, tree, meta=None):
+        save_pytree(self._path(step), tree,
+                    dict(meta or {}, step=step))
+        for old in self.steps()[:-self.keep]:
+            os.unlink(self._path(old))
+
+    def restore_latest(self, like=None):
+        steps = self.steps()
+        if not steps:
+            return None, None
+        return load_pytree(self._path(steps[-1]), like=like)

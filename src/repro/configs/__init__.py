@@ -1,0 +1,9 @@
+"""Per-architecture configs (assigned pool) + the paper's own protocol config."""
+
+from repro.configs.base import (ModelConfig, ShapeConfig, MeshConfig,
+                                INPUT_SHAPES, ASSIGNED_ARCHS,
+                                get_config, all_configs, load_all, reduced)
+
+__all__ = ["ModelConfig", "ShapeConfig", "MeshConfig", "INPUT_SHAPES",
+           "ASSIGNED_ARCHS", "get_config", "all_configs", "load_all",
+           "reduced"]

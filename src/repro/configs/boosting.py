@@ -1,0 +1,13 @@
+"""The paper's own 'architecture': the resilient boosting protocol
+itself, as a dry-runnable distributed program (k players = data axis).
+"""
+
+from repro.core.types import BoostConfig
+
+PRODUCTION_BOOST = BoostConfig(
+    k=16,                       # one player per data-axis group
+    coreset_size=512,
+    domain_size=1 << 20,
+    opt_budget=256,
+    deterministic_coreset=True,
+)

@@ -1,0 +1,15 @@
+"""Core — the paper's contribution: resilient distributed boosting."""
+
+from repro.core.types import (BoostConfig, BoostAttemptResult,
+                              ClassifyResult, Ledger)
+from repro.core.boost_attempt import run_boost_attempt, boost_attempt_sharded
+from repro.core.classify import (learn, run_accurately_classify,
+                                 make_classifier, ResilientClassifier)
+from repro.core import weak, weights, approximation, ledger, tasks
+
+__all__ = [
+    "BoostConfig", "BoostAttemptResult", "ClassifyResult", "Ledger",
+    "run_boost_attempt", "boost_attempt_sharded", "learn",
+    "run_accurately_classify", "make_classifier", "ResilientClassifier",
+    "weak", "weights", "approximation", "ledger", "tasks",
+]

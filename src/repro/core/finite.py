@@ -1,0 +1,57 @@
+"""Finite-class agnostic learning with NO promise on OPT.
+
+Section 6 of the paper ("Characterizing agnostic learning") observes
+that the linear-in-OPT communication of AccuratelyClassify is necessary
+for some classes (Theorem 2.3) but avoidable for others — "for example
+finite classes".  This module makes that observation executable, as a
+baseline/extension the benchmarks can compare against:
+
+For a finite class H = {h_1, …, h_H}: each player computes its local
+error vector E_i(h) = #mistakes of h on S_i (zero communication), and
+sends it to the center: ⌈log2 m⌉·|H| bits.  The center sums and returns
+argmin — exactly OPT errors, **independent of OPT**, with communication
+k·|H|·⌈log2 m⌉ + k·⌈log2 |H|⌉ bits.
+
+This is proper (outputs h ∈ H) — no contradiction with the
+Kane–Livni–Moran–Yehudayoff impossibility, which concerns classes whose
+size is super-exponential in the relevant parameters; here the protocol
+is only communication-efficient when |H| ∈ polylog, which singletons
+over [n] (|H| = n) are NOT — hence Theorem 2.3 still bites for them and
+the OPT-dependence of the boosting route remains necessary in general.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class FiniteResult:
+    best_params: jax.Array
+    errors: int
+    opt: int                      # == errors (exact ERM)
+    total_bits: int
+
+
+def learn_finite(x, y, hyp_params: jax.Array, cls) -> FiniteResult:
+    """x, y: [k, m_loc] shards; hyp_params: [H, 4] the finite class."""
+    k, mloc = x.shape[0], x.shape[1]
+    m = k * mloc
+
+    def player_errors(xi, yi):
+        preds = cls.predict(hyp_params, xi)           # [H, m_loc]
+        return jnp.sum((preds != yi[None]).astype(jnp.int32), axis=-1)
+
+    per_player = jax.vmap(player_errors)(x, y)        # [k, H]
+    totals = per_player.sum(0)                        # [H]
+    j = int(jnp.argmin(totals))
+    errors = int(totals[j])
+    H = hyp_params.shape[0]
+    bits = (k * H * max(1, math.ceil(math.log2(max(m, 2))))
+            + k * max(1, math.ceil(math.log2(max(H, 2)))))
+    return FiniteResult(best_params=hyp_params[j], errors=errors,
+                        opt=errors, total_bits=bits)

@@ -1,0 +1,101 @@
+"""Synthetic learning tasks for the protocol track.
+
+Generates samples labelled by a ground-truth hypothesis from the class,
+optionally corrupted by adversarial label noise (exactly ``noise``
+flipped examples ⇒ OPT ≤ noise, and = noise for the classes here when
+flips hit distinct points), then adversarially partitioned among k
+players (contiguous by sort order — the worst case for naive splitting,
+e.g. each player sees a different region of the domain).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import weak
+
+
+@dataclasses.dataclass
+class Task:
+    x: np.ndarray            # [k, m_loc] (int track) or [k, m_loc, F]
+    y: np.ndarray            # [k, m_loc] int8 ±1
+    target_params: np.ndarray
+    noise_count: int         # number of flipped labels (OPT ≤ this)
+    cls: object
+
+    @property
+    def flat_x(self):
+        return self.x.reshape((-1,) + self.x.shape[2:])
+
+    @property
+    def flat_y(self):
+        return self.y.reshape(-1)
+
+
+def _split(rng, x, y, k, adversarial=True):
+    m = x.shape[0]
+    assert m % k == 0, "sample size must divide k for array layout"
+    if adversarial:
+        order = np.argsort(x if x.ndim == 1 else x[:, 0], kind="stable")
+    else:
+        order = rng.permutation(m)
+    x, y = x[order], y[order]
+    return (x.reshape((k, m // k) + x.shape[1:]),
+            y.reshape(k, m // k))
+
+
+def make_task(cls, m: int, k: int, noise: int, seed: int = 0,
+              adversarial_split: bool = True) -> Task:
+    """Sample m points, label by a random target in ``cls``, flip
+    ``noise`` distinct labels."""
+    rng = np.random.default_rng(seed)
+    if isinstance(cls, weak.AxisStumps):
+        F = cls.num_features
+        x = rng.standard_normal((m, F)).astype(np.float32) * 100.0
+        f = int(rng.integers(F))
+        theta = float(np.quantile(x[:, f], rng.uniform(0.2, 0.8)))
+        s = float(rng.choice([-1.0, 1.0]))
+        params = np.array([4.0, f, theta, s], np.float32)
+    else:
+        n = cls.n
+        x = rng.integers(0, n, size=m).astype(np.int32)
+        if isinstance(cls, weak.Singletons):
+            a = int(x[rng.integers(m)])
+            params = np.array([1.0, a, a, 1.0], np.float32)
+        elif isinstance(cls, weak.Thresholds):
+            a = float(np.quantile(x, rng.uniform(0.2, 0.8)))
+            s = float(rng.choice([-1.0, 1.0]))
+            params = np.array([2.0, np.floor(a), np.floor(a), s], np.float32)
+        elif isinstance(cls, weak.Intervals):
+            a, b = np.sort(rng.choice(x, size=2, replace=False))
+            params = np.array([3.0, a, b, 1.0], np.float32)
+        else:
+            raise ValueError(f"unsupported class {cls}")
+    import jax.numpy as jnp
+    y = np.asarray(cls.predict(jnp.asarray(params), jnp.asarray(x)))
+    y = y.astype(np.int8)
+    # adversarial label noise on distinct points
+    if noise > 0:
+        flip = rng.choice(m, size=noise, replace=False)
+        y[flip] = -y[flip]
+    xs, ys = _split(rng, x, y, k, adversarial_split)
+    return Task(x=xs, y=ys, target_params=params, noise_count=noise,
+                cls=cls)
+
+
+def true_opt(task: Task, grid: int = 4096) -> int:
+    """Brute-force OPT over a hypothesis grid (exact for small classes).
+
+    For thresholds/intervals/singletons ERM over the *full sample* with
+    uniform weights is exact OPT (the ERM routines enumerate all
+    behaviours on the given points, which is all behaviours on S).
+    """
+    import jax.numpy as jnp
+    x = jnp.asarray(task.flat_x)
+    y = jnp.asarray(task.flat_y)
+    m = y.shape[0]
+    w = jnp.ones((m,), jnp.float32) / m
+    _, loss = task.cls.erm(x, y, w)
+    return int(round(float(loss) * m))

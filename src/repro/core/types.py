@@ -1,0 +1,121 @@
+"""Core dataclasses for the resilient distributed boosting protocol.
+
+Terminology follows the paper (Filmus–Mehalel–Moran, ICML 2022):
+
+* ``k``       — number of players; the sample is adversarially split
+                into ``k`` shards.
+* ``m``       — total sample size ``|S|``.
+* ``n``       — domain size ``|U|`` (points are integers in ``[0, n)`` on
+                the 1-D track, or rows of a feature matrix).
+* ``OPT``     — errors of the best hypothesis in the class on ``S``.
+* coreset     — the ε-approximation each player transmits
+                (ε = 1/100 in the paper; size ``O(d/ε²)``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+
+# The paper's constants (Figure 1 / Theorem 3.1).
+EPS_APPROX = 1.0 / 100.0      # ε of the per-player ε-approximation
+WEAK_EDGE_THRESHOLD = 1.0 / 100.0  # center accepts ĥ with L_{D_t}(ĥ) ≤ 1/100
+ADABOOST_ROUNDS_FACTOR = 6    # T = ceil(6 log2 |S|)
+
+
+@dataclasses.dataclass(frozen=True)
+class BoostConfig:
+    """Static configuration of the protocol.
+
+    ``coreset_size`` is the per-player ε-approximation size.  The paper
+    uses a *minimal-size* deterministic 1/100-approximation of size
+    O(d/ε²) = O(d·10⁴); in practice much smaller coresets already satisfy
+    the approximation property for the small-VC classes we instantiate
+    (d ≤ 2), and the randomized variant (Vapnik–Chervonenkis sampling)
+    needs O((d + log 1/δ)/ε²).  The ledger always *charges* the paper's
+    bit cost per transmitted example, so shrinking the coreset only makes
+    the measured communication smaller, never cheats the accounting.
+    """
+
+    k: int                              # number of players
+    coreset_size: int = 256             # examples per player per round
+    domain_size: int = 1 << 16          # n = |U|
+    rounds_factor: int = ADABOOST_ROUNDS_FACTOR
+    weak_threshold: float = WEAK_EDGE_THRESHOLD
+    opt_budget: int = 64                # max outer (quarantine) iterations
+    deterministic_coreset: bool = True  # quantile coreset (1-D classes) vs
+                                        # Gumbel/categorical sampling
+    seed: int = 0
+
+    def num_rounds(self, m: int) -> int:
+        """T = ceil(6 * log2 |S|) — Theorem 3.1 with the paper's constants."""
+        m = max(int(m), 2)
+        return int(jnp.ceil(self.rounds_factor * jnp.log2(m)))
+
+
+@dataclasses.dataclass
+class BoostAttemptResult:
+    """Output of one BoostAttempt execution (Figure 1).
+
+    Exactly one of the two paper outcomes holds:
+
+    * ``stuck == False`` — ``hypotheses[:rounds]`` define the boosted
+      classifier ``f = sign(Σ_t h_t)`` with ``E_S(f) = 0`` on the alive
+      sample (Lemma 4.2).
+    * ``stuck == True``  — ``coreset_index`` (per player) points at a
+      non-realizable subsample S' (Observation 4.3), to be quarantined.
+    """
+
+    stuck: bool
+    rounds: int                  # rounds actually executed
+    hypotheses: Any              # [T, P] stacked hypothesis params
+    coreset_index: Any           # [k, c] local indices of the final coreset
+    coreset_x: Any               # [k, c] domain points of the final coreset
+    coreset_y: Any               # [k, c] labels of the final coreset
+    min_mixture_loss: Any        # L_{D_t}(ĥ) at the last round (diagnostic)
+
+
+@dataclasses.dataclass
+class ClassifyResult:
+    """Output of AccuratelyClassify (Figure 2)."""
+
+    hypotheses: Any              # boosting ensemble from the final attempt
+    rounds: int
+    dispute_x: Any               # [cap] quarantined points (−1 padded)
+    dispute_y: Any               # [cap] labels of quarantined points
+    dispute_count: int           # number of valid dispute entries
+    attempts: int                # BoostAttempt invocations (≤ OPT + 1)
+    stuck_history: list          # per-attempt stuck flag
+    ledger: "Ledger"
+
+
+@dataclasses.dataclass
+class Ledger:
+    """Bit-exact communication accounting (see core/ledger.py)."""
+
+    bits_coresets: int = 0       # step 2(a): k coresets per round
+    bits_weight_sums: int = 0    # step 2(b): k weight sums per round
+    bits_hypotheses: int = 0     # step 2(d): broadcast h_t
+    bits_control: int = 0        # step 2(e): stuck indication, loop control
+    bits_dispute: int = 0        # outer loop: center holds S' (already sent)
+    rounds: int = 0
+    attempts: int = 0
+
+    @property
+    def total_bits(self) -> int:
+        return (self.bits_coresets + self.bits_weight_sums
+                + self.bits_hypotheses + self.bits_control
+                + self.bits_dispute)
+
+    def __add__(self, other: "Ledger") -> "Ledger":
+        return Ledger(
+            bits_coresets=self.bits_coresets + other.bits_coresets,
+            bits_weight_sums=self.bits_weight_sums + other.bits_weight_sums,
+            bits_hypotheses=self.bits_hypotheses + other.bits_hypotheses,
+            bits_control=self.bits_control + other.bits_control,
+            bits_dispute=self.bits_dispute + other.bits_dispute,
+            rounds=self.rounds + other.rounds,
+            attempts=self.attempts + other.attempts,
+        )

@@ -1,0 +1,271 @@
+"""Hypothesis classes and the center's weighted-ERM weak learner.
+
+The center (step 2(d) of BoostAttempt) must find ``ĥ ∈ H`` with
+``L_{D_t}(ĥ) ≤ 1/100`` over the pooled coreset, or certify that none
+exists.  Because ``L_{D_t}`` only depends on hypothesis behaviour *on the
+coreset points*, exact ERM over H reduces to ERM over the finitely many
+behaviours induced by the coreset — each class below implements that
+reduction in closed, jittable form (prefix sums / Kadane / segment sums),
+so the certificate "no hypothesis is 1/100-good" is exact, which is what
+Observation 4.3 (non-realizability of S') requires.
+
+Hypothesis encoding — a flat float32[4] vector ``(type, a, b, s)``:
+
+=====  ==========================  =======================================
+type   class                       prediction
+=====  ==========================  =======================================
+1      singleton over [n)          +1 iff x == a   (paper's Thm 2.3 class)
+2      threshold over [n)          s if x ≥ a else −s  (a = n ⇒ constant −s)
+3      interval over [n)           +1 iff a ≤ x ≤ b
+4      axis-aligned stump          s if X[..., f=a] ≥ b else −s
+=====  ==========================  =======================================
+
+All ``predict`` methods broadcast ``params [..., 4]`` against point
+arrays and return int8 ±1.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+PARAM_DIM = 4
+
+
+def _pm(b: jax.Array) -> jax.Array:
+    """bool -> ±1 (int8)."""
+    return jnp.where(b, jnp.int8(1), jnp.int8(-1))
+
+
+def _field(params: jax.Array, i: int, x_ndim: int) -> jax.Array:
+    """Extract param field i and append x_ndim broadcast axes, so that
+    predict(params [..., 4], x [pts...]) returns [*param_batch, *pts]."""
+    f = params[..., i]
+    return f.reshape(f.shape + (1,) * x_ndim)
+
+
+def _sorted_prefix(xs, ys, w):
+    """Common ERM preamble: sort by point, return per-index prefix sums."""
+    order = jnp.argsort(xs)
+    xs_s = xs[order]
+    wp = jnp.where(ys[order] > 0, w[order], 0.0)
+    wn = jnp.where(ys[order] > 0, 0.0, w[order])
+    return order, xs_s, jnp.cumsum(wp), jnp.cumsum(wn), jnp.sum(wp), jnp.sum(wn)
+
+
+def _first_occurrence(xs_s: jax.Array) -> jax.Array:
+    """Mask of positions that start a run of equal values."""
+    return jnp.concatenate(
+        [jnp.ones((1,), bool), xs_s[1:] != xs_s[:-1]])
+
+
+@dataclasses.dataclass(frozen=True)
+class Singletons:
+    """H = {h_a : a ∈ [n)}, h_a(x) = +1 iff x == a — the paper's
+    lower-bound class (Theorem 2.3).  VC dimension 1."""
+
+    n: int
+
+    vc_dim: int = 1
+
+    def hypothesis_bits(self) -> int:
+        return int(jnp.ceil(jnp.log2(self.n))) + 2  # point id + type/sign
+
+    def predict(self, params: jax.Array, x: jax.Array) -> jax.Array:
+        a = _field(params, 1, x.ndim)
+        return _pm(x == a)
+
+    def erm(self, xs: jax.Array, ys: jax.Array, w: jax.Array):
+        """Exact ERM: candidates a ∈ coreset ∪ {one point off-coreset}."""
+        order, xs_s, cwp, cwn, Wp, _ = _sorted_prefix(xs, ys, w)
+        k = xs.shape[0]
+        first = _first_occurrence(xs_s)
+        # segment sums of (w·1[y=+1], w·1[y=−1]) per unique value run:
+        # run containing position j spans [start(j), end(j)).
+        idx = jnp.arange(k)
+        start = jnp.where(first, idx, 0)
+        start = jax.lax.associative_scan(jnp.maximum, start)        # run start
+        nxt_first = jnp.concatenate([first[1:], jnp.ones((1,), bool)])
+        end = jnp.where(nxt_first, idx, k - 1)
+        end = jax.lax.associative_scan(jnp.minimum, end, reverse=True)
+        seg_wp = cwp[end] - jnp.where(start > 0, cwp[start - 1], 0.0)
+        seg_wn = cwn[end] - jnp.where(start > 0, cwn[start - 1], 0.0)
+        # err(h_a) = Wp_total − seg_wp(a) + seg_wn(a)  for a in coreset
+        errs = Wp - seg_wp + seg_wn
+        j = jnp.argmin(errs)
+        best_in, err_in = xs_s[j].astype(jnp.float32), errs[j]
+        # off-coreset candidate: first free point (behaviour = constant −1)
+        cand = jnp.concatenate(
+            [jnp.zeros((1,), xs_s.dtype), (xs_s + 1) % self.n])
+        pos = jnp.searchsorted(xs_s, cand)
+        present = (pos < k) & (xs_s[jnp.clip(pos, 0, k - 1)] == cand)
+        free_a = cand[jnp.argmin(present)].astype(jnp.float32)  # first False
+        take_free = (Wp < err_in) | jnp.all(present)
+        a = jnp.where(take_free & ~jnp.all(present), free_a, best_in)
+        loss = jnp.where(take_free & ~jnp.all(present), Wp, err_in)
+        params = jnp.stack([jnp.float32(1), a, a, jnp.float32(1)])
+        return params, loss
+
+
+@dataclasses.dataclass(frozen=True)
+class Thresholds:
+    """H = {x ↦ s·sign(x − θ)} over [n).  VC dimension 1."""
+
+    n: int
+
+    vc_dim: int = 1
+
+    def hypothesis_bits(self) -> int:
+        return int(jnp.ceil(jnp.log2(self.n + 1))) + 3
+
+    def predict(self, params: jax.Array, x: jax.Array) -> jax.Array:
+        a = _field(params, 1, x.ndim)
+        s = _field(params, 3, x.ndim)
+        return (jnp.where(x >= a, s, -s)).astype(jnp.int8)
+
+    def erm(self, xs: jax.Array, ys: jax.Array, w: jax.Array):
+        order, xs_s, cwp, cwn, Wp, Wn = _sorted_prefix(xs, ys, w)
+        k = xs.shape[0]
+        first = _first_occurrence(xs_s)
+        # θ at position j ⇒ pred −s for i<j, +s for i≥j (value-aligned
+        # only at first occurrences; j = k is the constant −s hypothesis).
+        prev_wp = jnp.concatenate([jnp.zeros((1,)), cwp])   # Σ_{i<j} wp
+        prev_wn = jnp.concatenate([jnp.zeros((1,)), cwn])
+        err_plus = prev_wp + (Wn - prev_wn)                 # s = +1
+        valid = jnp.concatenate([first, jnp.ones((1,), bool)])
+        err_plus = jnp.where(valid, err_plus, jnp.inf)
+        err_minus = jnp.where(valid, (Wp + Wn) - err_plus, jnp.inf)
+        jp, jm = jnp.argmin(err_plus), jnp.argmin(err_minus)
+        use_plus = err_plus[jp] <= err_minus[jm]
+        j = jnp.where(use_plus, jp, jm)
+        theta = jnp.where(j < k, xs_s[jnp.clip(j, 0, k - 1)].astype(jnp.float32),
+                          jnp.float32(self.n))
+        s = jnp.where(use_plus, 1.0, -1.0)
+        loss = jnp.where(use_plus, err_plus[jp], err_minus[jm])
+        params = jnp.stack([jnp.float32(2), theta, theta, s])
+        return params, loss
+
+
+@dataclasses.dataclass(frozen=True)
+class Intervals:
+    """H = {x ↦ +1 iff a ≤ x ≤ b} over [n).  VC dimension 2."""
+
+    n: int
+
+    vc_dim: int = 2
+
+    def hypothesis_bits(self) -> int:
+        return 2 * int(jnp.ceil(jnp.log2(self.n))) + 2
+
+    def predict(self, params: jax.Array, x: jax.Array) -> jax.Array:
+        a = _field(params, 1, x.ndim)
+        b = _field(params, 2, x.ndim)
+        return _pm((x >= a) & (x <= b))
+
+    def erm(self, xs: jax.Array, ys: jax.Array, w: jax.Array):
+        """Kadane over value-grouped gains: err(a,b) = Wp − Σ_[a,b](wp−wn)."""
+        order, xs_s, cwp, cwn, Wp, _ = _sorted_prefix(xs, ys, w)
+        k = xs.shape[0]
+        nxt_first = jnp.concatenate(
+            [xs_s[1:] != xs_s[:-1], jnp.ones((1,), bool)])
+        # prefix of gain g = wp − wn at run *ends* (value boundaries)
+        P = cwp - cwn
+        P_end = jnp.where(nxt_first, P, -jnp.inf)          # usable right ends
+        prevP = jnp.concatenate([jnp.zeros((1,)), P[:-1]])
+        first = _first_occurrence(xs_s)
+        prevP_start = jnp.where(first, prevP, jnp.inf)     # usable left starts
+        cummin = jax.lax.associative_scan(jnp.minimum, prevP_start)
+        gain = P_end - cummin                              # best Σ ending at j
+        j = jnp.argmax(gain)
+        best_gain = gain[j]
+        # left index: argmin of prevP_start over [0, j]
+        masked = jnp.where(jnp.arange(k) <= j, prevP_start, jnp.inf)
+        i = jnp.argmin(masked)
+        a = xs_s[i].astype(jnp.float32)
+        b = xs_s[j].astype(jnp.float32)
+        loss_in = Wp - best_gain
+        # empty interval (constant −1): encode as a > b
+        use_empty = Wp < loss_in
+        a = jnp.where(use_empty, jnp.float32(1), a)
+        b = jnp.where(use_empty, jnp.float32(0), b)
+        loss = jnp.where(use_empty, Wp, loss_in)
+        params = jnp.stack([jnp.float32(3), a, b, jnp.float32(1)])
+        return params, loss
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisStumps:
+    """H = {X ↦ s·sign(X[f] − θ)} over feature rows.  VC dim O(log F)."""
+
+    num_features: int
+    value_bits: int = 32
+
+    @property
+    def vc_dim(self) -> int:
+        return max(1, int(jnp.ceil(jnp.log2(self.num_features))) + 1)
+
+    def hypothesis_bits(self) -> int:
+        return (int(jnp.ceil(jnp.log2(self.num_features)))
+                + self.value_bits + 3)
+
+    def predict(self, params: jax.Array, x: jax.Array) -> jax.Array:
+        """params [..., 4], x [*pts, F] → [*param_batch, *pts]."""
+        f = params[..., 1].astype(jnp.int32)
+        xv = jnp.take(x, f, axis=-1)            # [*pts, *param_batch]
+        pts_nd = x.ndim - 1
+        perm = tuple(range(pts_nd, xv.ndim)) + tuple(range(pts_nd))
+        xv = jnp.transpose(xv, perm)            # [*param_batch, *pts]
+        theta = _field(params, 2, pts_nd)
+        s = _field(params, 3, pts_nd)
+        return (jnp.where(xv >= theta, s, -s)).astype(jnp.int8)
+
+    def erm(self, xs: jax.Array, ys: jax.Array, w: jax.Array):
+        """vmap the 1-D threshold ERM over features."""
+        thr = Thresholds(n=1 << self.value_bits)
+
+        def per_feature(col):
+            return thr.erm(col, ys, w)
+
+        params_f, losses = jax.vmap(per_feature, in_axes=1)(xs)
+        f = jnp.argmin(losses)
+        p = params_f[f]
+        params = jnp.stack(
+            [jnp.float32(4), f.astype(jnp.float32), p[1], p[3]])
+        return params, losses[f]
+
+
+def make_class(name: str, *, n: int = 0, num_features: int = 0):
+    if name == "singletons":
+        return Singletons(n=n)
+    if name == "thresholds":
+        return Thresholds(n=n)
+    if name == "intervals":
+        return Intervals(n=n)
+    if name == "stumps":
+        return AxisStumps(num_features=num_features)
+    raise ValueError(f"unknown hypothesis class {name!r}")
+
+
+def ensemble_predict(cls, hyp_params: jax.Array, rounds: jax.Array,
+                     x: jax.Array) -> jax.Array:
+    """g(x) = sign(Σ_{t<rounds} h_t(x));  sign(0) := +1 (deterministic)."""
+    hyp_params = jnp.asarray(hyp_params)
+    T = hyp_params.shape[0]
+
+    def one(t):
+        p = cls.predict(hyp_params[t], x).astype(jnp.int32)
+        return jnp.where(t < rounds, p, 0)
+
+    votes = jnp.sum(jax.vmap(one)(jnp.arange(T)), axis=0)
+    return jnp.where(votes >= 0, jnp.int8(1), jnp.int8(-1))
+
+
+def empirical_errors(predict_pm: jax.Array, y: jax.Array,
+                     alive=None) -> jax.Array:
+    """E_S(f): number of misclassified (alive) examples."""
+    wrong = (predict_pm != y)
+    if alive is not None:
+        wrong = wrong & alive
+    return jnp.sum(wrong.astype(jnp.int32))

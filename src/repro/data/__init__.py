@@ -1,0 +1,7 @@
+"""Data pipeline: synthetic corpora with example identity, label noise,
+per-example boosting weights and quarantine masks."""
+
+from repro.data.pipeline import (DataConfig, SyntheticCorpus, make_batch,
+                                 batch_specs)
+
+__all__ = ["DataConfig", "SyntheticCorpus", "make_batch", "batch_specs"]

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the compute hot-spots.
+
+Each kernel package ships kernel.py (pl.pallas_call + explicit BlockSpec
+VMEM tiling, sized for TPU v5e: 128-aligned MXU dims, ≤ ~2 MiB VMEM
+working set), ops.py (the jit'd public wrapper; interpret=True on CPU
+so the kernel body executes on this container), and ref.py (the pure-jnp
+oracle every test sweeps against).
+"""

@@ -1,0 +1,131 @@
+"""Blockwise (flash) causal attention with GQA + sliding window — TPU.
+
+Grid (B·H, nq, nk), nk innermost.  TPU executes the grid sequentially
+per core, so the online-softmax running state (m, l, acc) lives in VMEM
+scratch and is carried across the nk steps of one (bh, iq) pair;
+the output block is written on the last nk step.
+
+GQA is handled in the index_map: query head h reads KV head h // G.
+
+BlockSpecs (v5e): q/o tiles (BQ, hd), k/v tiles (BK, hd) with BQ = BK =
+128 ⇒ MXU-aligned (128×hd @ hd×128) matmuls; VMEM per step =
+(2·BQ·hd + 2·BK·hd + BQ·BK)·4B ≈ 0.9 MiB at hd = 128.
+
+Causality/window is applied per-element inside the tile; fully-masked
+tiles are skipped with ``pl.when`` (no FLOPs, no HBM reads for the
+acc update — the k/v tiles are still prefetched by the pipeline, which
+is the cost model XLA's cost analysis sees).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  bq: int, bk: int, nk: int, causal: bool, window: int,
+                  scale: float):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    live = jnp.ones((bq, bk), bool)
+    if causal:
+        live &= k_pos <= q_pos
+    if window > 0:
+        live &= k_pos > (q_pos - window)
+
+    # block-level skip: any work in this tile?
+    tile_live = True
+    if causal:
+        tile_live = (ik * bk) <= (iq * bq + bq - 1)
+    # (window skip is data-independent too but keep it simple/correct)
+
+    @pl.when(jnp.asarray(tile_live))
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)            # [bq, hd]
+        k = k_ref[0].astype(jnp.float32)            # [bk, hd]
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+        s = jnp.where(live, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(live, p, 0.0)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "bq", "bk", "interpret"))
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           window: int = 0, bq: int = DEFAULT_BQ,
+                           bk: int = DEFAULT_BK,
+                           interpret: bool = False):
+    """q [B, H, S, hd]; k, v [B, KV, T, hd] → o [B, H, S, hd].
+
+    S % bq == T % bk == 0 (caller pads); H % KV == 0 (GQA).
+    """
+    B, H, S, hd = q.shape
+    KV, T = k.shape[1], k.shape[2]
+    assert S % bq == 0 and T % bk == 0 and H % KV == 0
+    G = H // KV
+    nq, nk = S // bq, T // bk
+    scale = hd ** -0.5
+    kernel = functools.partial(
+        _flash_kernel, bq=bq, bk=bk, nk=nk, causal=causal,
+        window=window, scale=scale)
+    qr = q.reshape(B * H, S, hd)
+    kr = k.reshape(B * KV, T, hd)
+    vr = v.reshape(B * KV, T, hd)
+
+    def kv_index(bh, iq, ik):
+        return (bh // G, ik, 0)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, bk, hd), kv_index),
+            pl.BlockSpec((1, bk, hd), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),      # acc
+            pltpu.VMEM((bq,), jnp.float32),         # m (running max)
+            pltpu.VMEM((bq,), jnp.float32),         # l (running denom)
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(B, H, S, hd)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for flash attention (GQA + causal + window)."""
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, causal: bool = True, window: int = 0):
+    """q [B,H,S,hd]; k,v [B,KV,T,hd] → [B,H,S,hd] (f32 math)."""
+    B, H, S, hd = q.shape
+    KV, T = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, S, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgsh,bkth->bkgst", qg, kf) * hd ** -0.5
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(T)[None, :]
+    live = jnp.ones((S, T), bool)
+    if causal:
+        live &= kpos <= qpos
+    if window > 0:
+        live &= kpos > (qpos - window)
+    s = jnp.where(live, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,bkth->bkgsh", w, vf)
+    return o.reshape(B, H, S, hd).astype(q.dtype)

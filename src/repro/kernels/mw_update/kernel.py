@@ -1,0 +1,60 @@
+"""Fused multiplicative-weights update (the paper's step 2(f) + 2(b)).
+
+One pass over the player's shard fuses:
+  hits'  = hits + 1[h_t(x) = y] · alive          (the 2^{-1[·]} update)
+  partial[b] = Σ_{i ∈ block b, alive} 2^{-hits'_i}   (weight-sum reduce)
+
+This is the protocol's memory-bound hot loop (touching every example
+every round); unfused XLA would issue 3 elementwise passes + a reduce.
+Block size 8×128-aligned; per-step VMEM = 4 input/output blocks
+(4·BLOCK·4B = 128 KiB at BLOCK=8192) — far under v5e's 16 MiB budget,
+sized to keep the (single) vector core streaming from HBM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 8192
+
+
+def _mw_kernel(hits_ref, correct_ref, alive_ref, new_hits_ref, wsum_ref):
+    hits = hits_ref[...]
+    corr = correct_ref[...]
+    alive = alive_ref[...]
+    new_hits = hits + jnp.where(corr & alive, 1, 0).astype(jnp.int32)
+    new_hits_ref[...] = new_hits
+    w = jnp.where(alive, jnp.exp2(-new_hits.astype(jnp.float32)), 0.0)
+    wsum_ref[0] = jnp.sum(w)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block"))
+def mw_update_pallas(hits, correct, alive, *, interpret: bool = False,
+                     block: int = BLOCK):
+    """hits int32 [m]; correct, alive bool [m] (m % block == 0 after
+    padding by the caller) → (new_hits [m], wsum_partials [m/block])."""
+    m = hits.shape[0]
+    assert m % block == 0, f"pad to a multiple of {block}"
+    nb = m // block
+    return pl.pallas_call(
+        _mw_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m,), jnp.int32),
+            jax.ShapeDtypeStruct((nb,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(hits, correct, alive)

@@ -1,0 +1,29 @@
+"""Public wrapper: pad, dispatch kernel (interpret on CPU), unpad."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mw_update import kernel as K
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def mw_update(hits, correct, alive, block: int = K.BLOCK,
+              interpret: bool | None = None):
+    """Fused hits update + weight sum.  Returns (new_hits [m], wsum [])."""
+    if interpret is None:
+        interpret = _interpret_default()
+    m = hits.shape[0]
+    block = min(block, max(128, 1 << (m - 1).bit_length()))
+    pad = (-m) % block
+    if pad:
+        hits = jnp.pad(hits, (0, pad))
+        correct = jnp.pad(correct, (0, pad))
+        alive = jnp.pad(alive, (0, pad))       # padded entries dead
+    new_hits, partials = K.mw_update_pallas(
+        hits, correct, alive, interpret=interpret, block=block)
+    return new_hits[:m], jnp.sum(partials)

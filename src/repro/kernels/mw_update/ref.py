@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the fused MW update."""
+
+import jax.numpy as jnp
+
+
+def mw_update_ref(hits, correct, alive, block: int):
+    new_hits = hits + jnp.where(correct & alive, 1, 0).astype(jnp.int32)
+    w = jnp.where(alive, jnp.exp2(-new_hits.astype(jnp.float32)), 0.0)
+    partials = w.reshape(-1, block).sum(axis=1)
+    return new_hits, partials

@@ -1,0 +1,39 @@
+"""Public wrapper: pad to block multiples, dispatch, compute stump errors."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.stump import kernel as K
+from repro.kernels.stump.ref import stump_errors_ref  # re-export oracle
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def stump_scores(x, wy, thetas, interpret: bool | None = None):
+    if interpret is None:
+        interpret = _interpret_default()
+    c, F = x.shape
+    Q = thetas.shape[1]
+    pc, pf, pq = (-c) % K.BC, (-F) % K.BF, (-Q) % K.BQ
+    xp = jnp.pad(x, ((0, pc), (0, pf)))
+    wyp = jnp.pad(wy, (0, pc))                      # zero weight ⇒ no-op
+    # padded thresholds must not be ±inf (NaN-free): use +big so padded
+    # rows compare to 0-features as 0 ≥ big = False
+    tp = jnp.pad(thetas, ((0, pf), (0, pq)), constant_values=3.4e38)
+    S = K.stump_scores_pallas(xp, wyp, tp, interpret=interpret)
+    return S[:F, :Q]
+
+
+def stump_errors(x, w, y, thetas, interpret: bool | None = None):
+    """[F, Q, 2] weighted stump errors via the Pallas contraction."""
+    wy = w * y.astype(w.dtype)
+    S = stump_scores(x, wy, thetas, interpret=interpret)
+    W = jnp.sum(w)
+    swy = jnp.sum(wy)
+    corr_plus = 2.0 * S - swy
+    return jnp.stack([0.5 * (W - corr_plus), 0.5 * (W + corr_plus)],
+                     axis=-1)

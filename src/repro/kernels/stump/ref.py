@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the stump score contraction."""
+
+import jax.numpy as jnp
+
+
+def stump_scores_ref(x, wy, thetas):
+    """S[f,q] = Σ_i wy_i · 1[x[i,f] ≥ θ[f,q]]."""
+    pred = (x[:, :, None] >= thetas[None, :, :]).astype(jnp.float32)
+    return jnp.einsum("c,cfq->fq", wy, pred)
+
+
+def stump_errors_ref(x, w, y, thetas):
+    """Weighted error of every (f, q, sign) stump.  Returns [F, Q, 2]
+    with sign index 0 ⇒ +1 (predict +1 when x ≥ θ), 1 ⇒ −1."""
+    wy = w * y.astype(w.dtype)
+    S = stump_scores_ref(x, wy, thetas)
+    W = jnp.sum(w)
+    swy = jnp.sum(wy)
+    corr_plus = 2.0 * S - swy          # Σ wy_i · pred_i for sign +1
+    err_plus = 0.5 * (W - corr_plus)
+    err_minus = 0.5 * (W + corr_plus)
+    return jnp.stack([err_plus, err_minus], axis=-1)

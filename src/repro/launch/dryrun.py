@@ -1,0 +1,395 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh).
+
+This is the proof that the distribution config is coherent without real
+hardware: jax.jit(step).lower(**ShapeDtypeStructs).compile() must
+succeed on the 16×16 single-pod mesh AND the 2×16×16 multi-pod mesh for
+every assigned architecture × input shape, and the compiled artifact
+yields the roofline terms (§Roofline in EXPERIMENTS.md):
+
+    compute_s    = HLO_FLOPs / (chips × 197e12)
+    memory_s     = HLO_bytes / (chips × 819e9)
+    collective_s = Σ collective bytes (parsed from optimized HLO)
+                   / (chips × 50e9)
+
+Usage:
+    python -m repro.launch.dryrun --arch deepseek-7b --shape train_4k
+    python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import (INPUT_SHAPES, ASSIGNED_ARCHS, MeshConfig,
+                                ModelConfig, ShapeConfig, get_config)
+from repro.data.pipeline import batch_specs
+from repro.launch import mesh as mesh_lib, sharding
+from repro.models import build
+from repro.optim import adamw_init
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins — no allocation)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """Model-input ShapeDtypeStructs for a given input shape.
+
+    VLM: seq_len positions = frontend patch positions + text tokens.
+    audio (enc-dec): seq_len source frames + seq_len//4 target tokens.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.encoder_layers:
+        St = max(S // 4, 16)
+        return {
+            "frames": jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                           jnp.bfloat16),
+            "tokens": jax.ShapeDtypeStruct((B, St), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, St), jnp.int32),
+            "loss_mask": jax.ShapeDtypeStruct((B, St), jnp.float32),
+            "weights": jax.ShapeDtypeStruct((B,), jnp.float32),
+            "alive": jax.ShapeDtypeStruct((B,), jnp.float32),
+        }
+    specs = batch_specs(cfg, shape)
+    if cfg.frontend == "vit_stub":
+        P_ = min(cfg.frontend_tokens, S // 2)
+        St = S - P_
+        specs = dict(
+            specs,
+            tokens=jax.ShapeDtypeStruct((B, St), jnp.int32),
+            labels=jax.ShapeDtypeStruct((B, St), jnp.int32),
+            loss_mask=jax.ShapeDtypeStruct((B, St), jnp.float32),
+            prefix_embeds=jax.ShapeDtypeStruct((B, P_, cfg.d_model),
+                                               jnp.bfloat16),
+        )
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Collective-bytes parsing from optimized HLO
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3": 1, "f8e5m2": 1}
+
+_COLL_RE = re.compile(
+    r"=\s+(?:\()?([a-z0-9]+)\[([0-9,]*)\][^=]*?"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[\s(]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-category result-shape bytes of every collective op, plus an
+    'effective wire bytes per chip' model:
+      all-reduce       2× result (ring reduce-scatter + all-gather)
+      all-gather       1× result
+      reduce-scatter   1× operand ≈ result × shards (we charge result ×1
+                       conservatively: per-chip egress ≈ result bytes)
+      all-to-all       1× result
+      collective-permute 1× result
+    """
+    per = {"all-gather": 0, "all-reduce": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0}
+    count = {k: 0 for k in per}
+    for m in _COLL_RE.finditer(hlo_text):
+        dtype, dims, op = m.group(1), m.group(2), m.group(3)
+        per[op] += _shape_bytes(dtype, dims)
+        count[op] += 1
+    wire = (2 * per["all-reduce"] + per["all-gather"]
+            + per["reduce-scatter"] + per["all-to-all"]
+            + per["collective-permute"])
+    return {"bytes_by_op": per, "count_by_op": count,
+            "wire_bytes": int(wire)}
+
+
+# ---------------------------------------------------------------------------
+# Lower + compile one (arch, shape, mesh)
+# ---------------------------------------------------------------------------
+
+def _step_and_args(cfg: ModelConfig, shape: ShapeConfig,
+                   mesh_cfg: MeshConfig):
+    """Returns (fn, arg_specs, in_shardings) for the shape's step kind."""
+    model = build(cfg)
+    pshape = jax.eval_shape(lambda k: model.init(k), jax.ShapeDtypeStruct(
+        (2,), jnp.uint32))
+    pspecs = sharding.param_specs(pshape, cfg, mesh_cfg)
+    if shape.kind == "train":
+        oshape = jax.eval_shape(adamw_init, pshape)
+        ospecs = sharding.opt_specs(pspecs)
+        bspecs_sd = input_specs(cfg, shape)
+        bparts = sharding.batch_partition(cfg, shape, mesh_cfg)
+        bparts = {k: bparts.get(k, jax.sharding.PartitionSpec())
+                  for k in bspecs_sd}
+        step = model.make_train_step()
+        return (step, (pshape, oshape, bspecs_sd),
+                (pspecs, ospecs, bparts), None)
+    if shape.kind == "prefill":
+        bspecs_sd = input_specs(cfg, shape)
+        bspecs_sd = {k: v for k, v in bspecs_sd.items()
+                     if k in ("tokens", "frames", "prefix_embeds")}
+        bparts = sharding.batch_partition(cfg, shape, mesh_cfg)
+        bparts = {k: bparts.get(k, jax.sharding.PartitionSpec())
+                  for k in bspecs_sd}
+        step = model.make_prefill_step(window=model.decode_window(shape))
+        out_shardings = None
+        if os.environ.get("REPRO_PREFILL_OUT_SHARD", "1") != "0":
+            # Constrain the returned KV/state cache to the batch axis —
+            # leaving it unconstrained lets GSPMD replicate the cache
+            # (a giant all-gather; found via the §Perf roofline).
+            out_shape = jax.eval_shape(step, pshape, bspecs_sd)
+            cspec = sharding.cache_partition(out_shape[1], cfg, shape,
+                                             mesh_cfg)
+            out_shardings = (jax.sharding.PartitionSpec(), cspec)
+        return step, (pshape, bspecs_sd), (pspecs, bparts), out_shardings
+    # decode
+    cache_shape = jax.eval_shape(
+        lambda: model.init_serve_cache(shape, filled=True))
+    cspecs = sharding.cache_partition(cache_shape, cfg, shape, mesh_cfg)
+    tok = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    dp = mesh_cfg.data * mesh_cfg.pod
+    tparts = (jax.sharding.PartitionSpec(mesh_cfg.batch_axes, None)
+              if shape.global_batch % dp == 0
+              else jax.sharding.PartitionSpec(None, None))
+    step = model.make_decode_step(window=model.decode_window(shape))
+    return step, (pshape, cache_shape, tok), (pspecs, cspecs, tparts), None
+
+
+def _apply_overrides(cfg: ModelConfig, overrides):
+    """--set key=value config overrides for §Perf variants."""
+    import dataclasses
+    if not overrides:
+        return cfg
+    kw = {}
+    for kv in overrides:
+        k, v = kv.split("=", 1)
+        field = {f.name: f for f in dataclasses.fields(cfg)}[k]
+        typ = field.type if isinstance(field.type, type) else type(
+            getattr(cfg, k))
+        if typ is bool or isinstance(getattr(cfg, k), bool):
+            kw[k] = v.lower() in ("1", "true", "yes")
+        elif isinstance(getattr(cfg, k), int):
+            kw[k] = int(v)
+        elif isinstance(getattr(cfg, k), float):
+            kw[k] = float(v)
+        else:
+            kw[k] = v
+    return dataclasses.replace(cfg, **kw)
+
+
+def dry_run_one(arch: str, shape_name: str, multi_pod: bool = False,
+                donate: bool = True, overrides=None) -> dict:
+    cfg = _apply_overrides(get_config(arch), overrides)
+    shape = INPUT_SHAPES[shape_name]
+    # tensor-parallel hint for the attention layout constraints
+    # (see models/attention._tp_size; off with REPRO_TP_SIZE=0)
+    os.environ.setdefault("REPRO_TP_SIZE", "16")
+    mesh_cfg = MeshConfig(pod=2 if multi_pod else 1)
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        step, arg_shapes, in_shardings, out_shardings = _step_and_args(
+            cfg, shape, mesh_cfg)
+        as_named = lambda tree: jax.tree.map(
+            lambda s: jax.sharding.NamedSharding(mesh, s), tree,
+            is_leaf=lambda s: isinstance(s, jax.sharding.PartitionSpec))
+        in_shardings = as_named(in_shardings)
+        kw = {}
+        if out_shardings is not None:
+            kw["out_shardings"] = as_named(out_shardings)
+        jitted = jax.jit(
+            step, in_shardings=in_shardings,
+            donate_argnums=(0, 1) if shape.kind == "train" else
+            ((1,) if shape.kind == "decode" else ()), **kw)
+        lowered = jitted.lower(*arg_shapes)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    chips = mesh_cfg.num_devices
+    # cost_analysis runs on the SPMD-PARTITIONED module: flops/bytes and
+    # the parsed collective shapes are already PER-DEVICE quantities, so
+    # the roofline terms divide by per-chip peaks only.
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": list(mesh_cfg.shape), "chips": chips,
+        "kind": shape.kind,
+        "unrolled": os.environ.get("REPRO_SCAN_UNROLL", "1"),
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "hlo_flops_per_dev": flops,
+        "hlo_bytes_per_dev": bytes_accessed,
+        "collectives": coll,
+        "compute_s": flops / mesh_lib.PEAK_FLOPS_BF16,
+        "memory_s": bytes_accessed / mesh_lib.HBM_BW,
+        "collective_s": coll["wire_bytes"] / mesh_lib.ICI_BW,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+    for attr in ("generated_code_size_in_bytes",
+                 "argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes"):
+        try:
+            result[attr] = int(getattr(mem, attr))
+        except Exception:
+            pass
+    terms = {"compute": result["compute_s"], "memory": result["memory_s"],
+             "collective": result["collective_s"]}
+    result["dominant"] = max(terms, key=terms.get)
+    # model FLOPs: 6·N_active·tokens (train), 2·N_active·tokens (fwd);
+    # compared per-device against the compiled per-device FLOPs — the
+    # ratio exposes remat recompute, attention quadratic terms and
+    # dispatch overheads.
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    factor = 6 if shape.kind == "train" else 2
+    result["model_flops_per_dev"] = (factor * cfg.active_param_count()
+                                     * tokens / chips)
+    result["useful_ratio"] = (result["model_flops_per_dev"] / flops
+                              if flops else 0.0)
+    return result
+
+
+def protocol_dry_run(multi_pod: bool = False, m_total: int = 1 << 24,
+                     coreset: int = 512,
+                     hits_dtype=jnp.int32) -> dict:
+    """Lower + compile the paper's own workload: one full BoostAttempt
+    (T rounds of coreset-gather → center ERM → MW update) with the
+    sample sharded over the mesh's data(×pod) axes — 16 (or 32)
+    players, 2^24 examples.  This is the communication pattern of
+    Figure 1 on the production mesh."""
+    from repro.core import boost_attempt, weak
+    from repro.core.types import BoostConfig
+    mesh_cfg = MeshConfig(pod=2 if multi_pod else 1)
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    k = mesh_cfg.data * mesh_cfg.pod
+    cfg = BoostConfig(k=k, coreset_size=coreset, domain_size=1 << 20,
+                      deterministic_coreset=True)
+    cls = weak.Thresholds(n=1 << 20)
+    T = cfg.num_rounds(m_total)
+    axes = ("pod", "data") if multi_pod else ("data",)
+    fn = boost_attempt.boost_attempt_sharded(mesh, cfg, cls, T,
+                                             player_axes=axes)
+    specs = (
+        jax.ShapeDtypeStruct((m_total,), jnp.int32),   # x
+        jax.ShapeDtypeStruct((m_total,), jnp.int8),    # y
+        jax.ShapeDtypeStruct((m_total,), jnp.bool_),   # alive
+        jax.ShapeDtypeStruct((m_total,), hits_dtype),  # hits
+        jax.ShapeDtypeStruct((2,), jnp.uint32),        # key
+    )
+    t0 = time.time()
+    with mesh:
+        lowered = jax.jit(fn).lower(*specs)
+        compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    coll = collective_bytes(compiled.as_text())
+    res = {
+        "arch": "boosting-protocol", "shape": f"m{m_total}",
+        "mesh": list(mesh_cfg.shape), "kind": "protocol",
+        "rounds": T, "coreset": coreset, "players": k,
+        "compile_s": round(time.time() - t0, 1),
+        "hlo_flops_per_dev": float(cost.get("flops", 0.0)),
+        "hlo_bytes_per_dev": float(cost.get("bytes accessed", 0.0)),
+        "collectives": coll,
+        "compute_s": float(cost.get("flops", 0.0))
+        / mesh_lib.PEAK_FLOPS_BF16,
+        "memory_s": float(cost.get("bytes accessed", 0.0))
+        / mesh_lib.HBM_BW,
+        "collective_s": coll["wire_bytes"] / mesh_lib.ICI_BW,
+    }
+    terms = {"compute": res["compute_s"], "memory": res["memory_s"],
+             "collective": res["collective_s"]}
+    res["dominant"] = max(terms, key=terms.get)
+    # NOTE: collectives/flops inside the while-loop body are counted
+    # once by XLA; multiply by `rounds` for per-attempt totals.
+    res["per_attempt_collective_s"] = res["collective_s"] * T
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--protocol", action="store_true")
+    ap.add_argument("--set", dest="overrides", nargs="*", default=None,
+                    help="config overrides, e.g. moe_dispatch=sort")
+    ap.add_argument("--tag", default="",
+                    help="suffix for the output JSON (variant name)")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+    if args.protocol:
+        os.makedirs(args.out, exist_ok=True)
+        res = protocol_dry_run(multi_pod=args.multi_pod)
+        tag = ("boosting-protocol_"
+               + ("2x16x16" if args.multi_pod else "16x16"))
+        with open(os.path.join(args.out, tag + ".json"), "w") as f:
+            json.dump(res, f, indent=1)
+        print(f"OK   {tag}: dominant={res['dominant']} "
+              f"collective={res['collective_s']:.6f}s/round "
+              f"(compile {res['compile_s']:.0f}s)")
+        return
+    os.makedirs(args.out, exist_ok=True)
+    pairs = []
+    if args.all:
+        for arch in ASSIGNED_ARCHS:
+            for shape in INPUT_SHAPES:
+                pairs.append((arch, shape))
+    else:
+        pairs.append((args.arch, args.shape))
+    failures = 0
+    for arch, shape in pairs:
+        tag = f"{arch}_{shape}_{'2x16x16' if args.multi_pod else '16x16'}"
+        if args.tag:
+            tag += "_" + args.tag
+        path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(path):
+            print(f"SKIP {tag} (exists)")
+            continue
+        try:
+            res = dry_run_one(arch, shape, multi_pod=args.multi_pod,
+                              overrides=args.overrides)
+            res["variant"] = args.tag or "baseline"
+            res["overrides"] = args.overrides or []
+            with open(path, "w") as f:
+                json.dump(res, f, indent=1)
+            print(f"OK   {tag}: dominant={res['dominant']} "
+                  f"compute={res['compute_s']:.4f}s "
+                  f"memory={res['memory_s']:.4f}s "
+                  f"collective={res['collective_s']:.4f}s "
+                  f"(compile {res['compile_s']:.0f}s)")
+        except Exception as e:
+            failures += 1
+            print(f"FAIL {tag}: {type(e).__name__}: {str(e)[:400]}")
+            traceback.print_exc()
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,173 @@
+"""Sharding policy: parameter/batch/cache PartitionSpecs per (arch, shape).
+
+Megatron-style tensor parallel on the ``model`` axis with safe fallback:
+any dimension that does not divide the axis size is replicated (granite's
+40 experts → per-expert hidden dim is sharded instead; kv-projections are
+sharded on the flattened KV·hd dim, which divides 16 for every assigned
+arch).  Batch is sharded over (pod, data); for the B=1 long-context
+decode shape the KV cache is sharded over ``data`` along the *sequence*
+axis instead (sequence parallelism over the cache — softmax reductions
+cross the axis, which XLA decomposes into the max/sum all-reduce pair).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import MeshConfig, ModelConfig, ShapeConfig
+
+# param leaf names whose matmul OUTPUT dim is sharded (col-parallel)
+_COL = {"wq", "wk", "wv", "wg", "wu", "up", "in_proj", "wx", "x_proj",
+        "lm_head", "router", "wi", "wf", "dt_proj"}
+# names whose INPUT dim is sharded (row-parallel: follows a col-parallel)
+_ROW = {"wo", "wd", "down", "out_proj"}
+
+
+def _path_names(path):
+    return [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+
+
+def _n_stack_dims(names) -> int:
+    """Leaves under blocks/encoder/decoder carry a leading stack axis."""
+    return 1 if any(n in ("blocks", "encoder", "decoder") for n in names)\
+        else 0
+
+
+def param_spec_for(path, shape, cfg: ModelConfig, model_size: int):
+    names = _path_names(path)
+    stack = _n_stack_dims(names)
+    body = len(shape) - stack
+    lead = (None,) * stack
+
+    def ok(dim_size):
+        return dim_size % model_size == 0
+
+    # --- embeddings -----------------------------------------------------
+    if names[-1] == "emb":
+        return P("model", None) if ok(shape[0]) else P(None, None)
+    # find owning module name (parent of "w"/"b", or the leaf itself)
+    owner = names[-2] if names[-1] in ("w", "b") else names[-1]
+    # --- MoE expert tensors [E, D, F] / [E, F, D] ------------------------
+    if owner in ("wg", "wu", "wd") and body == 3:
+        E = shape[stack]
+        if ok(E):
+            return P(*lead, "model", None, None)       # expert parallel
+        # tensor parallel inside experts: shard the per-expert hidden dim
+        hid_axis = 2 if owner in ("wg", "wu") else 1
+        if ok(shape[stack + hid_axis]):
+            spec = [None, None, None]
+            spec[hid_axis] = "model"
+            return P(*lead, *spec)
+        return P(*lead, None, None, None)
+    # --- 2-D matmul weights ----------------------------------------------
+    if names[-1] == "w" and body == 2:
+        if owner in _COL and ok(shape[-1]):
+            return P(*lead, None, "model")
+        if owner in _ROW and ok(shape[-2]):
+            return P(*lead, "model", None)
+        return P(*lead, None, None)
+    if names[-1] == "b" and body == 1:
+        if owner in _COL and ok(shape[-1]):
+            return P(*lead, "model")
+        return P(*lead, None)
+    # --- mamba/xlstm vectors over d_inner --------------------------------
+    if names[-1] in ("A_log",) and body == 2:
+        return P(*lead, "model", None) if ok(shape[stack]) \
+            else P(*lead, None, None)
+    if names[-1] in ("D", "dt_bias", "conv_b") and body == 1:
+        return P(*lead, "model") if ok(shape[-1]) else P(*lead, None)
+    if names[-1] == "conv_w" and body == 2:            # [cw, di]
+        return P(*lead, None, "model") if ok(shape[-1]) \
+            else P(*lead, None, None)
+    # norms, scalars, recurrent R (heads rarely divide): replicate
+    return P(*([None] * len(shape)))
+
+
+def param_specs(params_shape, cfg: ModelConfig, mesh_cfg: MeshConfig):
+    """Pytree of PartitionSpec matching an eval_shape'd param tree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    specs = [param_spec_for(path, leaf.shape, cfg, mesh_cfg.model)
+             for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_partition(cfg: ModelConfig, shape: ShapeConfig,
+                    mesh_cfg: MeshConfig):
+    """PartitionSpecs for a training/prefill batch dict."""
+    axes = mesh_cfg.batch_axes
+    dp = mesh_cfg.data * mesh_cfg.pod
+    baxes = axes if shape.global_batch % dp == 0 else ()
+    b = baxes if baxes else None
+
+    def spec2(extra=1):
+        return P(b, *([None] * extra))
+
+    specs = {
+        "tokens": spec2(), "labels": spec2(), "loss_mask": spec2(),
+        "weights": P(b), "alive": P(b),
+    }
+    if cfg.frontend == "vit_stub":
+        specs["prefix_embeds"] = P(b, None, None)
+    if cfg.encoder_layers:
+        specs["frames"] = P(b, None, None)
+    return specs
+
+
+def cache_partition(cache_shape, cfg: ModelConfig, shape: ShapeConfig,
+                    mesh_cfg: MeshConfig):
+    """Specs for the serving cache pytree.
+
+    Batch-shard when divisible; otherwise (long_500k, B=1) shard the
+    attention cache over its sequence axis and recurrent states over
+    their (model-sharded) feature axes — data-axis work is then the
+    sequence-parallel softmax reduction.
+    """
+    dp = mesh_cfg.data * mesh_cfg.pod
+    batch_ok = shape.global_batch % dp == 0
+    baxes = mesh_cfg.batch_axes
+
+    def leaf_spec(path, leaf):
+        names = _path_names(path)
+        nd = len(leaf.shape)
+        name = names[-1]
+        if batch_ok:
+            # [nsb, B, ...]: shard dim 1
+            if nd >= 2:
+                return P(None, baxes, *([None] * (nd - 2)))
+            return P(*([None] * nd))
+        # B = 1 long-context: shard attn cache sequence (dim 2 of
+        # [nsb, B, C, KV, hd]) over data; states over model where legal
+        if name in ("k", "v") and nd == 5:
+            C = leaf.shape[2]
+            if C % mesh_cfg.data == 0:
+                return P(None, None, "data", None, None)
+            return P(None, None, None, None, None)
+        if name == "h" and nd == 4:                    # mamba [nsb,B,di,ds]
+            return P(None, None, "model", None) \
+                if leaf.shape[2] % mesh_cfg.model == 0 else P(*[None] * 4)
+        if name == "C" and nd == 5:                    # mlstm C
+            return P(None, None, None, "model", None) \
+                if leaf.shape[3] % mesh_cfg.model == 0 else P(*[None] * 5)
+        if name in ("n",) and nd == 4:
+            return P(None, None, None, "model") \
+                if leaf.shape[3] % mesh_cfg.model == 0 else P(*[None] * 4)
+        if name in ("h", "c", "n", "m") and nd == 3:   # slstm [nsb,B,D]
+            return P(None, None, "model") \
+                if leaf.shape[2] % mesh_cfg.model == 0 else P(*[None] * 3)
+        if name == "conv" and nd == 4:                 # [nsb,B,cw-1,di]
+            return P(None, None, None, "model") \
+                if leaf.shape[3] % mesh_cfg.model == 0 else P(*[None] * 4)
+        return P(*([None] * nd))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shape)
+    return jax.tree_util.tree_unflatten(
+        treedef, [leaf_spec(p, l) for p, l in flat])
+
+
+def opt_specs(pspecs):
+    """AdamW state: moments shard like params; step replicated."""
+    return {"step": P(),
+            "m": jax.tree.map(lambda s: s, pspecs),
+            "v": jax.tree.map(lambda s: s, pspecs)}

@@ -1,0 +1,5 @@
+"""Model substrate: layers, attention, MoE, SSM, xLSTM, assemblies."""
+
+from repro.models.model import Model, build, cross_entropy
+
+__all__ = ["Model", "build", "cross_entropy"]

@@ -1,0 +1,216 @@
+"""GQA attention with KV cache, sliding window, optional qk-norm,
+cross-attention, and a pluggable flash kernel.
+
+Layouts:
+  q:      [B, S, H,  hd]
+  k, v:   [B, T, KV, hd]
+  cache:  {"k": [B, C, KV, hd], "v": [B, C, KV, hd], "len": int32[B]}
+The decode step writes at position ``len % C`` (ring buffer — exact for
+sliding-window attention; for full attention callers guarantee
+len < C, which every serve shape in this repo satisfies by
+construction).
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+
+NEG_INF = -1e30
+
+
+def _tp_size() -> int:
+    """Tensor-parallel degree hint (set by the launcher/dry-run).
+
+    GSPMD left alone may split the head_dim contraction when
+    KV·hd is sharded wider than the KV head count — which turns the
+    attention softmax into S×S-sized cross-shard all-reduces (we
+    measured 32 × 25.8 GB on granite prefill_32k, §Perf G-P3).  With the
+    hint we constrain q/k/v layouts so heads shard only when they
+    divide the axis, and K/V replicate otherwise (one small all-gather
+    instead).
+    """
+    return int(os.environ.get("REPRO_TP_SIZE", "0"))
+
+
+def _constrain_heads(t: jax.Array) -> jax.Array:
+    """t: [B, S, H, hd] — shard H over 'model' iff divisible, else
+    replicate on the model axis."""
+    tp = _tp_size()
+    if not tp:
+        return t
+    if t.shape[2] % tp == 0:
+        return jax.lax.with_sharding_constraint(
+            t, P(None, None, "model", None))
+    return jax.lax.with_sharding_constraint(t, P(None, None, None, None))
+
+
+def init(key, cfg, cross: bool = False):
+    D, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": L.linear_init(ks[0], D, H * hd, bias=cfg.attn_bias),
+        "wk": L.linear_init(ks[1], D, KV * hd, bias=cfg.attn_bias),
+        "wv": L.linear_init(ks[2], D, KV * hd, bias=cfg.attn_bias),
+        "wo": L.linear_init(ks[3], H * hd, D, bias=cfg.attn_bias),
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = L.rmsnorm_init(hd)
+        p["k_norm"] = L.rmsnorm_init(hd)
+    return p
+
+
+def _project_qkv(p, cfg, x, kv_x, positions, kv_positions, use_rope=True,
+                 constrain_layout=False):
+    B = x.shape[0]
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    q = L.linear(p["wq"], x).reshape(B, -1, H, hd)
+    k = L.linear(p["wk"], kv_x).reshape(B, -1, KV, hd)
+    v = L.linear(p["wv"], kv_x).reshape(B, -1, KV, hd)
+    if constrain_layout and getattr(cfg, "attn_layout_constraint", False):
+        # Serving paths only, per-arch opt-in: in training the same
+        # constraint regresses (backward + remat re-issue the gathers;
+        # +13 s collective on granite train_4k), and even in serving it
+        # is arch-dependent (−75 % collective on granite prefill,
+        # REGRESSION on phi3.5 where GSPMD's own choice was better).
+        q, k, v = map(_constrain_heads, (q, k, v))
+    if "q_norm" in p:
+        q = L.rms_norm(p["q_norm"], q, cfg.norm_eps)
+        k = L.rms_norm(p["k_norm"], k, cfg.norm_eps)
+    if use_rope:
+        q = L.rope(q, positions, cfg.rope_theta)
+        k = L.rope(k, kv_positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_scores_mask(q, k, v, mask):
+    """Reference XLA attention (einsum path).  mask: [B, 1|G?, S, T] bool."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", w, v)
+    return out.reshape(B, S, H * hd)
+
+
+def causal_mask(S: int, T: int, offset: int = 0, window: int = 0):
+    """[S, T] bool; query i attends key j iff j ≤ i+offset and, with a
+    window, j > i+offset−window."""
+    i = jnp.arange(S)[:, None] + offset
+    j = jnp.arange(T)[None, :]
+    m = j <= i
+    if window > 0:
+        m &= j > (i - window)
+    return m
+
+
+def full_attention(p, cfg, x, positions, *, causal=True, window=0,
+                   kv_x=None, kv_positions=None, use_rope=True,
+                   use_flash=False, constrain_layout=False):
+    """Training / prefill / encoder attention over a full sequence.
+
+    Returns (out [B,S,D], k, v) so prefill can write the cache.
+    """
+    kv_x = x if kv_x is None else kv_x
+    kv_positions = positions if kv_positions is None else kv_positions
+    q, k, v = _project_qkv(p, cfg, x, kv_x, positions, kv_positions,
+                           use_rope, constrain_layout=constrain_layout)
+    B, S = q.shape[0], q.shape[1]
+    T = k.shape[1]
+    if use_flash and causal and kv_x is x:
+        from repro.kernels.flash_attention import ops as flash_ops
+        out = flash_ops.flash_attention(q, k, v, causal=True, window=window)
+        out = out.reshape(B, S, -1)
+    else:
+        if causal:
+            m = causal_mask(S, T, offset=T - S, window=window)[None]
+        else:
+            m = jnp.ones((1, S, T), bool)
+        out = gqa_scores_mask(q, k, v, jnp.broadcast_to(m, (B, S, T)))
+    return L.linear(p["wo"], out), k, v
+
+
+def init_cache(cfg, batch: int, capacity: int, dtype=jnp.bfloat16):
+    KV, hd = cfg.num_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((batch, capacity, KV, hd), dtype),
+        "v": jnp.zeros((batch, capacity, KV, hd), dtype),
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def decode_attention(p, cfg, x, cache, *, window=0, use_rope=True):
+    """One-token decode: attend to ring cache + self, write self's K/V.
+
+    x: [B, 1, D].  Returns (out [B,1,D], new_cache).
+    """
+    B = x.shape[0]
+    C = cache["k"].shape[1]
+    pos = cache["len"][:, None]                           # [B,1] absolute pos
+    q, k_new, v_new = _project_qkv(p, cfg, x, x, pos, pos, use_rope,
+                                   constrain_layout=True)
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    G = H // KV
+    k_all = cache["k"]
+    v_all = cache["v"]
+    # validity of cache slots: slot s holds absolute position
+    #   p(s) = s + C*floor((len-1-s)/C ... ring arithmetic; with the
+    # invariant "entries written in the last min(len, C) steps are live":
+    slots = jnp.arange(C)[None, :]                        # [1, C]
+    ln = cache["len"][:, None]
+    live = slots < jnp.minimum(ln, C)
+    if window > 0:
+        # absolute position of slot s (ring): latest write wins
+        abs_pos = jnp.where(slots < (ln % jnp.maximum(C, 1)),
+                            ln - (ln % C) + slots,
+                            ln - (ln % C) - C + slots)
+        live &= abs_pos > (ln - window)   # query pos = ln; j > i − window
+        live &= abs_pos >= 0
+    qg = q.reshape(B, 1, KV, G, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k_all,
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    scores = jnp.where(live[:, None, None, None, :], scores, NEG_INF)
+    # self-attention to the new token's own K/V
+    self_score = jnp.einsum("bskgh,bskh->bkgs", qg,
+                            k_new.reshape(B, 1, KV, hd),
+                            preferred_element_type=jnp.float32)
+    self_score = self_score / jnp.sqrt(jnp.float32(hd))
+    all_scores = jnp.concatenate(
+        [scores, self_score[..., None]], axis=-1)         # [B,KV,G,1,C+1]
+    w = jax.nn.softmax(all_scores, axis=-1).astype(v_all.dtype)
+    out = (jnp.einsum("bkgst,btkh->bskgh", w[..., :C], v_all)
+           + jnp.einsum("bkgs,bskh->bskgh", w[..., C],
+                        v_new.reshape(B, 1, KV, hd)))
+    out = out.reshape(B, 1, H * hd)
+    # ring write
+    widx = (cache["len"] % C)
+    k_cache = jax.vmap(lambda c, kk, i: c.at[i].set(kk[0]))(
+        cache["k"], k_new, widx)
+    v_cache = jax.vmap(lambda c, vv, i: c.at[i].set(vv[0]))(
+        cache["v"], v_new, widx)
+    new_cache = {"k": k_cache, "v": v_cache, "len": cache["len"] + 1}
+    return L.linear(p["wo"], out), new_cache
+
+
+def cross_decode_attention(p, cfg, x, enc_kv):
+    """Cross-attention for enc-dec decode: O(L_enc) per token.
+
+    enc_kv: precomputed {"k","v"} over encoder output [B, T, KV, hd].
+    """
+    B = x.shape[0]
+    q = L.linear(p["wq"], x).reshape(B, 1, cfg.num_heads, cfg.hd)
+    out = gqa_scores_mask(q, enc_kv["k"], enc_kv["v"],
+                          jnp.ones((B, 1, enc_kv["k"].shape[1]), bool))
+    return L.linear(p["wo"], out)

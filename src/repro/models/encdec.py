@@ -1,0 +1,161 @@
+"""Encoder–decoder stack (seamless-m4t): bidirectional encoder over stub
+frame embeddings, causal decoder with cross-attention.
+
+Serving: ``prefill`` encodes the (long) source once and precomputes the
+cross-attention K/V; each decode step then costs O(L_enc · d) for the
+cross-attention read plus O(decoded) self-attention — sub-quadratic per
+token, which is why long_500k runs for this arch (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, layers as L
+from repro.models.transformer import scan_unroll
+
+
+def _enc_layer_init(key, cfg):
+    ka, kf = jax.random.split(key)
+    return {
+        "norm1": L.rmsnorm_init(cfg.d_model),
+        "attn": attention.init(ka, cfg),
+        "norm2": L.rmsnorm_init(cfg.d_model),
+        "ffn": L.mlp_init(kf, cfg.d_model, cfg.d_ff),
+    }
+
+
+def _dec_layer_init(key, cfg):
+    ka, kc, kf = jax.random.split(key, 3)
+    return {
+        "norm1": L.rmsnorm_init(cfg.d_model),
+        "self_attn": attention.init(ka, cfg),
+        "norm_x": L.rmsnorm_init(cfg.d_model),
+        "cross_attn": attention.init(kc, cfg, cross=True),
+        "norm2": L.rmsnorm_init(cfg.d_model),
+        "ffn": L.mlp_init(kf, cfg.d_model, cfg.d_ff),
+    }
+
+
+def init_params(key, cfg):
+    ke, kd, kt, kh = jax.random.split(key, 4)
+    enc = jax.vmap(lambda k: _enc_layer_init(k, cfg))(
+        jax.random.split(ke, cfg.encoder_layers))
+    dec = jax.vmap(lambda k: _dec_layer_init(k, cfg))(
+        jax.random.split(kd, cfg.num_layers))
+    return {
+        "encoder": enc,
+        "decoder": dec,
+        "embed": L.embed_init(kt, cfg.padded_vocab, cfg.d_model),
+        "enc_norm": L.rmsnorm_init(cfg.d_model),
+        "final_norm": L.rmsnorm_init(cfg.d_model),
+        "lm_head": L.linear_init(kh, cfg.d_model, cfg.padded_vocab),
+    }
+
+
+def encode(params, cfg, frames):
+    """frames: [B, Se, D] stub frontend embeddings -> [B, Se, D]."""
+    positions = jnp.arange(frames.shape[1])[None, :]
+
+    def body(h, lp):
+        hn = L.rms_norm(lp["norm1"], h, cfg.norm_eps)
+        out, _, _ = attention.full_attention(
+            lp["attn"], cfg, hn, positions, causal=False)
+        h = h + out
+        h = h + L.mlp(lp["ffn"], L.rms_norm(lp["norm2"], h, cfg.norm_eps))
+        return h, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    h, _ = jax.lax.scan(body, frames.astype(jnp.bfloat16),
+                        params["encoder"], unroll=scan_unroll())
+    return L.rms_norm(params["enc_norm"], h, cfg.norm_eps)
+
+
+def decode_train(params, cfg, enc_out, tokens):
+    """Teacher-forced decoder.  tokens: [B, St] -> logits [B, St, Vp]."""
+    h = L.embed(params["embed"], tokens)
+    St = tokens.shape[1]
+    positions = jnp.arange(St)[None, :]
+    enc_positions = jnp.arange(enc_out.shape[1])[None, :]
+
+    def body(h, lp):
+        hn = L.rms_norm(lp["norm1"], h, cfg.norm_eps)
+        out, _, _ = attention.full_attention(
+            lp["self_attn"], cfg, hn, positions, causal=True)
+        h = h + out
+        hn = L.rms_norm(lp["norm_x"], h, cfg.norm_eps)
+        out, _, _ = attention.full_attention(
+            lp["cross_attn"], cfg, hn, positions, causal=False,
+            kv_x=enc_out, kv_positions=enc_positions, use_rope=False)
+        h = h + out
+        h = h + L.mlp(lp["ffn"], L.rms_norm(lp["norm2"], h, cfg.norm_eps))
+        return h, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    h, _ = jax.lax.scan(body, h, params["decoder"],
+                        unroll=scan_unroll())
+    h = L.rms_norm(params["final_norm"], h, cfg.norm_eps)
+    return L.linear(params["lm_head"], h).astype(jnp.float32), jnp.float32(0)
+
+
+def forward(params, cfg, frames, tokens):
+    enc_out = encode(params, cfg, frames)
+    return decode_train(params, cfg, enc_out, tokens)
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def build_cross_cache(params, cfg, enc_out):
+    """Precompute per-layer cross-attention K/V from encoder output."""
+
+    def per_layer(lp):
+        B, T = enc_out.shape[0], enc_out.shape[1]
+        KV, hd = cfg.num_kv_heads, cfg.hd
+        k = L.linear(lp["cross_attn"]["wk"], enc_out).reshape(B, T, KV, hd)
+        v = L.linear(lp["cross_attn"]["wv"], enc_out).reshape(B, T, KV, hd)
+        return {"k": k, "v": v}
+
+    return jax.lax.map(per_layer, params["decoder"])
+
+
+def init_self_cache(cfg, batch: int, capacity: int, dtype=jnp.bfloat16,
+                    filled: bool = False):
+    c = jax.tree.map(
+        lambda leaf: jnp.broadcast_to(leaf, (cfg.num_layers,) + leaf.shape),
+        attention.init_cache(cfg, batch, capacity, dtype))
+    c["len"] = jnp.full((cfg.num_layers, batch),
+                        capacity if filled else 0, jnp.int32)
+    return c
+
+
+def decode_step(params, cfg, cross_cache, self_cache, tokens):
+    """One decoder token against cached encoder K/V.
+
+    tokens: [B, 1] -> (logits [B, Vp], new self_cache).
+    """
+    h = L.embed(params["embed"], tokens)
+
+    def body(hh, xs):
+        lp, cc, sc = xs
+        hn = L.rms_norm(lp["norm1"], hh, cfg.norm_eps)
+        out, new_sc = attention.decode_attention(
+            lp["self_attn"], cfg, hn, sc)
+        hh = hh + out
+        hn = L.rms_norm(lp["norm_x"], hh, cfg.norm_eps)
+        hh = hh + attention.cross_decode_attention(
+            lp["cross_attn"], cfg, hn, cc)
+        hh = hh + L.mlp(lp["ffn"],
+                        L.rms_norm(lp["norm2"], hh, cfg.norm_eps))
+        return hh, new_sc
+
+    h, new_cache = jax.lax.scan(
+        body, h, (params["decoder"], cross_cache, self_cache),
+        unroll=scan_unroll())
+    h = L.rms_norm(params["final_norm"], h, cfg.norm_eps)
+    logits = L.linear(params["lm_head"], h).astype(jnp.float32)
+    return logits[:, 0], new_cache

@@ -1,0 +1,133 @@
+"""Primitive layers: linear, norms, RoPE, SwiGLU MLP, embeddings.
+
+Functional style: every module is an ``init(key, ...) -> params`` plus a
+pure ``apply(params, x, ...)``.  Params are stored float32; forward
+computation runs in the config compute dtype (bf16 on TPU) with f32
+accumulation where it matters (norms, softmax, logits).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Initializer = jax.nn.initializers.Initializer
+
+
+def _normal(key, shape, scale=0.02):
+    return (scale * jax.random.truncated_normal(key, -2.0, 2.0, shape)
+            ).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Linear
+# ---------------------------------------------------------------------------
+
+def linear_init(key, in_dim: int, out_dim: int, bias: bool = False,
+                scale: float = 0.02):
+    p = {"w": _normal(key, (in_dim, out_dim), scale)}
+    if bias:
+        p["b"] = jnp.zeros((out_dim,), jnp.float32)
+    return p
+
+
+def linear(p, x, dtype=jnp.bfloat16):
+    y = x.astype(dtype) @ p["w"].astype(dtype)
+    if "b" in p:
+        y = y + p["b"].astype(dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(dim: int):
+    return {"scale": jnp.ones((dim,), jnp.float32)}
+
+
+def rms_norm(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"]).astype(x.dtype)
+
+
+def rms_norm_scaleless(x, eps: float = 1e-5):
+    """Per-head qk-norm without learned scale (qwen3-style uses learned;
+    we fold the learned scale in via rmsnorm params on head_dim)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def layernorm_init(dim: int):
+    return {"scale": jnp.ones((dim,), jnp.float32),
+            "bias": jnp.zeros((dim,), jnp.float32)}
+
+
+def layer_norm(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Apply RoPE.  x: [..., S, H, hd]; positions: broadcastable to [..., S]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-jnp.log(theta) *
+                    jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs    # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]                          # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:2 * half]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    if 2 * half != hd:                                        # odd head_dim
+        out = jnp.concatenate([out, x[..., 2 * half:].astype(jnp.float32)],
+                              axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int):
+    kg, ku, kd = jax.random.split(key, 3)
+    return {
+        "wg": linear_init(kg, d_model, d_ff),
+        "wu": linear_init(ku, d_model, d_ff),
+        "wd": linear_init(kd, d_ff, d_model),
+    }
+
+
+def mlp(p, x, dtype=jnp.bfloat16):
+    g = jax.nn.silu(linear(p["wg"], x, dtype))
+    u = linear(p["wu"], x, dtype)
+    return linear(p["wd"], g * u, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+def embed_init(key, vocab: int, d_model: int):
+    return {"emb": _normal(key, (vocab, d_model), 0.02)}
+
+
+def embed(p, tokens, dtype=jnp.bfloat16):
+    return jnp.take(p["emb"], tokens, axis=0).astype(dtype)
+
+
+def unembed(p, x, dtype=jnp.bfloat16):
+    """Logits in f32 (loss stability)."""
+    return (x.astype(dtype) @ p["emb"].T.astype(dtype)).astype(jnp.float32)

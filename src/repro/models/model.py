@@ -1,0 +1,166 @@
+"""Top-level model API: build (init, train_step, prefill, decode) per arch.
+
+The resilient-boosting hook (DESIGN.md §2): ``train_step`` consumes a
+per-example weight vector and an alive mask from the data pipeline —
+the multiplicative-weights state maintained by ``core/resilient.py`` —
+and uses them to modulate the per-example loss.  For vanilla training
+the pipeline passes uniform weights / all-alive.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DEFAULT_SWA_WINDOW, ModelConfig, ShapeConfig
+from repro.models import encdec, frontend, layers as L, transformer
+from repro.optim import adamw
+
+
+def cross_entropy(logits, labels, mask):
+    """Token CE with masking.  logits f32 [B,S,V]; labels [B,S]."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return nll  # [B, S] per-token
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    use_flash: bool = False
+
+    # ------------------------------------------------------------------ init
+    def init(self, key):
+        if self.cfg.encoder_layers:
+            return encdec.init_params(key, self.cfg)
+        return transformer.init_params(key, self.cfg)
+
+    # -------------------------------------------------------------- forward
+    def logits(self, params, batch):
+        cfg = self.cfg
+        if cfg.encoder_layers:
+            return encdec.forward(params, cfg, batch["frames"],
+                                  batch["tokens"])
+        prefix = batch.get("prefix_embeds")
+        return transformer.forward(params, cfg, batch["tokens"],
+                                   prefix_embeds=prefix,
+                                   use_flash=self.use_flash)
+
+    def loss_fn(self, params, batch):
+        """Weighted LM loss.  batch:
+          tokens [B,St], labels [B,St], loss_mask [B,St],
+          weights [B] (boosting MW weights), alive [B] (quarantine mask),
+          optional prefix_embeds / frames.
+        """
+        cfg = self.cfg
+        logits, aux = self.logits(params, batch)
+        labels = batch["labels"]
+        mask = batch["loss_mask"].astype(jnp.float32)
+        if logits.shape[1] != labels.shape[1]:
+            # multimodal prefix: loss only over the token tail
+            logits = logits[:, logits.shape[1] - labels.shape[1]:]
+        nll = cross_entropy(logits, labels, mask)            # [B, St]
+        per_example = nll.sum(-1) / jnp.maximum(mask.sum(-1), 1.0)
+        w = (batch["weights"] * batch["alive"]).astype(jnp.float32)
+        w = w / jnp.maximum(w.sum(), 1e-9)
+        loss = jnp.sum(per_example * w)
+        metrics = {
+            "loss": loss,
+            "aux_loss": aux,
+            "per_example_nll": per_example,
+            "tokens": mask.sum(),
+        }
+        return loss + aux, metrics
+
+    # ----------------------------------------------------------- train step
+    def make_train_step(self, *, lr: float = 3e-4, warmup: int = 100,
+                        total_steps: int = 10_000, clip: float = 1.0):
+        cfg = self.cfg
+
+        def train_step(params, opt_state, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                self.loss_fn, has_aux=True)(params, batch)
+            grads, gnorm = adamw.clip_by_global_norm(grads, clip)
+            lr_t = adamw.linear_warmup_cosine(
+                opt_state["step"] + 1, lr, warmup, total_steps)
+            new_params, new_opt = adamw.adamw_update(
+                params, grads, opt_state, lr=lr_t)
+            metrics = dict(metrics, grad_norm=gnorm, lr=lr_t)
+            return new_params, new_opt, metrics
+
+        return train_step
+
+    # -------------------------------------------------------------- serving
+    def make_prefill_step(self, window: int = 0):
+        cfg = self.cfg
+
+        def prefill_step(params, batch):
+            if cfg.encoder_layers:
+                enc_out = encdec.encode(params, cfg, batch["frames"])
+                cross = encdec.build_cross_cache(params, cfg, enc_out)
+                self_cache = encdec.init_self_cache(
+                    cfg, batch["tokens"].shape[0],
+                    int(batch["tokens"].shape[1]) + 1)
+                logits, _ = encdec.decode_train(params, cfg, enc_out,
+                                                batch["tokens"])
+                return logits[:, -1], (cross, self_cache)
+            logits, _, caches = transformer.prefill(
+                params, cfg, batch["tokens"],
+                prefix_embeds=batch.get("prefix_embeds"),
+                use_flash=self.use_flash, window=window)
+            return logits, caches
+
+        return prefill_step
+
+    def make_decode_step(self, window: int = 0):
+        cfg = self.cfg
+
+        def decode_step(params, caches, tokens):
+            if cfg.encoder_layers:
+                cross, self_cache = caches
+                logits, new_self = encdec.decode_step(
+                    params, cfg, cross, self_cache, tokens)
+                return logits, (cross, new_self)
+            return transformer.decode_step(params, cfg, caches, tokens,
+                                           window=window)
+
+        return decode_step
+
+    # --------------------------------------------------- serving cache spec
+    def init_serve_cache(self, shape: ShapeConfig, filled: bool = True):
+        """Cache for a decode shape; capacity honours the long-context
+        mode (SWA archs keep only a ring of DEFAULT_SWA_WINDOW slots for
+        the long_500k shape — that IS the sub-quadratic claim)."""
+        cfg = self.cfg
+        window = self.decode_window(shape)
+        capacity = min(shape.seq_len, window) if window else shape.seq_len
+        B = shape.global_batch
+        if cfg.encoder_layers:
+            cross = {
+                "k": jnp.zeros((cfg.num_layers, B, shape.seq_len,
+                                cfg.num_kv_heads, cfg.hd), jnp.bfloat16),
+                "v": jnp.zeros((cfg.num_layers, B, shape.seq_len,
+                                cfg.num_kv_heads, cfg.hd), jnp.bfloat16),
+            }
+            self_cache = encdec.init_self_cache(cfg, B, 1024,
+                                                filled=False)
+            return (cross, self_cache)
+        return transformer.init_cache(cfg, B, capacity, filled=filled)
+
+    def decode_window(self, shape: ShapeConfig) -> int:
+        cfg = self.cfg
+        if cfg.sliding_window:
+            return cfg.sliding_window
+        if (shape.name == "long_500k"
+                and cfg.long_context_mode == "swa"):
+            return DEFAULT_SWA_WINDOW
+        return 0
+
+
+def build(cfg: ModelConfig, use_flash: bool = False) -> Model:
+    return Model(cfg=cfg, use_flash=use_flash)

@@ -1,0 +1,154 @@
+"""Mixture-of-Experts FFN: top-k router + two dispatch strategies.
+
+* ``einsum`` (default, GSPMD-friendly): GShard/MaxText-style grouped
+  one-hot dispatch.  Tokens are processed in groups of
+  ``GROUP_SIZE`` so the dispatch einsum costs
+  O(T · E·C_g · D) with C_g = ceil(group·K/E·cf) — linear in total
+  tokens, quadratic only in the (fixed) group size.  With experts
+  sharded over the ``model`` axis XLA lowers the dispatch to the
+  canonical all-to-all pattern.
+
+* ``sort`` (MegaBlocks-style): argsort tokens by expert, gather into
+  per-expert capacity buffers, batched expert matmul, scatter-add back.
+  No one-hot FLOPs — pure data movement — but the gathers partition
+  poorly under GSPMD; used on single-device paths and measured against
+  ``einsum`` in the §Perf hillclimb.
+
+Expert weight sharding (see configs/granite): experts axis if
+E % model_parallelism == 0 (expert parallel), otherwise the per-expert
+hidden dim (tensor parallel inside each expert).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+GROUP_SIZE = 1024
+
+
+def _num_experts(cfg) -> int:
+    """Physical expert count (≥ logical; padded experts never win the
+    router because their logits are masked to −inf)."""
+    return max(cfg.expert_pad_to, cfg.num_experts)
+
+
+def init(key, cfg):
+    D, E, F = cfg.d_model, _num_experts(cfg), cfg.expert_d_ff
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    return {
+        "router": L.linear_init(kr, D, cfg.num_experts, scale=0.02),
+        "wg": L._normal(kg, (E, D, F)),
+        "wu": L._normal(ku, (E, D, F)),
+        "wd": L._normal(kd, (E, F, D)),
+    }
+
+
+def _route(p, cfg, x2d):
+    """Router logits/softmax in f32. x2d: [T, D] -> gates [T,K], idx [T,K],
+    plus aux losses."""
+    logits = (x2d.astype(jnp.float32) @ p["router"]["w"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                    # [T, E]
+    gates, idx = jax.lax.top_k(probs, cfg.experts_per_token)   # [T, K]
+    gates = gates / jnp.maximum(
+        jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+    # load-balance aux (Switch): E * Σ_e fraction_tokens(e)·mean_prob(e)
+    E = cfg.num_experts
+    onehot = jax.nn.one_hot(idx[:, 0], E)                      # top-1 counts
+    load = onehot.mean(0)
+    importance = probs.mean(0)
+    aux = E * jnp.sum(load * importance)
+    zloss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return gates, idx, (cfg.router_aux_weight * aux
+                        + cfg.router_z_weight * zloss)
+
+
+def _einsum_moe(p, cfg, xg, exact=False):
+    """xg: [G, Tg, D] grouped tokens.  exact=True sizes capacity for the
+    zero-drop worst case (serving: a decode step must be deterministic
+    and lossless; Tg is tiny there so C = Tg·K is cheap)."""
+    G, Tg, D = xg.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    Ep = _num_experts(cfg)                 # physical (maybe padded)
+    if exact:
+        C = Tg * K
+    else:
+        C = max(1, int(Tg * K / E * cfg.capacity_factor))
+    gates, idx, aux = jax.vmap(
+        lambda g: _route(p, cfg, g), in_axes=0)(xg)
+    dispatch = jnp.zeros((G, Tg, Ep, C), jnp.bfloat16)
+    combine = jnp.zeros((G, Tg, Ep, C), jnp.float32)
+    offset = jnp.zeros((G, Ep), jnp.int32)
+    for kk in range(K):
+        oh = jax.nn.one_hot(idx[..., kk], Ep, dtype=jnp.int32)  # [G,Tg,Ep]
+        pos = jnp.cumsum(oh, axis=1) - 1 + offset[:, None, :]
+        offset = offset + oh.sum(axis=1)
+        keep = (pos < C) & (oh > 0)
+        sel = jax.nn.one_hot(jnp.clip(pos, 0, C - 1), C,
+                             dtype=jnp.bfloat16)               # [G,Tg,E,C]
+        sel = sel * keep[..., None].astype(jnp.bfloat16) \
+            * oh[..., None].astype(jnp.bfloat16)
+        dispatch = dispatch + sel
+        combine = combine + sel.astype(jnp.float32) \
+            * gates[..., kk][..., None, None]
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch, xg.astype(jnp.bfloat16))
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe,
+                               p["wg"].astype(jnp.bfloat16)))
+    u = jnp.einsum("gecd,edf->gecf", xe, p["wu"].astype(jnp.bfloat16))
+    ye = jnp.einsum("gecf,efd->gecd", h * u, p["wd"].astype(jnp.bfloat16))
+    y = jnp.einsum("gtec,gecd->gtd", combine.astype(jnp.bfloat16), ye)
+    return y, jnp.mean(aux)
+
+
+def _sort_moe(p, cfg, x2d, exact=False):
+    """x2d: [T, D] — gather/scatter dispatch, no one-hot FLOPs."""
+    T, D = x2d.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    Ep = _num_experts(cfg)
+    C = T * K if exact else max(1, int(T * K / E * cfg.capacity_factor))
+    gates, idx, aux = _route(p, cfg, x2d)
+    flat_e = idx.reshape(-1)                        # [T*K] expert ids
+    flat_t = jnp.repeat(jnp.arange(T), K)           # token of each assignment
+    flat_g = gates.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    e_sorted = flat_e[order]
+    start = jnp.searchsorted(e_sorted, jnp.arange(Ep))
+    pos = jnp.arange(T * K) - start[e_sorted]       # rank within expert
+    keep = pos < C
+    slot = jnp.where(keep, e_sorted * C + pos, Ep * C)  # Ep*C = drop bin
+    xe_flat = jnp.zeros((Ep * C + 1, D), jnp.bfloat16).at[slot].set(
+        x2d[flat_t[order]].astype(jnp.bfloat16))
+    xe = xe_flat[:Ep * C].reshape(Ep, C, D)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe,
+                               p["wg"].astype(jnp.bfloat16)))
+    u = jnp.einsum("ecd,edf->ecf", xe, p["wu"].astype(jnp.bfloat16))
+    ye = jnp.einsum("ecf,efd->ecd", h * u,
+                    p["wd"].astype(jnp.bfloat16)).reshape(Ep * C, D)
+    contrib = ye[jnp.where(keep, slot, 0)] \
+        * (flat_g[order] * keep)[:, None].astype(jnp.bfloat16)
+    y = jnp.zeros((T, D), jnp.float32).at[flat_t[order]].add(
+        contrib.astype(jnp.float32))
+    return y.astype(x2d.dtype), aux
+
+
+def apply(p, cfg, x, exact=None):
+    """x: [B, S, D] -> (y, aux_loss).
+
+    exact defaults to True for single-token (decode) calls: serving must
+    be drop-free; training uses the capacity factor.
+    """
+    B, S, D = x.shape
+    T = B * S
+    if exact is None:
+        exact = S == 1
+    if cfg.moe_dispatch == "sort":
+        y, aux = _sort_moe(p, cfg, x.reshape(T, D), exact=exact)
+        return y.reshape(B, S, D), aux
+    g = max(1, T // GROUP_SIZE) if T >= GROUP_SIZE else 1
+    while T % g:
+        g -= 1
+    xg = x.reshape(g, T // g, D)
+    y, aux = _einsum_moe(p, cfg, xg, exact=exact)
+    return y.reshape(B, S, D).astype(x.dtype), aux

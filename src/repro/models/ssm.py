@@ -1,0 +1,146 @@
+"""Mamba selective-state-space block (for jamba) — TPU-adapted.
+
+The CUDA selective-scan kernel from the Mamba paper is a GPU-specific
+fused recurrence; on TPU the idiomatic equivalent is a first-order
+linear recurrence evaluated with ``jax.lax.associative_scan`` (log-depth,
+maps onto the VPU) for training/prefill, and a constant-time state
+update for decode.  See DESIGN.md §2 (hardware adaptation).
+
+State per layer: h [B, d_inner, d_state];  conv ring [B, cw-1, d_inner].
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def _dims(cfg):
+    di = cfg.ssm_expand * cfg.d_model
+    dt_rank = max(cfg.d_model // 16, 1)
+    return di, cfg.ssm_state_dim, dt_rank, cfg.ssm_conv_width
+
+
+def init(key, cfg):
+    D = cfg.d_model
+    di, ds, dtr, cw = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": L.linear_init(ks[0], D, 2 * di),
+        "conv_w": L._normal(ks[1], (cw, di), 0.1),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": L.linear_init(ks[2], di, dtr + 2 * ds),
+        "dt_proj": L.linear_init(ks[3], dtr, di, scale=dtr ** -0.5),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(
+                ks[4], (di,), minval=jnp.log(1e-3), maxval=jnp.log(1e-1))))),
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": L.linear_init(ks[5], di, D),
+    }
+
+
+def _ssm_inputs(p, cfg, u):
+    """u: [B, S', di] post-conv activations -> (dA, dBu, C)."""
+    di, ds, dtr, _ = _dims(cfg)
+    xdbc = L.linear(p["x_proj"], u).astype(jnp.float32)
+    dt, Bc, Cc = jnp.split(xdbc, [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(L.linear(p["dt_proj"], dt.astype(u.dtype)
+                                  ).astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])                               # [di, ds]
+    dA = jnp.exp(dt[..., None] * A)                        # [B,S,di,ds]
+    dBu = (dt * u.astype(jnp.float32))[..., None] * Bc[..., None, :]
+    return dA, dBu, Cc
+
+
+def _conv(p, cfg, x, state=None):
+    """Causal depthwise conv1d.  x: [B,S,di]; state: [B,cw-1,di] or None."""
+    cw = cfg.ssm_conv_width
+    if state is None:
+        pad = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                 # [B, S+cw-1, di]
+    out = sum(xp[:, i:i + x.shape[1]] * p["conv_w"][i].astype(x.dtype)
+              for i in range(cw))
+    out = out + p["conv_b"].astype(x.dtype)
+    new_state = xp[:, -(cw - 1):] if cw > 1 else pad
+    return out, new_state
+
+
+CHUNK = 128
+
+
+def forward(p, cfg, x):
+    """Training / prefill form — chunkwise scan.
+
+    The O(S·di·ds) scan elements are materialized one CHUNK at a time
+    (log-depth associative scan within a chunk, sequential recurrence
+    across chunks), bounding the transient workspace at
+    B·CHUNK·di·ds·4 bytes instead of B·S·di·ds.
+    x: [B, S, D] -> ([B, S, D], final_state) — the state comes for free
+    from the chunk recurrence, so prefill needs no recompute.
+    """
+    B, S, D = x.shape
+    xz = L.linear(p["in_proj"], x)
+    u, z = jnp.split(xz, 2, axis=-1)
+    u, conv_state = _conv(p, cfg, u)
+    u = jax.nn.silu(u)
+    pad = (-S) % CHUNK
+    if pad:
+        u_p = jnp.pad(u, ((0, 0), (0, pad), (0, 0)))
+    else:
+        u_p = u
+    nch = u_p.shape[1] // CHUNK
+    uc = u_p.reshape(B, nch, CHUNK, -1).transpose(1, 0, 2, 3)
+    valid = (jnp.arange(nch * CHUNK) < S).reshape(nch, 1, CHUNK)
+
+    def combine(a, b):
+        (a1, b1), (a2, b2) = a, b
+        return a1 * a2, a2 * b1 + b2
+
+    def chunk_step(h, xs):
+        u_chunk, vmask = xs
+        dA, dBu, Cc = _ssm_inputs(p, cfg, u_chunk)      # [B,L,di,ds]
+        # padded positions are identity steps so the carried state is
+        # exactly the state at position S
+        dA = jnp.where(vmask[..., None, None], dA, 1.0)
+        dBu = jnp.where(vmask[..., None, None], dBu, 0.0)
+        cumA, hs_local = jax.lax.associative_scan(
+            combine, (dA, dBu), axis=1)
+        hs = hs_local + cumA * h[:, None]               # [B,L,di,ds]
+        y = jnp.einsum("bsdn,bsn->bsd", hs, Cc)
+        y = y + u_chunk.astype(jnp.float32) * p["D"]
+        return hs[:, -1], y.astype(x.dtype)
+
+    h_last, ys = jax.lax.scan(chunk_step, init_state(cfg, B)["h"],
+                              (uc, valid))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, -1, u.shape[-1])[:, :S]
+    y = y * jax.nn.silu(z)
+    state = {"h": h_last, "conv": conv_state.astype(jnp.bfloat16)}
+    return L.linear(p["out_proj"], y), state
+
+
+def init_state(cfg, batch: int, dtype=jnp.float32):
+    di, ds, _, cw = _dims(cfg)
+    return {
+        "h": jnp.zeros((batch, di, ds), jnp.float32),
+        "conv": jnp.zeros((batch, cw - 1, di), dtype),
+    }
+
+
+def decode_step(p, cfg, x, state):
+    """x: [B, 1, D] -> (y [B,1,D], new_state).  O(1) per token."""
+    xz = L.linear(p["in_proj"], x)
+    u, z = jnp.split(xz, 2, axis=-1)
+    u, conv_state = _conv(p, cfg, u, state["conv"])
+    u = jax.nn.silu(u)
+    dA, dBu, Cc = _ssm_inputs(p, cfg, u)                   # S = 1
+    h = state["h"] * dA[:, 0] + dBu[:, 0]                  # [B, di, ds]
+    y = jnp.einsum("bdn,bn->bd", h, Cc[:, 0])[:, None]
+    y = y + u.astype(jnp.float32) * p["D"]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return L.linear(p["out_proj"], y), {"h": h, "conv": conv_state}

@@ -1,0 +1,270 @@
+"""Decoder-only stack assembly: scan over superblocks.
+
+A *superblock* is one repetition of ``cfg.block_pattern`` (dense archs:
+a single (attn, mlp) layer; jamba: 8 heterogeneous layers; xlstm: 8
+m/sLSTM blocks).  Parameters of each pattern position are stacked with a
+leading [num_superblocks] axis and the stack is driven by
+``jax.lax.scan`` — the lowered HLO contains each distinct layer body
+once, keeping 40-compile dry-runs tractable and matching how production
+JAX LLMs (MaxText et al.) scan layers.
+
+Modes:
+* ``forward``       — training forward, logits over the full sequence.
+* ``prefill``       — forward + returns the KV/state cache.
+* ``decode_step``   — one token, O(1)/O(window)/O(L_enc) per step.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, layers as L, moe, ssm, xlstm
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _block_init(key, cfg, mixer: str, ffn: str):
+    km, kf = jax.random.split(key)
+    p = {"norm1": L.rmsnorm_init(cfg.d_model)}
+    if mixer == "attn":
+        p["mixer"] = attention.init(km, cfg)
+    elif mixer == "mamba":
+        p["mixer"] = ssm.init(km, cfg)
+    elif mixer == "mlstm":
+        p["mixer"] = xlstm.mlstm_init(km, cfg)
+    elif mixer == "slstm":
+        p["mixer"] = xlstm.slstm_init(km, cfg)
+    else:
+        raise ValueError(mixer)
+    if ffn == "mlp":
+        p["norm2"] = L.rmsnorm_init(cfg.d_model)
+        p["ffn"] = L.mlp_init(kf, cfg.d_model, cfg.d_ff)
+    elif ffn == "moe":
+        p["norm2"] = L.rmsnorm_init(cfg.d_model)
+        p["ffn"] = moe.init(kf, cfg)
+    return p
+
+
+def init_params(key, cfg):
+    ks = jax.random.split(key, cfg.pattern_len + 3)
+    blocks = []
+    for i, (mixer, ffn) in enumerate(cfg.block_pattern):
+        stacked = jax.vmap(
+            lambda kk: _block_init(kk, cfg, mixer, ffn))(
+            jax.random.split(ks[i], cfg.num_superblocks))
+        blocks.append(stacked)
+    params = {
+        "embed": L.embed_init(ks[-3], cfg.padded_vocab, cfg.d_model),
+        "blocks": tuple(blocks),
+        "final_norm": L.rmsnorm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.linear_init(ks[-2], cfg.d_model,
+                                          cfg.padded_vocab)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward / prefill
+# ---------------------------------------------------------------------------
+
+def _apply_block(p, cfg, mixer, ffn, h, positions, *, window, use_flash,
+                 collect_cache):
+    """One pattern position on the full sequence."""
+    cache_out = None
+    hn = L.rms_norm(p["norm1"], h, cfg.norm_eps)
+    if mixer == "attn":
+        out, k, v = attention.full_attention(
+            p["mixer"], cfg, hn, positions, causal=True, window=window,
+            use_flash=use_flash, constrain_layout=collect_cache)
+        if collect_cache:
+            cache_out = {"k": k, "v": v}
+    elif mixer == "mamba":
+        out, state = ssm.forward(p["mixer"], cfg, hn)
+        if collect_cache:
+            cache_out = state
+    elif mixer == "mlstm":
+        out, state = xlstm.mlstm_forward(p["mixer"], cfg, hn)
+        if collect_cache:
+            cache_out = state
+    elif mixer == "slstm":
+        out, state = xlstm.slstm_forward(p["mixer"], cfg, hn)
+        if collect_cache:
+            cache_out = state
+    h = h + out
+    aux = jnp.float32(0)
+    if ffn == "mlp":
+        h = h + L.mlp(p["ffn"], L.rms_norm(p["norm2"], h, cfg.norm_eps))
+    elif ffn == "moe":
+        y, aux = moe.apply(p["ffn"], cfg,
+                           L.rms_norm(p["norm2"], h, cfg.norm_eps))
+        h = h + y
+    return h, aux, cache_out
+
+
+def _stack_forward(params, cfg, h, positions, *, window=0, use_flash=False,
+                   collect_cache=False):
+    """Scan superblocks.  Returns (h, aux_sum, caches or None)."""
+
+    def body(carry, xs):
+        hh, aux = carry
+        caches = []
+        for i, (mixer, ffn) in enumerate(cfg.block_pattern):
+            hh, a, c = _apply_block(
+                xs[i], cfg, mixer, ffn, hh, positions,
+                window=window, use_flash=use_flash,
+                collect_cache=collect_cache)
+            aux = aux + a
+            caches.append(c)
+        return (hh, aux), tuple(caches)
+
+    if cfg.remat and not collect_cache:
+        body = jax.checkpoint(body)
+    (h, aux), caches = jax.lax.scan(
+        body, (h, jnp.float32(0)), params["blocks"],
+        unroll=scan_unroll())
+    return h, aux, caches if collect_cache else None
+
+
+def scan_unroll():
+    """Dry-run hook: REPRO_SCAN_UNROLL=full unrolls layer scans so the
+    compiled HLO's cost analysis counts every layer (XLA counts a while
+    body once, which would hide ~all layer FLOPs from the roofline)."""
+    v = os.environ.get("REPRO_SCAN_UNROLL", "1")
+    if v == "full":
+        return True
+    return max(int(v), 1)
+
+
+def forward(params, cfg, tokens, prefix_embeds=None, use_flash=False):
+    """Training forward.  tokens: [B, St] -> logits [B, S, Vp], aux."""
+    h = L.embed(params["embed"], tokens)
+    if prefix_embeds is not None:
+        h = jnp.concatenate([prefix_embeds.astype(h.dtype), h], axis=1)
+    S = h.shape[1]
+    positions = jnp.arange(S)[None, :]
+    h, aux, _ = _stack_forward(params, cfg, h, positions,
+                               window=cfg.sliding_window,
+                               use_flash=use_flash)
+    h = L.rms_norm(params["final_norm"], h, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = L.unembed(params["embed"], h)
+    else:
+        logits = L.linear(params["lm_head"], h).astype(jnp.float32)
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, capacity: int, dtype=jnp.bfloat16,
+               filled: bool = True):
+    """Cache pytree matching the superblock structure.
+
+    capacity: KV slots for attention layers (ring if sliding window).
+    filled=True marks the cache as holding ``capacity`` live positions
+    (the dry-run decode shapes: "one new token against a cache of S").
+    """
+    nsb = cfg.num_superblocks
+
+    def stack(make):
+        return jax.tree.map(
+            lambda leaf: jnp.broadcast_to(leaf, (nsb,) + leaf.shape),
+            make())
+
+    caches = []
+    ln = jnp.full((batch,), capacity if filled else 0, jnp.int32)
+    for mixer, _ in cfg.block_pattern:
+        if mixer == "attn":
+            c = stack(lambda: attention.init_cache(cfg, batch, capacity,
+                                                   dtype))
+            c["len"] = jnp.broadcast_to(ln, (nsb, batch))
+        elif mixer == "mamba":
+            c = stack(lambda: ssm.init_state(cfg, batch, dtype))
+        elif mixer == "mlstm":
+            c = stack(lambda: xlstm.mlstm_init_state(cfg, batch))
+        elif mixer == "slstm":
+            c = stack(lambda: dict(zip(
+                ("h", "c", "n", "m"), xlstm.slstm_init_state(cfg, batch))))
+        caches.append(c)
+    return tuple(caches)
+
+
+def prefill(params, cfg, tokens, prefix_embeds=None, use_flash=False,
+            window=0):
+    """Full-sequence forward that also returns the serving cache."""
+    h = L.embed(params["embed"], tokens)
+    if prefix_embeds is not None:
+        h = jnp.concatenate([prefix_embeds.astype(h.dtype), h], axis=1)
+    S = h.shape[1]
+    positions = jnp.arange(S)[None, :]
+    h, aux, caches = _stack_forward(
+        params, cfg, h, positions, window=window or cfg.sliding_window,
+        use_flash=use_flash, collect_cache=True)
+    h = L.rms_norm(params["final_norm"], h, cfg.norm_eps)
+    last = h[:, -1:]
+    if cfg.tie_embeddings:
+        logits = L.unembed(params["embed"], last)
+    else:
+        logits = L.linear(params["lm_head"], last).astype(jnp.float32)
+    # normalize attn caches: add "len"
+    out_caches = []
+    for i, (mixer, _) in enumerate(cfg.block_pattern):
+        c = caches[i]
+        if mixer == "attn":
+            B = tokens.shape[0]
+            c = {"k": c["k"], "v": c["v"],
+                 "len": jnp.full((cfg.num_superblocks, B), S, jnp.int32)}
+        out_caches.append(c)
+    return logits[:, 0], aux, tuple(out_caches)
+
+
+def decode_step(params, cfg, caches, tokens, *, window=0):
+    """One-token decode.  tokens: [B, 1] -> (logits [B, Vp], new caches)."""
+    h = L.embed(params["embed"], tokens)
+
+    def body(carry, xs):
+        hh = carry
+        block_params, cache = xs
+        new_caches = []
+        for i, (mixer, ffn) in enumerate(cfg.block_pattern):
+            p = block_params[i]
+            hn = L.rms_norm(p["norm1"], hh, cfg.norm_eps)
+            if mixer == "attn":
+                out, nc = attention.decode_attention(
+                    p["mixer"], cfg, hn, cache[i], window=window)
+            elif mixer == "mamba":
+                out, nc = ssm.decode_step(p["mixer"], cfg, hn, cache[i])
+            elif mixer == "mlstm":
+                out, nc = xlstm.mlstm_decode(p["mixer"], cfg, hn, cache[i])
+            elif mixer == "slstm":
+                st = (cache[i]["h"], cache[i]["c"], cache[i]["n"],
+                      cache[i]["m"])
+                out, st = xlstm.slstm_decode(p["mixer"], cfg, hn, st)
+                nc = dict(zip(("h", "c", "n", "m"), st))
+            hh = hh + out
+            if ffn == "mlp":
+                hh = hh + L.mlp(p["ffn"],
+                                L.rms_norm(p["norm2"], hh, cfg.norm_eps))
+            elif ffn == "moe":
+                y, _ = moe.apply(p["ffn"], cfg,
+                                 L.rms_norm(p["norm2"], hh, cfg.norm_eps))
+                hh = hh + y
+            new_caches.append(nc)
+        return hh, tuple(new_caches)
+
+    h, new_caches = jax.lax.scan(body, h, (params["blocks"], caches),
+                                 unroll=scan_unroll())
+    h = L.rms_norm(params["final_norm"], h, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = L.unembed(params["embed"], h)
+    else:
+        logits = L.linear(params["lm_head"], h).astype(jnp.float32)
+    return logits[:, 0], new_caches

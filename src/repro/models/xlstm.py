@@ -1,0 +1,254 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+TPU adaptation (DESIGN.md §2): the xLSTM paper's CUDA kernels fuse the
+recurrence; here
+
+* mLSTM training/prefill uses the *chunkwise-parallel* form — dense
+  (stabilized) gate matrices within a chunk of 256 tokens (MXU
+  matmuls), recurrent (C, n, m) state across chunks, so the workspace
+  is O(B·H·L²) not O(B·H·S²); decode uses the O(1) recurrent update.
+* sLSTM is inherently sequential (recurrent R matrices): training uses
+  ``jax.lax.scan`` over time; decode is a single step.
+
+Shapes: d_model D, H heads, hd = D/H.
+mLSTM state: C [B,H,hd,hd], n [B,H,hd], m [B,H].
+sLSTM state: h,c,n [B,D], m [B,D].
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg):
+    D = cfg.d_model
+    di = 2 * D
+    ks = jax.random.split(key, 8)
+    return {
+        "up": L.linear_init(ks[0], D, 2 * di),       # [x_m, z-gate]
+        "wq": L.linear_init(ks[1], di, di),
+        "wk": L.linear_init(ks[2], di, di),
+        "wv": L.linear_init(ks[3], di, di),
+        "wi": L.linear_init(ks[4], di, cfg.num_heads, bias=True),
+        "wf": L.linear_init(ks[5], di, cfg.num_heads, bias=True),
+        "norm": L.rmsnorm_init(di),
+        "down": L.linear_init(ks[6], di, D),
+    }
+
+
+def _mlstm_qkv(p, cfg, xm):
+    B, S, di = xm.shape
+    H = cfg.num_heads
+    hd = di // H
+    q = L.linear(p["wq"], xm).reshape(B, S, H, hd)
+    k = L.linear(p["wk"], xm).reshape(B, S, H, hd) / jnp.sqrt(float(hd))
+    v = L.linear(p["wv"], xm).reshape(B, S, H, hd)
+    logi = L.linear(p["wi"], xm).astype(jnp.float32)        # [B,S,H]
+    logf = jax.nn.log_sigmoid(
+        L.linear(p["wf"], xm).astype(jnp.float32))          # [B,S,H]
+    return q, k, v, logi, logf
+
+
+MLSTM_CHUNK = 256
+
+
+def mlstm_forward(p, cfg, x):
+    """Chunkwise-parallel form (linear-attention style).
+
+    Within a chunk of L tokens the stabilized gate matrix
+    E_ts = exp(a_s - M_t), with a_s = i_s - F_s and
+    M_t = max(cummax(a)_t, m_prev), has entries <= 1 (overflow-free) and
+    the local cumulative forget F_t cancels out of every term except the
+    carried stabilizer m_new = F_L + M_L.  Across chunks the (C, n, m)
+    state is carried recurrently, so the workspace is O(B*H*L^2) instead
+    of O(B*H*S^2):
+
+      num_t = sum_{s<=t} E_ts (q_t.k_s) v_s + exp(m_prev - M_t) q_t C_prev
+      qn_t  = sum_{s<=t} E_ts (q_t.k_s)      + exp(m_prev - M_t) q_t.n_prev
+      h_t   = num_t / max(|qn_t|, exp(-(F_t + M_t)))
+      C_new = exp(m_prev - M_L) C_prev + sum_s exp(a_s - M_L) k_s v_s^T
+    """
+    B, S, D = x.shape
+    xz = L.linear(p["up"], x)
+    xm, z = jnp.split(xz, 2, axis=-1)
+    q, k, v, logi, logf = _mlstm_qkv(p, cfg, xm)
+    H, hd = q.shape[2], q.shape[3]
+    Lc = min(MLSTM_CHUNK, S)
+    pad = (-S) % Lc
+    if pad:
+        q, k, v = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                   for t in (q, k, v))
+        logi = jnp.pad(logi, ((0, 0), (0, pad), (0, 0)),
+                       constant_values=-1e30)
+        logf = jnp.pad(logf, ((0, 0), (0, pad), (0, 0)))
+    nch = (S + pad) // Lc
+
+    def chunks(t):
+        return t.reshape((B, nch, Lc) + t.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc = map(chunks, (q, k, v))               # [nch,B,L,H,hd]
+    lic, lfc = map(chunks, (logi, logf))              # [nch,B,L,H]
+    tril = jnp.tril(jnp.ones((Lc, Lc), bool))
+
+    def chunk_step(state, inputs):
+        C, n, m_prev = state                          # [B,H,hd,hd],[B,H,hd],[B,H]
+        qq, kk, vv, li, lf = inputs
+        F = jnp.cumsum(lf, axis=1)                    # [B,L,H]
+        a = li - F
+        M = jnp.maximum(jax.lax.associative_scan(jnp.maximum, a, axis=1),
+                        m_prev[:, None])              # [B,L,H]
+        E = jnp.exp(a[:, None] - M[:, :, None])       # [B,t,s,H]
+        E = jnp.where(tril[None, :, :, None], E, 0.0)
+        qk = jnp.einsum("bthd,bshd->btsh", qq, kk,
+                        preferred_element_type=jnp.float32)
+        intra = qk * E                                # [B,t,s,H]
+        carry = jnp.exp(jnp.minimum(m_prev[:, None] - M, 0.0))  # [B,L,H]
+        qf = qq.astype(jnp.float32)
+        num = (jnp.einsum("btsh,bshd->bthd", intra, vv.astype(jnp.float32))
+               + jnp.einsum("bthd,bhde->bthe", qf, C) * carry[..., None])
+        qn = (jnp.einsum("btsh->bth", intra)
+              + jnp.einsum("bthd,bhd->bth", qf, n) * carry)
+        floor = jnp.exp(jnp.minimum(-(F + M), 30.0))
+        h = num / jnp.maximum(jnp.abs(qn), floor)[..., None]
+        # ---- state update to chunk end -------------------------------
+        M_L, F_L = M[:, -1], F[:, -1]                 # [B,H]
+        w = jnp.exp(a - M_L[:, None])                 # [B,L,H] (<= 1)
+        kw = kk.astype(jnp.float32) * w[..., None]
+        C_new = (C * jnp.exp(jnp.minimum(m_prev - M_L, 0.0))[..., None, None]
+                 + jnp.einsum("bshd,bshe->bhde", kw, vv.astype(jnp.float32)))
+        n_new = (n * jnp.exp(jnp.minimum(m_prev - M_L, 0.0))[..., None]
+                 + jnp.sum(kw, axis=1))
+        m_new = F_L + M_L
+        return (C_new, n_new, m_new), h.astype(x.dtype)
+
+    state0 = (jnp.zeros((B, H, hd, hd), jnp.float32),
+              jnp.zeros((B, H, hd), jnp.float32),
+              jnp.full((B, H), -1e30, jnp.float32))
+    # padding is state-exact: padded logi = −1e30 (no input) and padded
+    # logf = 0 = log 1 (no forgetting).
+    (C, n, m), hs = jax.lax.scan(chunk_step, state0,
+                                 (qc, kc, vc, lic, lfc))
+    out = hs.swapaxes(0, 1).reshape(B, S + pad, H * hd)[:, :S]
+    out = L.rms_norm(p["norm"], out, cfg.norm_eps)
+    y = L.linear(p["down"], out * jax.nn.silu(z))
+    return y, {"C": C, "n": n, "m": m}
+
+
+def mlstm_init_state(cfg, batch: int):
+    di = 2 * cfg.d_model
+    H = cfg.num_heads
+    hd = di // H
+    return {
+        "C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, H, hd), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+    }
+
+
+def mlstm_decode(p, cfg, x, state):
+    """x: [B, 1, D] -> (y, new_state) — O(1) per token."""
+    xz = L.linear(p["up"], x)
+    xm, z = jnp.split(xz, 2, axis=-1)
+    q, k, v, logi, logf = _mlstm_qkv(p, cfg, xm)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]                     # [B,H,hd]
+    logi, logf = logi[:, 0], logf[:, 0]                     # [B,H]
+    m_new = jnp.maximum(logf + state["m"], logi)
+    fg = jnp.exp(logf + state["m"] - m_new)[..., None]
+    ig = jnp.exp(logi - m_new)[..., None]
+    C = state["C"] * fg[..., None] + ig[..., None] \
+        * (k[..., :, None] * v[..., None, :]).astype(jnp.float32)
+    n = state["n"] * fg + ig * k.astype(jnp.float32)
+    num = jnp.einsum("bhkv,bhk->bhv", C, q.astype(jnp.float32))
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n,
+                                         q.astype(jnp.float32))),
+                      jnp.exp(-m_new))
+    y = (num / den[..., None]).reshape(x.shape[0], 1, -1).astype(x.dtype)
+    y = L.rms_norm(p["norm"], y, cfg.norm_eps)
+    out = L.linear(p["down"], y * jax.nn.silu(z))
+    return out, {"C": C, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg):
+    D = cfg.d_model
+    H = cfg.num_heads
+    hd = D // H
+    ks = jax.random.split(key, 7)
+    return {
+        "wx": L.linear_init(ks[0], D, 4 * D, bias=True),   # i,f,z,o from x
+        "r": L._normal(ks[1], (4, H, hd, hd), 0.02),       # recurrent, blockdiag
+        "norm": L.rmsnorm_init(D),
+        "up": L.linear_init(ks[2], D, 2 * ((4 * D) // 3)),
+        "down": L.linear_init(ks[3], (4 * D) // 3, D),
+    }
+
+
+def _slstm_step(p, cfg, xt, state):
+    """xt: [B, 4D] pre-activations from x; state: (h,c,n,m) [B,D] each."""
+    h, c, n, m = state
+    B, D = h.shape
+    H = cfg.num_heads
+    hd = D // H
+    hh = h.reshape(B, H, hd)
+    rec = jnp.einsum("bhd,ghde->gbhe", hh.astype(jnp.float32),
+                     p["r"].astype(jnp.float32)).reshape(4, B, D)
+    pre = xt.astype(jnp.float32).reshape(B, 4, D).transpose(1, 0, 2) + rec
+    li, lf, z, o = pre[0], pre[1], jnp.tanh(pre[2]), jax.nn.sigmoid(pre[3])
+    lf = jax.nn.log_sigmoid(lf)
+    m_new = jnp.maximum(lf + m, li)
+    ig = jnp.exp(li - m_new)
+    fg = jnp.exp(lf + m - m_new)
+    c_new = fg * c + ig * z
+    n_new = fg * n + ig
+    h_new = o * (c_new / jnp.maximum(n_new, 1e-6))
+    return (h_new, c_new, n_new, m_new)
+
+
+def slstm_forward(p, cfg, x):
+    """x: [B, S, D] — recurrent scan over time."""
+    B, S, D = x.shape
+    xg = L.linear(p["wx"], x)                               # [B,S,4D]
+    state0 = tuple(jnp.zeros((B, D), jnp.float32) for _ in range(3)) \
+        + (jnp.full((B, D), -1e30, jnp.float32),)
+    state0 = (state0[0], state0[1], state0[2], state0[3])
+
+    def step(st, xt):
+        st = _slstm_step(p, cfg, xt, st)
+        return st, st[0]
+
+    state, hs = jax.lax.scan(step, state0, xg.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2).astype(x.dtype)               # [B,S,D]
+    y = L.rms_norm(p["norm"], y, cfg.norm_eps)
+    gu = L.linear(p["up"], y)
+    g, u = jnp.split(gu, 2, axis=-1)
+    out = L.linear(p["down"], jax.nn.gelu(g) * u)
+    return out, dict(zip(("h", "c", "n", "m"), state))
+
+
+def slstm_init_state(cfg, batch: int):
+    D = cfg.d_model
+    return (jnp.zeros((batch, D), jnp.float32),
+            jnp.zeros((batch, D), jnp.float32),
+            jnp.zeros((batch, D), jnp.float32),
+            jnp.full((batch, D), -1e30, jnp.float32))
+
+
+def slstm_decode(p, cfg, x, state):
+    """x: [B, 1, D] -> (y, new_state)."""
+    xg = L.linear(p["wx"], x)[:, 0]
+    state = _slstm_step(p, cfg, xg, state)
+    y = state[0][:, None].astype(x.dtype)
+    y = L.rms_norm(p["norm"], y, cfg.norm_eps)
+    gu = L.linear(p["up"], y)
+    g, u = jnp.split(gu, 2, axis=-1)
+    return L.linear(p["down"], jax.nn.gelu(g) * u), state

@@ -1,0 +1,9 @@
+"""Optimizers (hand-built — optax is not available offline)."""
+
+from repro.optim.adamw import (adamw_init, adamw_update, sgd_init,
+                               sgd_update, clip_by_global_norm,
+                               cosine_schedule, linear_warmup_cosine)
+
+__all__ = ["adamw_init", "adamw_update", "sgd_init", "sgd_update",
+           "clip_by_global_norm", "cosine_schedule",
+           "linear_warmup_cosine"]

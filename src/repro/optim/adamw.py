@@ -1,0 +1,105 @@
+"""AdamW and SGD over arbitrary pytrees, plus schedules and clipping.
+
+State layout matches production frameworks: first/second moments in
+f32 with the same sharding as the parameters (the dry-run memory
+analysis accounts for them).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gn
+
+
+def cosine_schedule(step, base_lr: float, total_steps: int,
+                    final_frac: float = 0.1):
+    t = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+    return base_lr * (final_frac + (1 - final_frac)
+                      * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+
+
+def linear_warmup_cosine(step, base_lr: float, warmup: int,
+                         total_steps: int, final_frac: float = 0.1):
+    warm = base_lr * jnp.minimum(step / max(warmup, 1), 1.0)
+    cos = cosine_schedule(jnp.maximum(step - warmup, 0), base_lr,
+                          max(total_steps - warmup, 1), final_frac)
+    return jnp.where(step < warmup, warm, cos)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+    }
+
+
+def adamw_update(params, grads, state, *, lr, b1: float = 0.9,
+                 b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1):
+    step = state["step"] + 1
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / bc1
+        vh = v / bc2
+        delta = mh / (jnp.sqrt(vh) + eps) + weight_decay \
+            * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v
+           in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"step": step, "m": new_m, "v": new_v}
+
+
+# ---------------------------------------------------------------------------
+# SGD + momentum
+# ---------------------------------------------------------------------------
+
+def sgd_init(params):
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "mom": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                            params),
+    }
+
+
+def sgd_update(params, grads, state, *, lr, momentum: float = 0.9,
+               weight_decay: float = 0.0):
+    step = state["step"] + 1
+
+    def upd(p, g, m):
+        g = g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
+        m = momentum * m + g
+        return (p.astype(jnp.float32) - lr * m).astype(p.dtype), m
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["mom"])
+    out = [upd(p, g, m) for p, g, m in zip(flat_p, flat_g, flat_m)]
+    return (treedef.unflatten([o[0] for o in out]),
+            {"step": step, "mom": treedef.unflatten([o[1] for o in out])})

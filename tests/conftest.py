@@ -1,0 +1,16 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS device-count override here —
+smoke tests and benches must see the host's real (1) device; only
+launch/dryrun.py sets the 512-device override, in its own process.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,47 @@
+"""Finite-class extension (paper §6): exact agnostic ERM, no OPT promise."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import finite, tasks, weak
+
+
+def test_finite_class_exact_and_opt_free():
+    n = 256
+    cls = weak.Thresholds(n=n)
+    # the finite class: thresholds on a coarse grid, both signs
+    grid = jnp.asarray([[2.0, t, t, s] for t in range(0, n, 8)
+                        for s in (1.0, -1.0)], jnp.float32)
+    rng = np.random.default_rng(0)
+    for noise in (0, 50, 400):           # NO promise: huge OPT is fine
+        x = rng.integers(0, n, 2048).astype(np.int32)
+        y = np.where(x >= 96, 1, -1).astype(np.int8)
+        flip = rng.choice(2048, size=noise, replace=False)
+        y[flip] = -y[flip]
+        xk = jnp.asarray(x.reshape(4, -1))
+        yk = jnp.asarray(y.reshape(4, -1))
+        res = finite.learn_finite(xk, yk, grid, cls)
+        # exact ERM over the finite class
+        preds = cls.predict(grid, jnp.asarray(x))
+        brute = int(jnp.min(jnp.sum(preds != jnp.asarray(y)[None], -1)))
+        assert res.errors == brute
+        # communication independent of OPT
+        assert res.total_bits == finite.learn_finite(
+            xk, yk, grid, cls).total_bits
+
+
+def test_finite_bits_scale_with_class_not_opt():
+    n = 256
+    cls = weak.Thresholds(n=n)
+    rng = np.random.default_rng(1)
+    x = rng.integers(0, n, 1024).astype(np.int32)
+    y = np.where(x >= 100, 1, -1).astype(np.int8)
+    xk, yk = jnp.asarray(x.reshape(4, -1)), jnp.asarray(y.reshape(4, -1))
+    small = jnp.asarray([[2.0, t, t, 1.0] for t in range(0, n, 32)],
+                        jnp.float32)
+    big = jnp.asarray([[2.0, t, t, 1.0] for t in range(0, n, 2)],
+                      jnp.float32)
+    bs = finite.learn_finite(xk, yk, small, cls).total_bits
+    bb = finite.learn_finite(xk, yk, big, cls).total_bits
+    assert bb > bs
+    assert bb / bs <= (big.shape[0] / small.shape[0]) + 1

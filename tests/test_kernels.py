@@ -1,0 +1,115 @@
+"""Per-kernel shape/dtype sweeps, interpret=True, against ref.py oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import ops as flash_ops
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.mw_update import ops as mw_ops
+from repro.kernels.mw_update.ref import mw_update_ref
+from repro.kernels.stump import ops as stump_ops
+from repro.kernels.stump.ref import stump_errors_ref
+
+
+@pytest.mark.parametrize("m", [64, 1000, 8192, 16384])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_mw_update_sweep(m, seed):
+    rng = np.random.default_rng(seed)
+    hits = jnp.asarray(rng.integers(0, 60, m), jnp.int32)
+    correct = jnp.asarray(rng.random(m) < 0.5)
+    alive = jnp.asarray(rng.random(m) < 0.85)
+    new_hits, wsum = mw_ops.mw_update(hits, correct, alive)
+    ref_hits = hits + jnp.where(correct & alive, 1, 0)
+    ref_w = jnp.sum(jnp.where(alive,
+                              jnp.exp2(-ref_hits.astype(jnp.float32)), 0.0))
+    np.testing.assert_array_equal(np.asarray(new_hits),
+                                  np.asarray(ref_hits))
+    np.testing.assert_allclose(float(wsum), float(ref_w), rtol=1e-5)
+
+
+def test_mw_update_block_partials():
+    m, block = 512, 128
+    rng = np.random.default_rng(2)
+    hits = jnp.asarray(rng.integers(0, 20, m), jnp.int32)
+    correct = jnp.asarray(rng.random(m) < 0.5)
+    alive = jnp.ones(m, bool)
+    from repro.kernels.mw_update import kernel as K
+    nh, parts = K.mw_update_pallas(hits, correct, alive,
+                                   interpret=True, block=block)
+    rh, rp = mw_update_ref(hits, correct, alive, block)
+    np.testing.assert_array_equal(np.asarray(nh), np.asarray(rh))
+    np.testing.assert_allclose(np.asarray(parts), np.asarray(rp),
+                               rtol=1e-6)
+
+
+@pytest.mark.parametrize("c,F,Q", [(32, 1, 8), (128, 8, 128),
+                                   (257, 9, 130), (512, 16, 256)])
+def test_stump_sweep(c, F, Q):
+    rng = np.random.default_rng(c + F + Q)
+    x = jnp.asarray(rng.standard_normal((c, F)) * 10, jnp.float32)
+    w = rng.random(c).astype(np.float32)
+    w = jnp.asarray(w / w.sum())
+    y = jnp.asarray(rng.choice([-1.0, 1.0], c), jnp.float32)
+    th = jnp.asarray(np.sort(rng.standard_normal((F, Q)) * 10, axis=1),
+                     jnp.float32)
+    got = stump_ops.stump_errors(x, w, y, th)
+    ref = stump_errors_ref(x, w, y, th)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=3e-5, atol=3e-6)
+    assert got.shape == (F, Q, 2)
+
+
+@pytest.mark.parametrize("B,S,H,KV,hd", [
+    (1, 64, 4, 2, 32), (2, 128, 8, 8, 64), (1, 200, 4, 1, 16),
+    (1, 256, 2, 2, 128),
+])
+@pytest.mark.parametrize("window", [0, 48])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, S, H, KV, hd, window, dtype):
+    rng = np.random.default_rng(S + H + window)
+    q = jnp.asarray(rng.standard_normal((B, S, H, hd)), dtype)
+    k = jnp.asarray(rng.standard_normal((B, S, KV, hd)), dtype)
+    v = jnp.asarray(rng.standard_normal((B, S, KV, hd)), dtype)
+    got = flash_ops.flash_attention(q, k, v, causal=True, window=window)
+    ref = flash_attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=True,
+        window=window).transpose(0, 2, 1, 3)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_matches_model_attention_path():
+    """models/attention full_attention(use_flash=True) == einsum path."""
+    from repro.configs import base
+    from repro.models import attention
+    cfg = base.reduced(base.get_config("deepseek-7b"))
+    key = jax.random.key(0)
+    p = attention.init(key, cfg)
+    x = jax.random.normal(jax.random.key(1), (2, 64, cfg.d_model),
+                          jnp.float32)
+    pos = jnp.arange(64)[None]
+    out_ein, _, _ = attention.full_attention(p, cfg, x, pos, causal=True)
+    out_fl, _, _ = attention.full_attention(p, cfg, x, pos, causal=True,
+                                            use_flash=True)
+    np.testing.assert_allclose(np.asarray(out_ein, np.float32),
+                               np.asarray(out_fl, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_vmem_budget_static():
+    """BlockSpec working sets fit v5e VMEM (static check)."""
+    from repro.kernels.flash_attention import kernel as FK
+    from repro.kernels.mw_update import kernel as MK
+    from repro.kernels.stump import kernel as SK
+    vmem = 16 * 2 ** 20
+    bq, bk, hd = FK.DEFAULT_BQ, FK.DEFAULT_BK, 256
+    flash = (bq * hd + 2 * bk * hd + bq * bk + bq * hd + 2 * bq) * 4
+    assert flash < vmem // 4
+    assert MK.BLOCK * 4 * 4 < vmem // 4
+    bc, bf, bqq = SK.BC, SK.BF, SK.BQ
+    assert (bc * bf + bf * bqq + bc * bf * bqq) * 4 < vmem // 4

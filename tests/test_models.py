@@ -1,0 +1,235 @@
+"""Model-internals correctness: chunkwise forms vs naive references,
+MoE dispatch equivalence, SWA masking, attention cache ring."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import base
+from repro.models import attention, layers as L, moe, ssm, xlstm
+
+
+def _cfg(**kw):
+    return dataclasses.replace(
+        base.reduced(base.get_config("deepseek-7b")), **kw)
+
+
+# ---------------------------------------------------------------------------
+# Mamba: chunkwise scan == naive sequential recurrence
+# ---------------------------------------------------------------------------
+
+def test_mamba_chunkwise_matches_sequential():
+    cfg = dataclasses.replace(
+        base.reduced(base.get_config("jamba-v0.1-52b")), num_layers=8)
+    p = ssm.init(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (2, ssm.CHUNK + 37,
+                                              cfg.d_model), jnp.float32)
+    y_chunk, state = ssm.forward(p, cfg, x)
+    # naive: token-by-token decode over the same inputs
+    st = ssm.init_state(cfg, 2)
+    ys = []
+    for t in range(x.shape[1]):
+        yt, st = ssm.decode_step(p, cfg, x[:, t:t + 1], st)
+        ys.append(yt)
+    y_seq = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk, np.float32),
+                               np.asarray(y_seq, np.float32),
+                               rtol=2e-2, atol=2e-2)
+    # carried state matches too
+    np.testing.assert_allclose(np.asarray(state["h"]),
+                               np.asarray(st["h"]), rtol=2e-2, atol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM: chunkwise parallel == stepwise recurrent decode
+# ---------------------------------------------------------------------------
+
+def test_mlstm_chunkwise_matches_recurrent():
+    cfg = base.reduced(base.get_config("xlstm-1.3b"))
+    p = xlstm.mlstm_init(jax.random.key(0), cfg)
+    S = xlstm.MLSTM_CHUNK // 2 + 13        # forces padding path too
+    x = jax.random.normal(jax.random.key(1), (2, S, cfg.d_model),
+                          jnp.float32) * 0.5
+    y_par, state = xlstm.mlstm_forward(p, cfg, x)
+    st = xlstm.mlstm_init_state(cfg, 2)
+    ys = []
+    for t in range(S):
+        yt, st = xlstm.mlstm_decode(p, cfg, x[:, t:t + 1], st)
+        ys.append(yt)
+    y_seq = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_par, np.float32),
+                               np.asarray(y_seq, np.float32),
+                               rtol=3e-2, atol=3e-2)
+    np.testing.assert_allclose(np.asarray(state["m"]),
+                               np.asarray(st["m"]), rtol=1e-3, atol=1e-3)
+
+
+def test_mlstm_multichunk_state_carry():
+    cfg = base.reduced(base.get_config("xlstm-1.3b"))
+    p = xlstm.mlstm_init(jax.random.key(0), cfg)
+    S = xlstm.MLSTM_CHUNK * 2 + 5          # 3 chunks
+    x = jax.random.normal(jax.random.key(2), (1, S, cfg.d_model),
+                          jnp.float32) * 0.5
+    y_par, _ = xlstm.mlstm_forward(p, cfg, x)
+    st = xlstm.mlstm_init_state(cfg, 1)
+    ys = []
+    for t in range(S):
+        yt, st = xlstm.mlstm_decode(p, cfg, x[:, t:t + 1], st)
+        ys.append(yt)
+    y_seq = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_par, np.float32),
+                               np.asarray(y_seq, np.float32),
+                               rtol=4e-2, atol=4e-2)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM scan == stepwise
+# ---------------------------------------------------------------------------
+
+def test_slstm_scan_matches_decode():
+    cfg = base.reduced(base.get_config("xlstm-1.3b"))
+    p = xlstm.slstm_init(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (2, 19, cfg.d_model),
+                          jnp.float32) * 0.5
+    y_scan, state = xlstm.slstm_forward(p, cfg, x)
+    st = xlstm.slstm_init_state(cfg, 2)
+    ys = []
+    for t in range(x.shape[1]):
+        yt, st = xlstm.slstm_decode(p, cfg, x[:, t:t + 1], st)
+        ys.append(yt)
+    y_seq = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_scan, np.float32),
+                               np.asarray(y_seq, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# MoE: einsum dispatch == sort dispatch (generous capacity)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["phi3.5-moe-42b-a6.6b",
+                                  "granite-moe-3b-a800m"])
+def test_moe_dispatch_equivalence(arch):
+    cfg = dataclasses.replace(base.reduced(base.get_config(arch)),
+                              capacity_factor=8.0)
+    p = moe.init(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (2, 16, cfg.d_model),
+                          jnp.bfloat16)
+    y_e, aux_e = moe.apply(p, cfg, x, exact=True)
+    cfg_s = dataclasses.replace(cfg, moe_dispatch="sort")
+    y_s, aux_s = moe.apply(p, cfg_s, cfg_s and x, exact=True)
+    np.testing.assert_allclose(np.asarray(y_e, np.float32),
+                               np.asarray(y_s, np.float32),
+                               rtol=5e-2, atol=5e-2)
+    np.testing.assert_allclose(float(aux_e), float(aux_s), rtol=1e-3)
+
+
+def test_moe_aux_loss_decreases_with_balance():
+    """Uniform router probs ⇒ aux ≈ weight·1 (+ z term); peaked ⇒ larger."""
+    cfg = base.reduced(base.get_config("phi3.5-moe-42b-a6.6b"))
+    E = cfg.num_experts
+    x = jax.random.normal(jax.random.key(0), (64, cfg.d_model))
+    p = moe.init(jax.random.key(1), cfg)
+    # balanced: tiny router weights -> near-uniform
+    p_bal = dict(p, router={"w": p["router"]["w"] * 0.0})
+    _, _, aux_bal = moe._route(p_bal, cfg, x)
+    p_peak = dict(p, router={"w": p["router"]["w"] * 0 +
+                             jnp.eye(cfg.d_model, E) * 50})
+    _, _, aux_peak = moe._route(p_peak, cfg, x)
+    assert float(aux_peak) > float(aux_bal)
+
+
+# ---------------------------------------------------------------------------
+# Attention: sliding-window mask + ring cache decode
+# ---------------------------------------------------------------------------
+
+def test_swa_training_mask_matches_window_definition():
+    S, W = 16, 5
+    m = attention.causal_mask(S, S, window=W)
+    for i in range(S):
+        for j in range(S):
+            expect = (j <= i) and (j > i - W)
+            assert bool(m[i, j]) == expect
+
+
+def test_ring_cache_decode_matches_full_swa():
+    """Decode with a ring cache of size=window equals full-cache SWA."""
+    cfg = _cfg(sliding_window=0)
+    p = attention.init(jax.random.key(0), cfg)
+    B, S, W = 1, 24, 8
+    x = jax.random.normal(jax.random.key(1), (B, S + 1, cfg.d_model),
+                          jnp.float32) * 0.3
+    pos = jnp.arange(S + 1)[None]
+    # reference: full-sequence SWA forward, last position output
+    ref, _, _ = attention.full_attention(p, cfg, x, pos, causal=True,
+                                         window=W)
+    # decode path: feed x[:-1] into a ring cache of capacity W, then
+    # decode position S
+    cache = attention.init_cache(cfg, B, W, dtype=jnp.float32)
+    for t in range(S):
+        _, cache = attention.decode_attention(p, cfg, x[:, t:t + 1],
+                                              cache, window=W)
+    got, _ = attention.decode_attention(p, cfg, x[:, S:S + 1], cache,
+                                        window=W)
+    np.testing.assert_allclose(np.asarray(got[:, 0], np.float32),
+                               np.asarray(ref[:, -1], np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_qk_norm_applied():
+    cfg = dataclasses.replace(_cfg(), qk_norm=True)
+    p = attention.init(jax.random.key(0), cfg)
+    assert "q_norm" in p and "k_norm" in p
+    x = jax.random.normal(jax.random.key(1), (1, 8, cfg.d_model))
+    out, _, _ = attention.full_attention(p, cfg, x, jnp.arange(8)[None],
+                                         causal=True)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_rope_rotation_property():
+    """RoPE preserves norms and relative-position inner products."""
+    x = jax.random.normal(jax.random.key(0), (1, 6, 2, 64), jnp.float32)
+    pos = jnp.arange(6)[None]
+    r = L.rope(x, pos, theta=10_000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(r), axis=-1), rtol=1e-4)
+    # relative property: <R(p)q, R(p+d)k> independent of p
+    q = jax.random.normal(jax.random.key(1), (1, 1, 1, 64))
+    k = jax.random.normal(jax.random.key(2), (1, 1, 1, 64))
+    dots = []
+    for p0 in (0, 3, 11):
+        rq = L.rope(q, jnp.asarray([[p0]]), 1e4)
+        rk = L.rope(k, jnp.asarray([[p0 + 4]]), 1e4)
+        dots.append(float(jnp.sum(rq * rk)))
+    np.testing.assert_allclose(dots[0], dots[1], rtol=1e-4)
+    np.testing.assert_allclose(dots[0], dots[2], rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Causality property: future tokens never affect past logits
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["deepseek-7b", "jamba-v0.1-52b",
+                                  "xlstm-1.3b", "phi3.5-moe-42b-a6.6b"])
+def test_causality_property(arch):
+    """logits[:, :t] are invariant to any change in tokens[:, t:] —
+    holds for attention, Mamba, m/sLSTM and MoE mixers alike (MoE needs
+    drop-free capacity, otherwise cross-token capacity contention leaks
+    batch statistics, which is expected and documented)."""
+    from repro.models import transformer
+    cfg = dataclasses.replace(base.reduced(base.get_config(arch)),
+                              capacity_factor=8.0)
+    params = transformer.init_params(jax.random.key(0), cfg)
+    toks = jax.random.randint(jax.random.key(1), (1, 24), 0,
+                              cfg.vocab_size)
+    t = 11
+    toks2 = toks.at[:, t:].set((toks[:, t:] + 7) % cfg.vocab_size)
+    la, _ = transformer.forward(params, cfg, toks)
+    lb, _ = transformer.forward(params, cfg, toks2)
+    np.testing.assert_allclose(np.asarray(la[:, :t], np.float32),
+                               np.asarray(lb[:, :t], np.float32),
+                               rtol=3e-3, atol=3e-3)

@@ -1,0 +1,131 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ledger, weak, weights
+from repro.core.types import BoostConfig, Ledger
+
+N = 1 << 10
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(8, 200),
+       st.integers(0, 30))
+def test_mw_normalization(seed, m, hmax):
+    """p_t is a probability distribution supported on alive examples."""
+    rng = np.random.default_rng(seed)
+    hits = jnp.asarray(rng.integers(0, hmax + 1, m), jnp.int32)
+    alive = jnp.asarray(rng.random(m) < 0.7)
+    if not bool(jnp.any(alive)):
+        return
+    p = weights.probs(hits, alive)
+    np.testing.assert_allclose(float(jnp.sum(p)), 1.0, rtol=1e-4)
+    assert float(jnp.min(p)) >= 0.0
+    assert float(jnp.max(jnp.where(alive, 0.0, p))) == 0.0
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(4, 128))
+def test_mixture_weights_simplex(seed, k):
+    rng = np.random.default_rng(seed)
+    lw = jnp.asarray(rng.uniform(-60, 10, k), jnp.float32)
+    dead = rng.random(k) < 0.2
+    lw = jnp.where(jnp.asarray(dead), -jnp.inf, lw)
+    if dead.all():
+        return
+    mix = weights.mixture_weights(lw)
+    np.testing.assert_allclose(float(jnp.sum(mix)), 1.0, rtol=1e-5)
+    assert float(jnp.max(jnp.where(jnp.asarray(dead), mix, 0.0))) == 0.0
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(8, 96),
+       st.sampled_from(["thresholds", "intervals", "singletons"]))
+def test_erm_never_beaten_by_random_hypotheses(seed, m, clsname):
+    """ERM loss ≤ loss of any sampled hypothesis (optimality property)."""
+    cls = weak.make_class(clsname, n=N)
+    rng = np.random.default_rng(seed)
+    xs = jnp.asarray(rng.integers(0, N, m), jnp.int32)
+    ys = jnp.asarray(rng.choice([-1, 1], m), jnp.int8)
+    w = rng.random(m).astype(np.float32)
+    w = jnp.asarray(w / w.sum())
+    _, best = cls.erm(xs, ys, w)
+    type_id = {"singletons": 1.0, "thresholds": 2.0, "intervals": 3.0}
+    for _ in range(20):
+        a, b = sorted(rng.integers(0, N, 2).tolist())
+        s = float(rng.choice([-1.0, 1.0]))
+        if clsname != "thresholds":
+            s = 1.0
+        params = jnp.asarray([type_id[clsname], a, b if clsname ==
+                              "intervals" else a, s], jnp.float32)
+        loss = float(jnp.sum((cls.predict(params, xs) != ys) * w))
+        assert float(best) <= loss + 1e-5
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 8),
+       st.integers(16, 64))
+def test_observation_4_4(seed, flips, m_half):
+    """Removing a non-realizable subsample lowers EVERY hypothesis'
+    error by ≥ 1 (thresholds over a line)."""
+    cls = weak.Thresholds(n=N)
+    rng = np.random.default_rng(seed)
+    m = 2 * m_half
+    x = rng.integers(0, N, m).astype(np.int32)
+    y = np.where(x >= N // 2, 1, -1).astype(np.int8)
+    # build a non-realizable subsample: a contradicting pair
+    x[0], y[0] = 5, 1
+    x[1], y[1] = 5, -1
+    sub = np.zeros(m, bool)
+    sub[:2] = True
+    grid = jnp.asarray([[2.0, t, t, s] for t in range(0, N, 97)
+                        for s in (1.0, -1.0)], jnp.float32)
+    preds = cls.predict(grid, jnp.asarray(x))             # [C, m]
+    errs_full = jnp.sum(preds != jnp.asarray(y)[None], axis=-1)
+    errs_rest = jnp.sum(
+        (preds != jnp.asarray(y)[None]) & ~jnp.asarray(sub)[None], axis=-1)
+    assert bool(jnp.all(errs_full >= errs_rest + 1))
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 64), st.integers(2, 20), st.integers(100, 10 ** 7),
+       st.integers(64, 2048))
+def test_ledger_monotonicity(k, rounds, m, coreset):
+    """More rounds / players / examples never decrease charged bits,
+    and the Ledger add is consistent."""
+    cls = weak.Thresholds(n=N)
+    cfg = BoostConfig(k=k, coreset_size=coreset, domain_size=N)
+    a = ledger.boost_attempt_ledger(cfg, cls, m, rounds, stuck=False)
+    b = ledger.boost_attempt_ledger(cfg, cls, m, rounds + 1, stuck=False)
+    assert b.total_bits >= a.total_bits
+    s = a + b
+    assert s.total_bits == a.total_bits + b.total_bits
+    assert s.attempts == 2
+    c2 = BoostConfig(k=k + 1, coreset_size=coreset, domain_size=N)
+    assert ledger.boost_attempt_ledger(
+        c2, cls, m, rounds, stuck=False).total_bits >= a.total_bits
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(50, 400))
+def test_quantile_coreset_range_property(seed, c):
+    """Weighted quantile coreset approximates every threshold event
+    within 2/c."""
+    from repro.core import approximation
+    rng = np.random.default_rng(seed)
+    m = 512
+    x = jnp.asarray(rng.integers(0, N, m), jnp.int32)
+    y = jnp.asarray(rng.choice([-1, 1], m), jnp.int8)
+    hits = jnp.asarray(rng.integers(0, 10, m), jnp.int32)
+    alive = jnp.ones(m, bool)
+    idx = approximation.quantile_coreset(x, y, hits, alive, c)
+    p = weights.probs(hits, alive)
+    for t in rng.integers(0, N, 10):
+        for s in (1, -1):
+            true_mass = float(jnp.sum(
+                jnp.where((x >= t) & (y == s), p, 0.0)))
+            core_mass = float(jnp.mean((x[idx] >= t) & (y[idx] == s)))
+            assert abs(true_mass - core_mass) <= 4.0 / c + 1e-6

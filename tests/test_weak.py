@@ -1,0 +1,103 @@
+"""Exactness of the center's weighted ERM for every hypothesis class.
+
+The stuck/not-stuck certificate (Observation 4.3) requires the ERM to be
+EXACT over the class restricted to the coreset — we verify against brute
+force over all behaviours.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import weak
+
+N = 1 << 10
+
+
+def brute_force_best(cls, xs, ys, w):
+    """Exhaustive ERM over a dense hypothesis grid."""
+    if isinstance(cls, weak.Singletons):
+        cands = [np.array([1.0, a, a, 1.0], np.float32) for a in range(N)]
+    elif isinstance(cls, weak.Thresholds):
+        cands = [np.array([2.0, t, t, s], np.float32)
+                 for t in range(N + 1) for s in (1.0, -1.0)]
+    elif isinstance(cls, weak.Intervals):
+        pts = sorted(set(np.asarray(xs).tolist()))
+        cands = [np.array([3.0, a, b, 1.0], np.float32)
+                 for a in pts for b in pts if a <= b]
+        cands.append(np.array([3.0, 1.0, 0.0, 1.0], np.float32))
+    params = jnp.asarray(np.stack(cands))
+    preds = cls.predict(params, jnp.asarray(xs))           # [C, m]
+    errs = jnp.sum((preds != jnp.asarray(ys)[None]) * jnp.asarray(w)[None],
+                   axis=-1)
+    return float(jnp.min(errs))
+
+
+@pytest.mark.parametrize("clsname", ["singletons", "thresholds",
+                                     "intervals"])
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_erm_exact(clsname, seed):
+    cls = weak.make_class(clsname, n=N)
+    rng = np.random.default_rng(seed)
+    m = 64
+    xs = rng.integers(0, N, m).astype(np.int32)
+    ys = rng.choice([-1, 1], m).astype(np.int8)
+    w = rng.random(m).astype(np.float32)
+    w /= w.sum()
+    params, loss = cls.erm(jnp.asarray(xs), jnp.asarray(ys),
+                           jnp.asarray(w))
+    best = brute_force_best(cls, xs, ys, w)
+    assert float(loss) <= best + 1e-5, (clsname, float(loss), best)
+    # reported loss must equal the actual loss of the returned hypothesis
+    pred = cls.predict(params, jnp.asarray(xs))
+    actual = float(jnp.sum((pred != jnp.asarray(ys)) * jnp.asarray(w)))
+    np.testing.assert_allclose(actual, float(loss), atol=1e-5)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_stump_erm_exact(seed):
+    cls = weak.AxisStumps(num_features=5)
+    rng = np.random.default_rng(seed)
+    m = 48
+    xs = rng.standard_normal((m, 5)).astype(np.float32)
+    ys = rng.choice([-1, 1], m).astype(np.int8)
+    w = rng.random(m).astype(np.float32)
+    w /= w.sum()
+    params, loss = cls.erm(jnp.asarray(xs), jnp.asarray(ys),
+                           jnp.asarray(w))
+    # brute force: thresholds at data values per feature, both signs
+    best = np.inf
+    for f in range(5):
+        for t in list(xs[:, f]) + [xs[:, f].max() + 1]:
+            for s in (1, -1):
+                pred = np.where(xs[:, f] >= t, s, -s)
+                best = min(best, float(np.sum((pred != ys) * w)))
+    assert float(loss) <= best + 1e-5
+    pred = cls.predict(params, jnp.asarray(xs))
+    np.testing.assert_allclose(
+        float(jnp.sum((pred != jnp.asarray(ys)) * jnp.asarray(w))),
+        float(loss), atol=1e-5)
+
+
+def test_predict_broadcasting():
+    cls = weak.Thresholds(n=N)
+    params = jnp.asarray(np.array(
+        [[2.0, 5, 5, 1.0], [2.0, 9, 9, -1.0]], np.float32))
+    x = jnp.arange(12, dtype=jnp.int32)
+    out = cls.predict(params, x)
+    assert out.shape == (2, 12)
+    assert out.dtype == jnp.int8
+    single = cls.predict(params[0], x)
+    assert single.shape == (12,)
+    np.testing.assert_array_equal(np.asarray(single), np.asarray(out[0]))
+
+
+def test_ensemble_majority():
+    cls = weak.Thresholds(n=N)
+    hs = jnp.asarray(np.array(
+        [[2.0, 4, 4, 1.0]] * 2 + [[2.0, 8, 8, -1.0]], np.float32))
+    x = jnp.asarray([2, 6, 10], jnp.int32)
+    out = weak.ensemble_predict(cls, hs, 3, x)
+    # votes: x=2: (-1,-1,+1) -> -1 ; x=6: (+1,+1,+1)... wait h3 at 6: 6<8 -> +1
+    np.testing.assert_array_equal(np.asarray(out), [-1, 1, 1])
