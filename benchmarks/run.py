@@ -16,9 +16,10 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
 def _suite():
-    from benchmarks import (baselines, finite_class, kernel_micro,
-                            paper_claims, roofline)
+    from benchmarks import (baselines, batched_classify, finite_class,
+                            kernel_micro, paper_claims, roofline)
     return {
+        "batched_classify": batched_classify.run_all,
         "comm_vs_opt": paper_claims.comm_vs_opt,
         "comm_vs_k": paper_claims.comm_vs_k,
         "comm_vs_m": paper_claims.comm_vs_m,

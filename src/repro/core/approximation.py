@@ -34,7 +34,9 @@ from repro.core import weights as W
 
 def quantile_coreset(x: jax.Array, y: jax.Array, hits: jax.Array,
                      alive: jax.Array, c: int,
-                     order: jax.Array | None = None) -> jax.Array:
+                     order: jax.Array | None = None,
+                     y_sorted: jax.Array | None = None,
+                     alive_sorted: jax.Array | None = None) -> jax.Array:
     """Deterministic per-label weighted-quantile coreset ([c] indices).
 
     Loss queries ``1[h(x) ≠ y]`` are unions of range events on the two
@@ -53,19 +55,26 @@ def quantile_coreset(x: jax.Array, y: jax.Array, hits: jax.Array,
     m = x.shape[0]
     if order is None:
         order = jnp.argsort(x)                   # sort by domain point
+    # §Perf P4 (batched engine): y[order] and alive[order] are
+    # loop-invariant across rounds, so callers in the round loop hoist
+    # them; per round only hits needs re-gathering into sorted space.
+    ys = y[order] if y_sorted is None else y_sorted
+    al = alive[order] if alive_sorted is None else alive_sorted
+    hs = hits[order]
     # §Perf P3: quantile levels are scale-free, so the normalization
     # (log-sum-exp over the shard) is unnecessary — use raw 2^{-hits}.
     # Stable for hits ≤ 126 in f32 via a max-shift in integer space.
-    hmin = jnp.min(jnp.where(alive, hits, jnp.iinfo(hits.dtype).max))
-    p = jnp.where(alive,
-                  jnp.exp2(-(hits - hmin).astype(jnp.float32)), 0.0)[order]
-    ys = y[order]
-    p_pos = jnp.where(ys > 0, p, 0.0)
-    p_neg = jnp.where(ys > 0, 0.0, p)
-    cum_pos = jnp.cumsum(p_pos)
-    cum_neg = jnp.cumsum(p_neg)
-    w_pos = cum_pos[-1]
-    w_neg = cum_neg[-1]
+    # The clip keeps the dead-lane exp2 argument finite (an all-dead
+    # shard has hmin = intmax), so no inf ever enters the cumsum even
+    # on fully padded shards of a batched task.
+    hmin = jnp.min(jnp.where(al, hs, jnp.iinfo(hs.dtype).max))
+    shift = jnp.clip((hs - hmin).astype(jnp.float32), 0.0, 126.0)
+    p = jnp.where(al, jnp.exp2(-shift), 0.0)
+    # one stacked cumsum/searchsorted for the two label subpopulations
+    p2 = jnp.stack([jnp.where(ys > 0, p, 0.0),
+                    jnp.where(ys > 0, 0.0, p)])              # [2, m]
+    cum = jnp.cumsum(p2, axis=-1)
+    w_pos, w_neg = cum[0, -1], cum[1, -1]
     has_pos = w_pos > 1e-12
     has_neg = w_neg > 1e-12
     c_pos = jnp.round(c * w_pos
@@ -75,12 +84,11 @@ def quantile_coreset(x: jax.Array, y: jax.Array, hits: jax.Array,
     j = jnp.arange(c, dtype=jnp.float32)
     c_posf = jnp.maximum(c_pos.astype(jnp.float32), 1.0)
     c_negf = jnp.maximum((c - c_pos).astype(jnp.float32), 1.0)
-    lvl_pos = (j + 0.5) * w_pos / c_posf
-    lvl_neg = (j - c_posf + 0.5) * w_neg / c_negf
-    pos_idx = jnp.clip(jnp.searchsorted(cum_pos, lvl_pos), 0, m - 1)
-    neg_idx = jnp.clip(jnp.searchsorted(cum_neg, lvl_neg), 0, m - 1)
+    lvls = jnp.stack([(j + 0.5) * w_pos / c_posf,
+                      (j - c_posf + 0.5) * w_neg / c_negf])  # [2, c]
+    idx2 = jnp.clip(jax.vmap(jnp.searchsorted)(cum, lvls), 0, m - 1)
     pos_sel = jnp.arange(c) < c_pos
-    idx_sorted = jnp.where(pos_sel, pos_idx, neg_idx)
+    idx_sorted = jnp.where(pos_sel, idx2[0], idx2[1])
     return order[idx_sorted]
 
 
@@ -94,11 +102,16 @@ def sampled_coreset(key: jax.Array, hits: jax.Array, alive: jax.Array,
 def select_coreset(key: jax.Array, x: jax.Array, y: jax.Array,
                    hits: jax.Array, alive: jax.Array, c: int,
                    deterministic: bool,
-                   order: jax.Array | None = None) -> jax.Array:
+                   order: jax.Array | None = None,
+                   y_sorted: jax.Array | None = None,
+                   alive_sorted: jax.Array | None = None) -> jax.Array:
     if deterministic:
         # `order` hoists the loop-invariant argsort(x) out of the round
-        # loop (§Perf iteration P1 — the domain points never change).
-        return quantile_coreset(x, y, hits, alive, c, order=order)
+        # loop (§Perf iteration P1 — the domain points never change);
+        # y_sorted/alive_sorted hoist the matching gathers (§Perf P4).
+        return quantile_coreset(x, y, hits, alive, c, order=order,
+                                y_sorted=y_sorted,
+                                alive_sorted=alive_sorted)
     return sampled_coreset(key, hits, alive, c)
 
 

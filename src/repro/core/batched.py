@@ -1,0 +1,248 @@
+"""Device-resident batched AccuratelyClassify engine.
+
+The host-driven loop in :mod:`repro.core.classify` dispatches one
+BoostAttempt at a time and round-trips to numpy for every quarantine —
+``O(B · attempts)`` dispatches for B independent tasks.  This module
+runs B tasks in ONE jitted program: the outer attempt loop, the inner
+BoostAttempt round loop, the stuck check, the full-point quarantine and
+the dispute bookkeeping are all ``lax.while_loop`` bodies ``vmap``-ed
+over a leading task axis, so the host sees exactly one dispatch per
+batch.
+
+Semantics are the reference loop's, bit for bit (tests/test_batched.py
+asserts it):
+
+* the per-attempt PRNG stream is the same ``key, sub = split(key)``
+  sequence ``run_accurately_classify`` performs on the host;
+* the round bound is the paper's dynamic T = ⌈6·log2 m_alive⌉ per task
+  per attempt (a traced bound inside a fixed ⌈6·log2 m⌉-sized program);
+* quarantine is the array form of np.unique/np.isin — masked
+  point-matching against the stuck coreset (classify.match_points),
+  with the dispute-table size from classify.distinct_count so the
+  communication ledger charges the identical bit counts.
+
+Tasks finish at different attempt counts; finished lanes freeze (the
+standard vmap-of-while masking) while stragglers continue.  Dead lanes
+cost only select ops, so a batch is as slow as its slowest task, not
+the sum.
+
+The per-task protocol state (hits, alive, dispute masks) is small and
+uniform across tasks — the regime where distributed-boosting analyses
+(Chen–Balcan–Chau; smooth-boosting weight caps, Blanc et al. 2024) put
+the bottleneck on per-round work rather than communication — which is
+exactly what this engine amortises across the batch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import boost_attempt, classify, ledger as L, weak
+from repro.core import weights as W
+from repro.core.types import BoostConfig, ClassifyResult, Ledger
+
+
+class _TaskCarry(NamedTuple):
+    attempt: jax.Array       # int32 — attempts executed so far
+    done: jax.Array          # bool  — some attempt succeeded
+    alive: jax.Array         # [k, mloc] current alive mask
+    disputed: jax.Array      # [k, mloc] quarantined-example mask
+    key: jax.Array
+    h_params: jax.Array      # [T_buf, 4] ensemble of the winning attempt
+    rounds: jax.Array        # int32 rounds of the winning attempt
+    min_loss: jax.Array      # last center ERM loss (diagnostic)
+    hist_stuck: jax.Array    # [A] bool   per-attempt stuck flag
+    hist_rounds: jax.Array   # [A] int32  per-attempt rounds
+    hist_alive: jax.Array    # [A] int32  alive count entering the attempt
+    hist_p: jax.Array        # [A] int32  distinct disputed points
+
+
+def num_rounds_dynamic(cfg: BoostConfig, m_alive: jax.Array) -> jax.Array:
+    """Traced twin of ``BoostConfig.num_rounds`` (same f32 ops ⇒ same
+    integer for every m, so the batched loop bound matches the host's)."""
+    m = jnp.maximum(m_alive, 2).astype(jnp.float32)
+    return jnp.ceil(cfg.rounds_factor * jnp.log2(m)).astype(jnp.int32)
+
+
+def _attempt_body(cfg: BoostConfig, cls, x, y, x_orders, t_buf: int,
+                  c: _TaskCarry) -> _TaskCarry:
+    key, sub = jax.random.split(c.key)
+    m_alive = jnp.sum(c.alive.astype(jnp.int32))
+    bound = num_rounds_dynamic(cfg, m_alive)
+    hits0 = W.init_hits(x.shape[:2])
+    out = boost_attempt.boost_attempt_arrays(
+        x, y, c.alive, hits0, sub, cfg, cls, t_buf,
+        round_bound=bound, x_orders=x_orders)
+    stuck = out.stuck
+    # ---- full-point quarantine, array form (no-op unless stuck) --------
+    core_flat = out.core_x.reshape((-1,) + out.core_x.shape[2:])
+    dead_new = c.alive & classify.match_points(x, core_flat) & stuck
+    p_count = jnp.where(stuck, classify.distinct_count(core_flat), 0)
+    a = c.attempt
+    return _TaskCarry(
+        attempt=a + 1,
+        done=~stuck,
+        alive=c.alive & ~dead_new,
+        disputed=c.disputed | dead_new,
+        key=key,
+        h_params=jnp.where(stuck, c.h_params, out.h_params),
+        rounds=jnp.where(stuck, c.rounds, out.t),
+        min_loss=out.min_loss,
+        hist_stuck=c.hist_stuck.at[a].set(stuck),
+        hist_rounds=c.hist_rounds.at[a].set(out.t),
+        hist_alive=c.hist_alive.at[a].set(m_alive),
+        hist_p=c.hist_p.at[a].set(p_count),
+    )
+
+
+def classify_one_arrays(x, y, alive0, key, cfg: BoostConfig, cls,
+                        t_buf: int) -> _TaskCarry:
+    """Whole-protocol AccuratelyClassify for ONE task, fully on device.
+
+    ``t_buf`` is the static hypothesis-buffer size (≥ any dynamic round
+    bound, i.e. cfg.num_rounds(total sample size)).  Designed to be
+    ``vmap``-ed over a leading task axis — all shapes are fixed.
+    """
+    a_max = cfg.opt_budget + 1
+    x1d = x if x.ndim == 2 else x[:, :, 0]
+    x_orders = jax.vmap(jnp.argsort)(x1d)   # hoisted across ALL attempts
+    carry = _TaskCarry(
+        attempt=jnp.int32(0), done=jnp.asarray(False),
+        alive=alive0, disputed=jnp.zeros_like(alive0),
+        key=key,
+        h_params=jnp.zeros((t_buf, weak.PARAM_DIM), jnp.float32),
+        rounds=jnp.int32(0), min_loss=jnp.float32(0),
+        hist_stuck=jnp.zeros((a_max,), bool),
+        hist_rounds=jnp.zeros((a_max,), jnp.int32),
+        hist_alive=jnp.zeros((a_max,), jnp.int32),
+        hist_p=jnp.zeros((a_max,), jnp.int32),
+    )
+
+    def cond(cy: _TaskCarry):
+        return (~cy.done) & (cy.attempt < a_max)
+
+    return jax.lax.while_loop(
+        cond,
+        functools.partial(_attempt_body, cfg, cls, x, y, x_orders, t_buf),
+        carry)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "cls", "t_buf"))
+def _classify_batched_jit(x, y, alive0, keys, cfg, cls, t_buf):
+    one = functools.partial(classify_one_arrays, cfg=cfg, cls=cls,
+                            t_buf=t_buf)
+    return jax.vmap(one)(x, y, alive0, keys)
+
+
+@dataclasses.dataclass
+class BatchedClassifyResult:
+    """Host view of one batched dispatch (B tasks).
+
+    ``ok[b]`` is False iff task b exhausted ``opt_budget`` attempts —
+    the batched analogue of the reference loop's RuntimeError.  The
+    dispute table of task b is reconstructible from ``disputed[b]``
+    alone (full-point quarantine ⇒ counts are the initially-alive
+    counts; see classify.dispute_table).
+    """
+
+    hypotheses: np.ndarray   # [B, T_buf, 4]
+    rounds: np.ndarray       # [B]
+    ok: np.ndarray           # [B] bool
+    attempts: np.ndarray     # [B]
+    alive: np.ndarray        # [B, k, mloc] final alive mask
+    disputed: np.ndarray     # [B, k, mloc]
+    min_loss: np.ndarray     # [B]
+    hist_stuck: np.ndarray   # [B, A]
+    hist_rounds: np.ndarray  # [B, A]
+    hist_alive: np.ndarray   # [B, A]
+    hist_p: np.ndarray       # [B, A]
+    # inputs, kept for per-task reconstruction
+    x: np.ndarray
+    y: np.ndarray
+    alive0: np.ndarray
+    cfg: BoostConfig
+    cls: object
+
+    @property
+    def batch(self) -> int:
+        return int(self.rounds.shape[0])
+
+    def ledger(self, b: int) -> Ledger:
+        """Bit-identical to the Ledger the reference loop accumulates."""
+        cfg, cls = self.cfg, self.cls
+        k, mloc = self.x.shape[1], self.x.shape[2]
+        n = getattr(cls, "n", 1 << getattr(cls, "value_bits", 16))
+        m_bits_m = max(int(np.ceil(np.log2(max(k * mloc, 2)))), 1)
+        led = Ledger()
+        for a in range(int(self.attempts[b])):
+            stuck = bool(self.hist_stuck[b, a])
+            led = led + L.boost_attempt_ledger(
+                cfg, cls, max(int(self.hist_alive[b, a]), 2),
+                int(self.hist_rounds[b, a]), stuck)
+            if stuck:
+                p = int(self.hist_p[b, a])
+                led.bits_control += cfg.k * p * L.point_bits(n)
+                led.bits_dispute += cfg.k * p * 2 * m_bits_m
+        return led
+
+    def per_task(self, b: int) -> ClassifyResult:
+        """Materialise task b as a reference-shaped ClassifyResult."""
+        if not self.ok[b]:
+            raise RuntimeError(
+                f"task {b} exceeded opt_budget={self.cfg.opt_budget}")
+        pts, pos, neg = classify.dispute_table(
+            self.x[b], self.y[b], self.alive0[b], self.disputed[b])
+        n_att = int(self.attempts[b])
+        return ClassifyResult(
+            hypotheses=jnp.asarray(self.hypotheses[b]),
+            rounds=int(self.rounds[b]),
+            dispute_x=jnp.asarray(pts),
+            dispute_y=(jnp.asarray(pos), jnp.asarray(neg)),
+            dispute_count=int(pts.shape[0]),
+            attempts=n_att,
+            stuck_history=[bool(s) for s in self.hist_stuck[b, :n_att]],
+            ledger=self.ledger(b))
+
+    def classifier(self, b: int) -> classify.ResilientClassifier:
+        return classify.make_classifier(self.cls, self.per_task(b))
+
+
+def run_accurately_classify_batched(x, y, keys, cfg: BoostConfig, cls,
+                                    alive=None) -> BatchedClassifyResult:
+    """B-task AccuratelyClassify in one device dispatch.
+
+    x, y: [B, k, mloc] int shards or [B, k, mloc, F] feature rows;
+    keys: [B] PRNG keys (one per task — the same key given to the
+    reference loop reproduces it exactly) or a single key to split.
+    ``alive``: optional [B, k, mloc] initial mask (False = padding, so
+    ragged batches are padded to a common mloc and masked out).
+    """
+    x = jnp.asarray(x)
+    y = jnp.asarray(y)
+    B, k, mloc = x.shape[0], x.shape[1], x.shape[2]
+    keys = jnp.asarray(keys)
+    if keys.ndim == 0:                       # one typed key → B streams
+        keys = jax.random.split(keys, B)
+    if keys.shape[0] != B:
+        raise ValueError(f"need {B} task keys, got shape {keys.shape}")
+    if alive is None:
+        alive = jnp.ones((B, k, mloc), bool)
+    else:
+        alive = jnp.asarray(alive)
+    t_buf = cfg.num_rounds(k * mloc)
+    out = jax.device_get(_classify_batched_jit(
+        x, y, alive, keys, cfg, cls, t_buf))
+    return BatchedClassifyResult(
+        hypotheses=out.h_params, rounds=out.rounds,
+        ok=np.asarray(out.done), attempts=out.attempt,
+        alive=out.alive, disputed=out.disputed, min_loss=out.min_loss,
+        hist_stuck=out.hist_stuck, hist_rounds=out.hist_rounds,
+        hist_alive=out.hist_alive, hist_p=out.hist_p,
+        x=np.asarray(x), y=np.asarray(y), alive0=np.asarray(alive),
+        cfg=cfg, cls=cls)

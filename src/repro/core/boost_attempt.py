@@ -31,6 +31,20 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+# jax.shard_map (with check_vma) landed after 0.4.x; fall back to the
+# experimental entry point (check_rep) so the sharded form runs on the
+# pinned toolchain as well as newer jax.
+if hasattr(jax, "shard_map"):
+    def _shard_map(f, mesh, in_specs, out_specs):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+else:
+    from jax.experimental.shard_map import shard_map as _exp_shard_map
+
+    def _shard_map(f, mesh, in_specs, out_specs):
+        return _exp_shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=False)
+
 from repro.core import approximation, weights as W
 from repro.core import weak
 from repro.core.types import BoostAttemptResult, BoostConfig
@@ -68,16 +82,17 @@ def _center_erm(cls, cx, cy, mix, c):
 
 
 def _round_body(cfg: BoostConfig, cls, x, y, alive, x_orders,
-                carry: _Carry) -> _Carry:
+                y_sorted, alive_sorted, carry: _Carry) -> _Carry:
     key, kc = jax.random.split(carry.key)
     keys = jax.random.split(kc, x.shape[0])
     # --- players: step 2(a) coreset + step 2(b) weight sums -------------
     idx = jax.vmap(
-        lambda kk, xx, yy, hh, aa, oo: approximation.select_coreset(
+        lambda kk, xx, yy, hh, aa, oo, yso, aso:
+        approximation.select_coreset(
             kk, xx if xx.ndim == 1 else xx[:, 0], yy, hh, aa,
             cfg.coreset_size, cfg.deterministic_coreset and x.ndim == 2,
-            order=oo)
-    )(keys, x, y, carry.hits, alive, x_orders)
+            order=oo, y_sorted=yso, alive_sorted=aso)
+    )(keys, x, y, carry.hits, alive, x_orders, y_sorted, alive_sorted)
     cx, cy = _gather_coreset(x, y, idx)
     log_wsums = jax.vmap(W.log_weight_sum)(carry.hits, alive)     # [k]
     mix = W.mixture_weights(log_wsums)
@@ -104,8 +119,18 @@ def _round_body(cfg: BoostConfig, cls, x, y, alive, x_orders,
 
 
 def boost_attempt_arrays(x, y, alive, hits0, key, cfg: BoostConfig, cls,
-                         num_rounds: int):
-    """Jittable BoostAttempt core. Returns the final carry tuple."""
+                         num_rounds: int, *, round_bound=None,
+                         x_orders=None):
+    """Jittable BoostAttempt core. Returns the final carry tuple.
+
+    ``num_rounds`` is the *static* hypothesis-buffer size.  The loop
+    itself stops at ``round_bound`` when given (a traced int32 ≤
+    ``num_rounds``) — this is what lets the batched engine run the
+    paper's T = ⌈6·log2 m_alive⌉ bound with a per-task, per-attempt
+    alive count while keeping one fixed-shape program.  ``x_orders``
+    optionally passes in the loop-invariant per-player argsort so an
+    outer loop (AccuratelyClassify attempts) can hoist it.
+    """
     k, c = x.shape[0], cfg.coreset_size
     carry = _Carry(
         t=jnp.int32(0), it=jnp.int32(0), stuck=jnp.asarray(False),
@@ -116,17 +141,21 @@ def boost_attempt_arrays(x, y, alive, hits0, key, cfg: BoostConfig, cls,
         core_y=jnp.zeros((k, c), y.dtype),
         min_loss=jnp.float32(0),
     )
+    bound = num_rounds if round_bound is None else round_bound
 
     def cond(cy: _Carry):
-        return (~cy.stuck) & (cy.t < num_rounds)
+        return (~cy.stuck) & (cy.t < bound)
 
     # §Perf P1: loop-invariant per-player argsort hoisted out of the
-    # round loop.
-    x1d = x if x.ndim == 2 else x[:, :, 0]
-    x_orders = jax.vmap(jnp.argsort)(x1d)
+    # round loop; §Perf P4: so are the y/alive gathers into sorted space.
+    if x_orders is None:
+        x1d = x if x.ndim == 2 else x[:, :, 0]
+        x_orders = jax.vmap(jnp.argsort)(x1d)
+    y_sorted = jnp.take_along_axis(y, x_orders, axis=1)
+    alive_sorted = jnp.take_along_axis(alive, x_orders, axis=1)
     return jax.lax.while_loop(
         cond, functools.partial(_round_body, cfg, cls, x, y, alive,
-                                x_orders), carry)
+                                x_orders, y_sorted, alive_sorted), carry)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "cls", "num_rounds"))
@@ -183,6 +212,8 @@ def boost_attempt_sharded(mesh, cfg: BoostConfig, cls, num_rounds: int,
         # outside the round loop instead of inside every coreset build.
         x1d = xl[0] if xl.ndim == 2 else xl[0, :, 0]
         x_order = jnp.argsort(x1d) if cfg.deterministic_coreset else None
+        y_sorted = yl[0][x_order] if x_order is not None else None
+        alive_sorted = al[0][x_order] if x_order is not None else None
 
         def round_body(carry):
             t, it, stuck, hitsl, kkey, h_params, last_loss = carry
@@ -195,7 +226,8 @@ def boost_attempt_sharded(mesh, cfg: BoostConfig, cls, num_rounds: int,
                 kp, x1d, yl[0],
                 hitsl[0], al[0], cfg.coreset_size,
                 cfg.deterministic_coreset and xl.ndim == 2,
-                order=x_order)
+                order=x_order, y_sorted=y_sorted,
+                alive_sorted=alive_sorted)
             cx, cy = _gather_coreset(xl, yl, idx[None])
             log_wsum = W.log_weight_sum(hitsl[0], al[0])
             # --- the wire: gather tiny coresets + one scalar per player --
@@ -248,5 +280,5 @@ def boost_attempt_sharded(mesh, cfg: BoostConfig, cls, num_rounds: int,
 
     in_specs = (P(*axes), P(*axes), P(*axes), P(*axes), P())
     out_specs = (P(), P(), P(*axes), P(), P())
-    return jax.shard_map(per_device, mesh=mesh, in_specs=in_specs,
-                         out_specs=out_specs, check_vma=False)
+    return _shard_map(per_device, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs)

@@ -43,6 +43,71 @@ from repro.core import boost_attempt, ledger as L, weak
 from repro.core.types import BoostConfig, ClassifyResult, Ledger
 
 
+# ---------------------------------------------------------------------------
+# Array-form quarantine primitives (jit-safe; used by core/batched.py).
+#
+# The host loop below dedupes the stuck coreset with np.unique/np.isin;
+# on device the same semantics are masked point-matching: an example
+# dies iff its point equals ANY entry of the stuck coreset, and the
+# dispute-table size P is the number of distinct coreset values.  Both
+# are O(m·K) / O(K²) compares with K = k·coreset_size — small, fixed
+# shapes, no data-dependent output size.
+# ---------------------------------------------------------------------------
+
+def match_points(x: jax.Array, pts: jax.Array) -> jax.Array:
+    """alive-agnostic point match: out[...] = 1[x[...] ∈ set(pts)].
+
+    x: [k, mloc] int points or [k, mloc, F] feature rows;
+    pts: [P] or [P, F] (need not be deduplicated).
+    """
+    if x.ndim == 3:
+        flat = x.reshape(-1, x.shape[-1])
+        hit = jnp.any(jnp.all(flat[:, None, :] == pts[None], axis=-1),
+                      axis=-1)
+        return hit.reshape(x.shape[:2])
+    # int track: O((m+P)·log P) via sorted membership, not O(m·P)
+    ps = jnp.sort(pts)
+    xf = x.reshape(-1)
+    pos = jnp.clip(jnp.searchsorted(ps, xf), 0, pts.shape[0] - 1)
+    return (ps[pos] == xf).reshape(x.shape[:2])
+
+
+def distinct_count(pts: jax.Array) -> jax.Array:
+    """|unique(pts)| as a traced int32 (first-occurrence counting)."""
+    if pts.ndim == 2:
+        eq = jnp.all(pts[:, None, :] == pts[None], axis=-1)     # [P, P]
+        earlier = jnp.tril(eq, k=-1)
+        first = ~jnp.any(earlier, axis=-1)
+        return jnp.sum(first.astype(jnp.int32))
+    ps = jnp.sort(pts)
+    bumps = jnp.concatenate(
+        [jnp.ones((1,), bool), ps[1:] != ps[:-1]])
+    return jnp.sum(bumps.astype(jnp.int32))
+
+
+def dispute_table(x: np.ndarray, y: np.ndarray, alive0: np.ndarray,
+                  disputed: np.ndarray):
+    """Host-side: (unique points, n₊, n₋) from a disputed-example mask.
+
+    Because quarantine always removes *every* copy of a disputed point,
+    the copies of a point alive at its quarantine time are exactly its
+    initially-alive copies — so the D-table counts are reconstructible
+    from the mask alone, independent of attempt order.
+    """
+    x, y = np.asarray(x), np.asarray(y)
+    alive0, disputed = np.asarray(alive0), np.asarray(disputed)
+    sel = disputed.reshape(-1)
+    if x.ndim == 3:
+        flat = x.reshape(-1, x.shape[-1])
+        pts = np.unique(flat[sel], axis=0) if sel.any() else \
+            np.zeros((0, x.shape[-1]), x.dtype)
+    else:
+        flat = x.reshape(-1)
+        pts = np.unique(flat[sel])
+    pos, neg = _point_counts(x, y, alive0, pts)
+    return pts, pos, neg
+
+
 def _kill_points(x: np.ndarray, alive: np.ndarray, pts: np.ndarray):
     """Remove every copy of every disputed point, on every player."""
     if x.ndim == 3:                       # feature rows
@@ -106,9 +171,16 @@ def run_accurately_classify(x, y, key, cfg: BoostConfig, cls,
             (-1,) + tuple(np.asarray(res.coreset_x).shape[2:]))
         pts = np.unique(cx, axis=0) if cx.ndim == 2 else np.unique(cx)
         pos, neg = _point_counts(x_np, y_np, alive_np, pts)
-        dis_pts.append(pts)
-        dis_pos.append(pos)
-        dis_neg.append(neg)
+        # A coreset from a fully-dead shard can name points with zero
+        # alive copies (repeat-disputed or initially-padded).  They
+        # carry no label evidence, so they don't enter the D-table /
+        # classifier vote (the ensemble decides there) — this keeps f
+        # identical to the mask-based batched engine.  The broadcast
+        # still happened, so the ledger below charges the full |pts|.
+        keep = (pos + neg) > 0
+        dis_pts.append(pts[keep])
+        dis_pos.append(pos[keep])
+        dis_neg.append(neg[keep])
         alive_np = _kill_points(x_np, alive_np, pts)
         # ledger: point-set broadcast + per-player count reports
         P = int(pts.shape[0])

@@ -85,6 +85,21 @@ def make_task(cls, m: int, k: int, noise: int, seed: int = 0,
                 cls=cls)
 
 
+def make_batch(cls, B: int, m: int, k: int, noise: int, seed0: int = 0,
+               adversarial_split: bool = True):
+    """B independent tasks stacked for the batched engine.
+
+    Returns (x [B, k, m/k(, F)], y [B, k, m/k], tasks list) — the one
+    batch constructor shared by serving, benchmarks, examples and
+    tests, so per-task seeding/splitting can never drift between them.
+    """
+    ts = [make_task(cls, m=m, k=k, noise=noise, seed=seed0 + b,
+                    adversarial_split=adversarial_split)
+          for b in range(B)]
+    return (np.stack([t.x for t in ts]), np.stack([t.y for t in ts]),
+            ts)
+
+
 def true_opt(task: Task, grid: int = 4096) -> int:
     """Brute-force OPT over a hypothesis grid (exact for small classes).
 

@@ -46,10 +46,27 @@ def _field(params: jax.Array, i: int, x_ndim: int) -> jax.Array:
     return f.reshape(f.shape + (1,) * x_ndim)
 
 
-def _sorted_prefix(xs, ys, w):
-    """Common ERM preamble: sort by point, return per-index prefix sums."""
-    order = jnp.argsort(xs)
-    xs_s = xs[order]
+def _sorted_prefix(xs, ys, w, n: int | None = None):
+    """Common ERM preamble: sort by point, return per-index prefix sums.
+
+    §Perf P4: XLA:CPU's variadic/comparator sort (what a stable argsort
+    lowers to) is ~10× slower than its single-operand numeric sort and
+    is row-serial, so it becomes the hot op of the whole protocol once
+    the round loop is batched over tasks.  When the caller can certify
+    an integer domain [0, n) with n·len(xs) < 2³¹ we pack (x, index)
+    into ONE int32 key and take the fast path — the index low bits make
+    the unpacked order bitwise-identical to the stable argsort.
+    """
+    k = xs.shape[0]
+    if (n is not None and 0 < n * k < 2 ** 31
+            and jnp.issubdtype(xs.dtype, jnp.integer)):
+        keys = xs.astype(jnp.int32) * k + jnp.arange(k, dtype=jnp.int32)
+        keys_s = jnp.sort(keys)
+        order = keys_s % k
+        xs_s = (keys_s // k).astype(xs.dtype)
+    else:
+        order = jnp.argsort(xs)
+        xs_s = xs[order]
     wp = jnp.where(ys[order] > 0, w[order], 0.0)
     wn = jnp.where(ys[order] > 0, 0.0, w[order])
     return order, xs_s, jnp.cumsum(wp), jnp.cumsum(wn), jnp.sum(wp), jnp.sum(wn)
@@ -79,7 +96,7 @@ class Singletons:
 
     def erm(self, xs: jax.Array, ys: jax.Array, w: jax.Array):
         """Exact ERM: candidates a ∈ coreset ∪ {one point off-coreset}."""
-        order, xs_s, cwp, cwn, Wp, _ = _sorted_prefix(xs, ys, w)
+        order, xs_s, cwp, cwn, Wp, _ = _sorted_prefix(xs, ys, w, n=self.n)
         k = xs.shape[0]
         first = _first_occurrence(xs_s)
         # segment sums of (w·1[y=+1], w·1[y=−1]) per unique value run:
@@ -126,7 +143,8 @@ class Thresholds:
         return (jnp.where(x >= a, s, -s)).astype(jnp.int8)
 
     def erm(self, xs: jax.Array, ys: jax.Array, w: jax.Array):
-        order, xs_s, cwp, cwn, Wp, Wn = _sorted_prefix(xs, ys, w)
+        order, xs_s, cwp, cwn, Wp, Wn = _sorted_prefix(xs, ys, w,
+                                                       n=self.n)
         k = xs.shape[0]
         first = _first_occurrence(xs_s)
         # θ at position j ⇒ pred −s for i<j, +s for i≥j (value-aligned
@@ -166,7 +184,7 @@ class Intervals:
 
     def erm(self, xs: jax.Array, ys: jax.Array, w: jax.Array):
         """Kadane over value-grouped gains: err(a,b) = Wp − Σ_[a,b](wp−wn)."""
-        order, xs_s, cwp, cwn, Wp, _ = _sorted_prefix(xs, ys, w)
+        order, xs_s, cwp, cwn, Wp, _ = _sorted_prefix(xs, ys, w, n=self.n)
         k = xs.shape[0]
         nxt_first = jnp.concatenate(
             [xs_s[1:] != xs_s[:-1], jnp.ones((1,), bool)])
@@ -234,6 +252,21 @@ class AxisStumps:
         params = jnp.stack(
             [jnp.float32(4), f.astype(jnp.float32), p[1], p[3]])
         return params, losses[f]
+
+
+def erm_batch(cls, xs: jax.Array, ys: jax.Array, w: jax.Array):
+    """ERM over a leading batch (task) axis: xs [B, c(, F)], ys/w [B, c]
+    → (params [B, 4], loss [B]).
+
+    Pad-safe: a padded example carries w = 0 and contributes nothing to
+    any candidate's error, and an all-zero-weight row (a fully padded
+    task) degenerates to loss 0 with a deterministic first-candidate
+    hypothesis — callers mask such rows out rather than special-case
+    them.  Every ERM above is closed-form over sorts/prefix sums, so
+    vmap adds a batch dim without changing per-row op order (this is
+    what the batched engine's bitwise-parity test relies on).
+    """
+    return jax.vmap(cls.erm)(xs, ys, w)
 
 
 def make_class(name: str, *, n: int = 0, num_features: int = 0):

@@ -17,6 +17,12 @@ Grid: (F/BF, Q/BQ, c/BC) with the c axis innermost, accumulating into
 the output block (revisited across the c steps — standard Pallas
 reduction pattern).  VMEM per step: BC·BF·4 + BF·BQ·4 + BC·BF·BQ·4
 ≈ 0.6 MiB at (128, 8, 128).
+
+Batched form (:func:`stump_scores_batched_pallas`): a leading task axis
+B is the OUTERMOST grid dimension — the center ERM of B independent
+boosting tasks is one kernel launch, grid (B, F/BF, Q/BQ, c/BC), with
+per-task thresholds.  Block shapes pick up a leading 1 (one task per
+step); VMEM per step is unchanged.
 """
 
 from __future__ import annotations
@@ -63,5 +69,42 @@ def stump_scores_pallas(x, wy, thetas, *, interpret: bool = False,
         ],
         out_specs=pl.BlockSpec((bf, bq), lambda f, q, ci: (f, q)),
         out_shape=jax.ShapeDtypeStruct((F, Q), jnp.float32),
+        interpret=interpret,
+    )(x, wy, thetas)
+
+
+def _stump_kernel_batched(x_ref, wy_ref, theta_ref, s_ref):
+    ci = pl.program_id(3)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    x = x_ref[0]                        # [BC, BF]
+    wy = wy_ref[0]                      # [BC]
+    th = theta_ref[0]                   # [BF, BQ]
+    pred = (x[:, :, None] >= th[None, :, :]).astype(jnp.float32)
+    s_ref[0] += jnp.einsum("c,cfq->fq", wy, pred)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "blocks"))
+def stump_scores_batched_pallas(x, wy, thetas, *, interpret: bool = False,
+                                blocks=(BC, BF, BQ)):
+    """x [B, c, F]; wy [B, c]; thetas [B, F, Q] → S [B, F, Q] f32.
+    One launch for all B tasks; c % BC == F % BF == Q % BQ == 0."""
+    bc, bf, bq = blocks
+    B, c, F = x.shape
+    Q = thetas.shape[2]
+    assert c % bc == 0 and F % bf == 0 and Q % bq == 0
+    return pl.pallas_call(
+        _stump_kernel_batched,
+        grid=(B, F // bf, Q // bq, c // bc),
+        in_specs=[
+            pl.BlockSpec((1, bc, bf), lambda b, f, q, ci: (b, ci, f)),
+            pl.BlockSpec((1, bc), lambda b, f, q, ci: (b, ci)),
+            pl.BlockSpec((1, bf, bq), lambda b, f, q, ci: (b, f, q)),
+        ],
+        out_specs=pl.BlockSpec((1, bf, bq), lambda b, f, q, ci: (b, f, q)),
+        out_shape=jax.ShapeDtypeStruct((B, F, Q), jnp.float32),
         interpret=interpret,
     )(x, wy, thetas)

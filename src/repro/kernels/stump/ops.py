@@ -1,4 +1,10 @@
-"""Public wrapper: pad to block multiples, dispatch, compute stump errors."""
+"""Public wrapper: pad to block multiples, dispatch, compute stump errors.
+
+Both entry points accept an optional leading batch (task) axis:
+``x [c, F]`` uses the 3-D grid; ``x [B, c, F]`` lowers to the batched
+kernel whose grid leads with B — one launch for the center ERM of all
+B tasks (per-task weights AND per-task thresholds).
+"""
 
 from __future__ import annotations
 
@@ -16,24 +22,33 @@ def _interpret_default() -> bool:
 def stump_scores(x, wy, thetas, interpret: bool | None = None):
     if interpret is None:
         interpret = _interpret_default()
-    c, F = x.shape
-    Q = thetas.shape[1]
+    batched = x.ndim == 3
+    c, F = x.shape[-2], x.shape[-1]
+    Q = thetas.shape[-1]
     pc, pf, pq = (-c) % K.BC, (-F) % K.BF, (-Q) % K.BQ
-    xp = jnp.pad(x, ((0, pc), (0, pf)))
-    wyp = jnp.pad(wy, (0, pc))                      # zero weight ⇒ no-op
+    lead = ((0, 0),) if batched else ()
+    xp = jnp.pad(x, lead + ((0, pc), (0, pf)))
+    wyp = jnp.pad(wy, lead + ((0, pc),))            # zero weight ⇒ no-op
     # padded thresholds must not be ±inf (NaN-free): use +big so padded
     # rows compare to 0-features as 0 ≥ big = False
-    tp = jnp.pad(thetas, ((0, pf), (0, pq)), constant_values=3.4e38)
+    tp = jnp.pad(thetas, lead + ((0, pf), (0, pq)),
+                 constant_values=3.4e38)
+    if batched:
+        S = K.stump_scores_batched_pallas(xp, wyp, tp,
+                                          interpret=interpret)
+        return S[:, :F, :Q]
     S = K.stump_scores_pallas(xp, wyp, tp, interpret=interpret)
     return S[:F, :Q]
 
 
 def stump_errors(x, w, y, thetas, interpret: bool | None = None):
-    """[F, Q, 2] weighted stump errors via the Pallas contraction."""
+    """[(B,) F, Q, 2] weighted stump errors via the Pallas contraction."""
     wy = w * y.astype(w.dtype)
     S = stump_scores(x, wy, thetas, interpret=interpret)
-    W = jnp.sum(w)
-    swy = jnp.sum(wy)
+    W = jnp.sum(w, axis=-1)
+    swy = jnp.sum(wy, axis=-1)
+    if x.ndim == 3:
+        W, swy = W[:, None, None], swy[:, None, None]
     corr_plus = 2.0 * S - swy
     return jnp.stack([0.5 * (W - corr_plus), 0.5 * (W + corr_plus)],
                      axis=-1)

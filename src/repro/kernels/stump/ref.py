@@ -4,7 +4,10 @@ import jax.numpy as jnp
 
 
 def stump_scores_ref(x, wy, thetas):
-    """S[f,q] = Σ_i wy_i · 1[x[i,f] ≥ θ[f,q]]."""
+    """S[f,q] = Σ_i wy_i · 1[x[i,f] ≥ θ[f,q]] (optional leading batch)."""
+    if x.ndim == 3:
+        pred = (x[:, :, :, None] >= thetas[:, None, :, :])
+        return jnp.einsum("bc,bcfq->bfq", wy, pred.astype(jnp.float32))
     pred = (x[:, :, None] >= thetas[None, :, :]).astype(jnp.float32)
     return jnp.einsum("c,cfq->fq", wy, pred)
 
@@ -14,8 +17,10 @@ def stump_errors_ref(x, w, y, thetas):
     with sign index 0 ⇒ +1 (predict +1 when x ≥ θ), 1 ⇒ −1."""
     wy = w * y.astype(w.dtype)
     S = stump_scores_ref(x, wy, thetas)
-    W = jnp.sum(w)
-    swy = jnp.sum(wy)
+    W = jnp.sum(w, axis=-1)
+    swy = jnp.sum(wy, axis=-1)
+    if x.ndim == 3:
+        W, swy = W[:, None, None], swy[:, None, None]
     corr_plus = 2.0 * S - swy          # Σ wy_i · pred_i for sign +1
     err_plus = 0.5 * (W - corr_plus)
     err_minus = 0.5 * (W + corr_plus)

@@ -61,6 +61,97 @@ def test_stump_sweep(c, F, Q):
     assert got.shape == (F, Q, 2)
 
 
+# Edge cases for the stump contraction: shapes straddling the block
+# boundaries (±1 around BC/BF/BQ after caller padding), all-negative
+# weights, duplicate thresholds — for both the 2-D and the batched
+# (leading task axis) grids.
+@pytest.mark.parametrize("c,F,Q", [(127, 7, 127), (129, 9, 129),
+                                   (128, 8, 128), (1, 1, 1),
+                                   (255, 17, 257)])
+def test_stump_block_boundaries(c, F, Q):
+    rng = np.random.default_rng(c * 31 + F * 7 + Q)
+    x = jnp.asarray(rng.standard_normal((c, F)) * 5, jnp.float32)
+    w = jnp.asarray(rng.random(c), jnp.float32)
+    y = jnp.asarray(rng.choice([-1.0, 1.0], c), jnp.float32)
+    th = jnp.asarray(rng.standard_normal((F, Q)) * 5, jnp.float32)
+    got = stump_ops.stump_errors(x, w, y, th, interpret=True)
+    ref = stump_errors_ref(x, w, y, th)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=3e-5, atol=3e-6)
+
+
+def test_stump_all_negative_weights():
+    """wy < 0 everywhere (every example labelled −1): the accumulated
+    scores are all-negative, errors must still match the oracle."""
+    rng = np.random.default_rng(0)
+    c, F, Q = 130, 9, 127
+    x = jnp.asarray(rng.standard_normal((c, F)), jnp.float32)
+    w = jnp.asarray(rng.random(c) + 0.1, jnp.float32)
+    y = -jnp.ones((c,), jnp.float32)
+    th = jnp.asarray(rng.standard_normal((F, Q)), jnp.float32)
+    got = stump_ops.stump_errors(x, w, y, th, interpret=True)
+    ref = stump_errors_ref(x, w, y, th)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=3e-5, atol=3e-6)
+    assert float(jnp.min(got)) >= -3e-5   # errors are non-negative
+
+
+def test_stump_duplicate_thresholds():
+    """Repeated θ values (ties with x values included) must produce
+    identical columns — the ≥ comparison is exact, no fuzz."""
+    rng = np.random.default_rng(1)
+    c, F = 64, 4
+    x = jnp.asarray(rng.integers(0, 8, (c, F)), jnp.float32)
+    w = jnp.asarray(rng.random(c), jnp.float32)
+    y = jnp.asarray(rng.choice([-1.0, 1.0], c), jnp.float32)
+    base = jnp.asarray(rng.integers(0, 8, (F, 1)), jnp.float32)
+    th = jnp.tile(base, (1, 6))                    # 6 identical columns
+    got = stump_ops.stump_errors(x, w, y, th, interpret=True)
+    ref = stump_errors_ref(x, w, y, th)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=3e-5, atol=3e-6)
+    for q in range(1, 6):
+        np.testing.assert_array_equal(np.asarray(got[:, q]),
+                                      np.asarray(got[:, 0]))
+
+
+@pytest.mark.parametrize("B,c,F,Q", [(1, 127, 7, 129), (3, 129, 9, 127),
+                                     (2, 128, 8, 128), (4, 33, 3, 17)])
+def test_stump_batched_sweep(B, c, F, Q):
+    """The batched grid (leading task axis, per-task thresholds AND
+    weights) against the batched oracle, at boundary shapes."""
+    rng = np.random.default_rng(B * 97 + c + F + Q)
+    x = jnp.asarray(rng.standard_normal((B, c, F)) * 5, jnp.float32)
+    w = jnp.asarray(rng.random((B, c)), jnp.float32)
+    y = jnp.asarray(rng.choice([-1.0, 1.0], (B, c)), jnp.float32)
+    th = jnp.asarray(rng.standard_normal((B, F, Q)) * 5, jnp.float32)
+    got = stump_ops.stump_errors(x, w, y, th, interpret=True)
+    ref = stump_errors_ref(x, w, y, th)
+    assert got.shape == (B, F, Q, 2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=3e-5, atol=3e-6)
+    # each batch lane must equal its own unbatched launch
+    for b in range(B):
+        one = stump_ops.stump_errors(x[b], w[b], y[b], th[b],
+                                     interpret=True)
+        np.testing.assert_allclose(np.asarray(got[b]), np.asarray(one),
+                                   rtol=3e-5, atol=3e-6)
+
+
+def test_stump_batched_all_negative_and_duplicates():
+    rng = np.random.default_rng(4)
+    B, c, F, Q = 2, 129, 9, 130
+    x = jnp.asarray(rng.integers(0, 6, (B, c, F)), jnp.float32)
+    w = jnp.asarray(rng.random((B, c)) + 0.05, jnp.float32)
+    y = -jnp.ones((B, c), jnp.float32)
+    th = jnp.repeat(jnp.asarray(rng.integers(0, 6, (B, F, 1)),
+                                jnp.float32), Q, axis=2)
+    got = stump_ops.stump_errors(x, w, y, th, interpret=True)
+    ref = stump_errors_ref(x, w, y, th)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=3e-5, atol=3e-6)
+
+
 @pytest.mark.parametrize("B,S,H,KV,hd", [
     (1, 64, 4, 2, 32), (2, 128, 8, 8, 64), (1, 200, 4, 1, 16),
     (1, 256, 2, 2, 128),

@@ -1,8 +1,18 @@
-"""Property-based tests (hypothesis) on the system's invariants."""
+"""Property-based tests (hypothesis) on the system's invariants.
+
+``hypothesis`` is an *optional* test dependency (see TESTING.md): when
+absent the module skips instead of killing collection for the whole
+suite.
+"""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional test dep: pip install hypothesis (see TESTING.md)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import ledger, weak, weights

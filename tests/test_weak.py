@@ -101,3 +101,37 @@ def test_ensemble_majority():
     out = weak.ensemble_predict(cls, hs, 3, x)
     # votes: x=2: (-1,-1,+1) -> -1 ; x=6: (+1,+1,+1)... wait h3 at 6: 6<8 -> +1
     np.testing.assert_array_equal(np.asarray(out), [-1, 1, 1])
+
+
+def test_erm_batch_matches_per_row_and_is_pad_safe():
+    """erm_batch == row-by-row erm, and zero-weight (padded) examples
+    leave every candidate's error untouched."""
+    rng = np.random.default_rng(7)
+    B, c = 5, 64
+    for cls in (weak.Thresholds(n=N), weak.Intervals(n=N),
+                weak.Singletons(n=N)):
+        xs = jnp.asarray(rng.integers(0, N, (B, c)), jnp.int32)
+        ys = jnp.asarray(rng.choice([-1, 1], (B, c)), jnp.int8)
+        w = jnp.asarray(rng.random((B, c)), jnp.float32)
+        pb, lb = weak.erm_batch(cls, xs, ys, w)
+        for b in range(B):
+            p1, l1 = cls.erm(xs[b], ys[b], w[b])
+            np.testing.assert_array_equal(np.asarray(pb[b]),
+                                          np.asarray(p1))
+            np.testing.assert_array_equal(np.asarray(lb[b]),
+                                          np.asarray(l1))
+        # padding the row with w=0 examples must not change the loss
+        pad_x = jnp.concatenate([xs, jnp.zeros((B, 16), jnp.int32)], -1)
+        pad_y = jnp.concatenate([ys, jnp.ones((B, 16), jnp.int8)], -1)
+        pad_w = jnp.concatenate([w, jnp.zeros((B, 16), jnp.float32)], -1)
+        _, lp = weak.erm_batch(cls, pad_x, pad_y, pad_w)
+        np.testing.assert_allclose(np.asarray(lp), np.asarray(lb),
+                                   rtol=1e-6, atol=1e-7)
+    # a fully padded row (all-zero weights) degenerates without NaN
+    thr = weak.Thresholds(n=N)
+    xs0 = jnp.zeros((2, c), jnp.int32)
+    ys0 = jnp.ones((2, c), jnp.int8)
+    w0 = jnp.zeros((2, c), jnp.float32)
+    p0, l0 = weak.erm_batch(thr, xs0, ys0, w0)
+    assert bool(jnp.all(jnp.isfinite(p0))) and bool(
+        jnp.all(l0 == 0.0))
