@@ -17,9 +17,11 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 def _suite():
     from benchmarks import (baselines, batched_classify, finite_class,
-                            kernel_micro, paper_claims, roofline)
+                            kernel_micro, paper_claims, roofline,
+                            sharded_scenarios)
     return {
         "batched_classify": batched_classify.run_all,
+        "sharded_scenarios": sharded_scenarios.run_all,
         "comm_vs_opt": paper_claims.comm_vs_opt,
         "comm_vs_k": paper_claims.comm_vs_k,
         "comm_vs_m": paper_claims.comm_vs_m,
@@ -63,6 +65,19 @@ def main() -> None:
             failures += 1
             print(f"{name},-1,\"FAILED: {type(e).__name__}: {e}\"")
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    if args.only and os.path.exists(args.out):
+        # --only refreshes just its suite's rows; keep the others, but
+        # never keep stale rows for a suite that just FAILED (it has no
+        # entry in all_rows, so drop any previous one)
+        try:
+            with open(args.out) as f:
+                merged = json.load(f)
+        except (OSError, ValueError):
+            merged = {}
+        for name in suite:
+            merged.pop(name, None)
+        merged.update(all_rows)
+        all_rows = merged
     with open(args.out, "w") as f:
         json.dump(all_rows, f, indent=1, default=str)
     if failures:

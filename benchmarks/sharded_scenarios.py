@@ -1,0 +1,139 @@
+"""Scenario suite throughput: host loop vs batched vs mesh-sharded.
+
+For each adversarial noise scenario (core/scenarios.py) the same batch
+of tasks runs through the three execution forms of AccuratelyClassify:
+
+* host loop   — ``classify.run_accurately_classify`` per task,
+* batched     — ``core/batched.py`` (one jitted dispatch),
+* sharded     — ``core/sharded_batched.py`` over the host's ``players``
+  mesh (real collectives; 1 device ⇒ the same program with trivial
+  transport — run under
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` for a real
+  mesh).
+
+All three produce bit-identical protocol outputs (asserted), so the
+rows compare pure serving throughput plus the communication the ledger
+charges and the machine bytes the sharded engine's collectives moved;
+``validate_ledger`` runs on every sharded lane so a row only emits if
+the Theorem 4.1 accounting matches the measured payloads.
+
+Methodology matches benchmarks/batched_classify.py: all paths fully
+warmed, then timed in steady state.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import batched, classify, scenarios, sharded_batched, weak
+from repro.core.types import BoostConfig
+
+N = 1 << 12
+SCENARIOS = ("uniform", "targeted_heavy", "byzantine", "boundary",
+             "drift")
+
+
+def _host_loop(x, y, keys, cfg, cls):
+    out = []
+    for b in range(x.shape[0]):
+        try:
+            out.append(classify.run_accurately_classify(
+                jnp.asarray(x[b]), jnp.asarray(y[b]), keys[b], cfg, cls))
+        except RuntimeError:              # opt_budget exhausted: the
+            out.append(None)              # engines flag it as ok=False
+    return out
+
+
+def bench_scenario(name, B=8, m=256, k=4, noise=4, coreset=24, seed0=7):
+    cls = weak.Thresholds(n=N)
+    cfg = BoostConfig(k=k, coreset_size=coreset, domain_size=N,
+                      opt_budget=32)
+    spec = scenarios.ScenarioSpec(name=name, noise=noise)
+    x, y, ts = scenarios.make_scenario_batch(cls, B, m, k, spec,
+                                             seed0=seed0)
+    keys = jax.random.split(jax.random.key(0), B)
+    mesh = sharded_batched.make_players_mesh(k)
+
+    # fully warm all three paths, then time steady state
+    _host_loop(x, y, keys, cfg, cls)
+    batched.run_accurately_classify_batched(x, y, keys, cfg, cls)
+    sharded_batched.run_accurately_classify_sharded(x, y, keys, cfg,
+                                                    cls, mesh=mesh)
+
+    t0 = time.time()
+    host_out = _host_loop(x, y, keys, cfg, cls)
+    t_host = time.time() - t0
+    t0 = time.time()
+    bat_out = batched.run_accurately_classify_batched(x, y, keys, cfg,
+                                                      cls)
+    t_bat = time.time() - t0
+    t0 = time.time()
+    sh_out = sharded_batched.run_accurately_classify_sharded(
+        x, y, keys, cfg, cls, mesh=mesh)
+    t_sh = time.time() - t0
+
+    ok = [bool(bat_out.ok[b]) and bool(sh_out.ok[b])
+          and host_out[b] is not None for b in range(B)]
+    agree = all(
+        host_out[b].attempts == int(bat_out.attempts[b])
+        == int(sh_out.attempts[b])
+        and host_out[b].ledger.total_bits
+        == bat_out.ledger(b).total_bits == sh_out.ledger(b).total_bits
+        and np.array_equal(
+            np.asarray(host_out[b].hypotheses)[:host_out[b].rounds],
+            sh_out.hypotheses[b][:int(sh_out.rounds[b])])
+        for b in range(B) if ok[b])
+    assert agree and np.array_equal(bat_out.disputed, sh_out.disputed), \
+        f"engines disagree on scenario {name}"   # no row without parity
+    for b in range(B):
+        if ok[b]:
+            sh_out.validate_ledger(b)        # ledger ≡ measured payload
+    reports = [scenarios.scenario_report(ts[b], sh_out, b)
+               for b in range(B) if ok[b]]
+    assert reports, f"every lane exhausted opt_budget on {name}"
+    return {
+        "scenario": name, "B": B, "m": m, "k": k,
+        # what the adversary actually planted (byzantine flips a whole
+        # shard of m/k labels whatever the --noise knob says)
+        "noise": max(int(t.noise_count) for t in ts),
+        "host_tasks_per_s": round(B / max(t_host, 1e-9), 2),
+        "batched_tasks_per_s": round(B / max(t_bat, 1e-9), 2),
+        "sharded_tasks_per_s": round(B / max(t_sh, 1e-9), 2),
+        "agree": agree,
+        "ok": sum(ok),
+        "mesh_devices": int(sh_out.mesh_devices),
+        "bits_mean": int(sum(r["bits"] for r in reports) / len(reports)),
+        "collective_bytes_mean": int(sh_out.wire_bytes.mean()),
+        "guarantee_ok": all(r["guarantee_ok"] for r in reports),
+        "ledger_vs_payload": "validated",
+    }
+
+
+def run_all():
+    rows = []
+    for name in SCENARIOS:
+        r = bench_scenario(name)
+        rows.append({
+            "bench": f"sharded_scenarios_{name}",
+            "us_per_call": round(1e6 / max(r["sharded_tasks_per_s"],
+                                           1e-9), 1),
+            "derived": (f"host_tps={r['host_tasks_per_s']};"
+                        f"batched_tps={r['batched_tasks_per_s']};"
+                        f"sharded_tps={r['sharded_tasks_per_s']};"
+                        f"bits={r['bits_mean']};"
+                        f"agree={r['agree']};"
+                        f"guarantee_ok={r['guarantee_ok']}"),
+            **r,
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    import json
+
+    for row in run_all():
+        print(row["bench"], json.dumps(row))

@@ -72,6 +72,10 @@ def num_rounds_dynamic(cfg: BoostConfig, m_alive: jax.Array) -> jax.Array:
 
 def _attempt_body(cfg: BoostConfig, cls, x, y, x_orders, t_buf: int,
                   c: _TaskCarry) -> _TaskCarry:
+    # LOCKSTEP: core/sharded_batched.py mirrors this body (and the
+    # boost_attempt round body) with device-shard state + collectives;
+    # keep them in sync — tests/test_sharded_batched.py pins exact
+    # parity and fails on any divergence.
     key, sub = jax.random.split(c.key)
     m_alive = jnp.sum(c.alive.astype(jnp.int32))
     bound = num_rounds_dynamic(cfg, m_alive)
@@ -177,7 +181,7 @@ class BatchedClassifyResult:
         """Bit-identical to the Ledger the reference loop accumulates."""
         cfg, cls = self.cfg, self.cls
         k, mloc = self.x.shape[1], self.x.shape[2]
-        n = getattr(cls, "n", 1 << getattr(cls, "value_bits", 16))
+        n = L.domain_size(cls)
         m_bits_m = max(int(np.ceil(np.log2(max(k * mloc, 2)))), 1)
         led = Ledger()
         for a in range(int(self.attempts[b])):

@@ -153,7 +153,7 @@ def run_accurately_classify(x, y, key, cfg: BoostConfig, cls,
     stuck_history = []
     result = None
     m_bits_m = max(int(np.ceil(np.log2(max(k * mloc, 2)))), 1)
-    n = getattr(cls, "n", 1 << getattr(cls, "value_bits", 16))
+    n = L.domain_size(cls)
     for _attempt in range(cfg.opt_budget + 1):
         key, sub = jax.random.split(key)
         m_alive = int(alive_np.sum())

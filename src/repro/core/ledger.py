@@ -24,6 +24,13 @@ import math
 from repro.core.types import BoostConfig, Ledger
 
 
+def domain_size(cls) -> int:
+    """|U| of a weak class: explicit ``n`` (protocol classes) or the
+    2^value_bits grid of the feature track — THE convention every bit
+    charge derives from, defined once."""
+    return getattr(cls, "n", 1 << getattr(cls, "value_bits", 16))
+
+
 def point_bits(n: int) -> int:
     return max(1, math.ceil(math.log2(max(n, 2))))
 
@@ -44,7 +51,7 @@ def boost_attempt_ledger(cfg: BoostConfig, cls, m: int, rounds: int,
                          stuck: bool) -> Ledger:
     """Exact bits for one BoostAttempt run that produced ``rounds``
     hypotheses (and one extra stuck round if ``stuck``)."""
-    n = getattr(cls, "n", 1 << getattr(cls, "value_bits", 16))
+    n = domain_size(cls)
     T = cfg.num_rounds(m)
     wire_rounds = rounds + (1 if stuck else 0)     # stuck round still sent 2(a,b)
     led = Ledger(attempts=1, rounds=wire_rounds)
@@ -60,7 +67,7 @@ def theorem_41_bound(cfg: BoostConfig, cls, m: int, opt: int,
                      constant: float = 1.0) -> float:
     """O(OPT · k·log|S|·(d·log n + log|S|)) with an explicit constant and
     the coreset size standing in for O(d/ε²)."""
-    n = getattr(cls, "n", 1 << getattr(cls, "value_bits", 16))
+    n = domain_size(cls)
     logm = math.log2(max(m, 2))
     logn = math.log2(max(n, 2))
     d = cls.vc_dim

@@ -1,0 +1,273 @@
+"""Adversarial noise scenarios beyond uniform label flips.
+
+The resilience claims of the paper (Theorem 2.2 / 4.1) are adversarial:
+E_S(f) ≤ OPT holds for *any* sample, however the noise is placed and
+however the shards are partitioned.  Uniform random flips — the only
+noise `tasks.make_task` plants — are the weakest adversary that bound
+permits.  This module supplies the stronger ones, each targeting a
+different part of the protocol:
+
+``uniform``
+    Baseline: ``noise`` flips at uniformly random distinct examples.
+``targeted_heavy``
+    Flips one copy of each of the ``noise`` *most duplicated* points.
+    Every corrupted point becomes contradicting (both labels present in
+    S), i.e. pure hard-core mass: no hypothesis can be consistent, MW
+    drives the weight onto exactly these points, and the Impagliazzo-
+    style quarantine must find them (tests pin recall ≥ 0.9).
+``byzantine``
+    One colluding player flips its *entire shard* — the adversarial-
+    partition worst case (with the sort-order split that player owns a
+    contiguous domain region).  OPT jumps to O(m/k) and the protocol
+    must still terminate with E_S(f) ≤ OPT.
+``boundary``
+    All flips concentrated on the points nearest the target concept's
+    decision boundary, where a hypothesis-class learner is most easily
+    misled (label noise is indistinguishable from a shifted threshold
+    until the weights sharpen).
+``drift``
+    The flip budget is spread across ``waves`` disjoint domain regions.
+    Under the adversarial (sorted) split each region lives at a
+    different player, so successive stuck→quarantine attempts chase a
+    *moving* noise front instead of one hard core.
+
+All corruptors are pure numpy on the already-split ``[k, mloc]``
+arrays, deterministic in their rng, and return an explicit flip mask so
+tests can compute recall/precision of the quarantine against the
+planted ground truth.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import tasks, weak
+
+SCENARIOS = ("clean", "uniform", "targeted_heavy", "byzantine",
+             "boundary", "drift")
+
+
+def _x1d(x: np.ndarray) -> np.ndarray:
+    """The 1-D sort key of the domain points ([k·mloc] flat)."""
+    flat = x.reshape((-1,) + x.shape[2:])
+    return flat if flat.ndim == 1 else flat[:, 0]
+
+
+def _corrupt_uniform(rng, x, y, noise, params, cls):
+    m = y.size
+    flip = np.zeros(m, bool)
+    if noise > 0:
+        flip[rng.choice(m, size=min(noise, m), replace=False)] = True
+    return flip
+
+
+def _corrupt_targeted_heavy(rng, x, y, noise, params, cls):
+    """One flipped copy of each of the ``noise`` heaviest points.
+
+    Heaviness is multiplicity of the FULL point (whole feature row on
+    the feature track), because the adversary's power here is exactly
+    the hard-core mass a flipped copy creates: a point with a single
+    copy yields no contradiction.  A continuous sample has no
+    duplicates, so this adversary cannot materialise there — refuse
+    loudly instead of silently degrading to arbitrary flips.
+    """
+    flat = x.reshape((-1,) + x.shape[2:])
+    if flat.ndim == 2:
+        _, first_idx, counts = np.unique(flat, axis=0, return_index=True,
+                                         return_counts=True)
+        keys = np.arange(first_idx.size)
+    else:
+        keys, first_idx, counts = np.unique(flat, return_index=True,
+                                            return_counts=True)
+    if noise > 0 and counts.max(initial=0) < 2:
+        raise ValueError(
+            "targeted_heavy needs duplicated points to corrupt (its "
+            "flips must contradict surviving copies); this sample has "
+            "none — use a discrete domain or another scenario")
+    # heaviest first; ties broken by value so the choice is deterministic
+    order = np.lexsort((keys, -counts))
+    flip = np.zeros(y.size, bool)
+    flip[first_idx[order[:min(noise, first_idx.size)]]] = True
+    return flip
+
+
+def _corrupt_boundary(rng, x, y, noise, params, cls):
+    """Flips at the ``noise`` points nearest the target's boundary."""
+    xf = _x1d(x).astype(np.float64)
+    t, a, b = float(params[0]), float(params[1]), float(params[2])
+    if t == 3.0:                               # interval: both endpoints
+        dist = np.minimum(np.abs(xf - a), np.abs(xf - b))
+    elif t == 4.0:                             # stump: feature a, theta b
+        feat = x.reshape((-1,) + x.shape[2:])[:, int(a)].astype(np.float64)
+        dist = np.abs(feat - b)
+    else:                                      # threshold / singleton: a
+        dist = np.abs(xf - a)
+    flip = np.zeros(y.size, bool)
+    flip[np.argsort(dist, kind="stable")[:min(noise, y.size)]] = True
+    return flip
+
+
+def _corrupt_drift(rng, x, y, noise, params, cls, waves: int = 4):
+    """noise flips split across ``waves`` disjoint domain regions."""
+    m = y.size
+    order = np.argsort(_x1d(x), kind="stable")
+    flip = np.zeros(m, bool)
+    waves = max(min(waves, noise if noise else 1, m), 1)
+    bounds = np.linspace(0, m, waves + 1).astype(int)
+    per = [noise // waves + (1 if g < noise % waves else 0)
+           for g in range(waves)]
+    for g in range(waves):
+        seg = order[bounds[g]:bounds[g + 1]]
+        take = min(per[g], seg.size)
+        if take > 0:
+            flip[rng.choice(seg, size=take, replace=False)] = True
+    return flip
+
+
+_CORRUPTORS = {
+    "uniform": _corrupt_uniform,
+    "targeted_heavy": _corrupt_targeted_heavy,
+    "boundary": _corrupt_boundary,
+    "drift": _corrupt_drift,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSpec:
+    """A named adversary with its knobs (hashable, so batch builders can
+    key jit caches on it)."""
+
+    name: str
+    noise: int = 0
+    byzantine_player: int = 0
+    waves: int = 4
+
+    def __post_init__(self):
+        if self.name not in SCENARIOS:
+            raise ValueError(
+                f"unknown scenario {self.name!r}; pick from {SCENARIOS}")
+
+
+def corrupt_task(task: tasks.Task, spec: ScenarioSpec,
+                 seed: int = 0) -> tasks.Task:
+    """Apply a scenario to a CLEAN task; returns a new Task whose
+    ``flipped`` mask marks exactly the corrupted examples."""
+    y = np.array(task.y)
+    k, mloc = y.shape
+    rng = np.random.default_rng(np.random.SeedSequence([seed, 0x5CE7A]))
+    if spec.name == "clean":
+        flip = np.zeros(y.size, bool)
+    elif spec.name == "byzantine":
+        j = spec.byzantine_player % k
+        flip = np.zeros((k, mloc), bool)
+        flip[j] = True
+        flip = flip.reshape(-1)
+    else:
+        flip = _CORRUPTORS[spec.name](
+            rng, task.x, y.reshape(-1), spec.noise, task.target_params,
+            task.cls, **({"waves": spec.waves} if spec.name == "drift"
+                         else {}))
+    yf = y.reshape(-1)
+    yf[flip] = -yf[flip]
+    return dataclasses.replace(
+        task, y=yf.reshape(k, mloc).astype(np.int8),
+        noise_count=int(flip.sum()), flipped=flip.reshape(k, mloc),
+        scenario=spec.name)
+
+
+def make_scenario_task(cls, m: int, k: int, spec: ScenarioSpec,
+                       seed: int = 0,
+                       adversarial_split: bool = True) -> tasks.Task:
+    """Clean task from ``tasks.make_task`` (identical x/target streams),
+    then scenario corruption on the split arrays."""
+    base = tasks.make_task(cls, m=m, k=k, noise=0, seed=seed,
+                           adversarial_split=adversarial_split)
+    return corrupt_task(base, spec, seed=seed)
+
+
+def make_scenario_batch(cls, B: int, m: int, k: int, spec: ScenarioSpec,
+                        seed0: int = 0, adversarial_split: bool = True):
+    """B corrupted tasks stacked for the batched/sharded engines."""
+    ts = [make_scenario_task(cls, m=m, k=k, spec=spec, seed=seed0 + b,
+                             adversarial_split=adversarial_split)
+          for b in range(B)]
+    return (np.stack([t.x for t in ts]), np.stack([t.y for t in ts]),
+            ts)
+
+
+# ---------------------------------------------------------------------------
+# Ground-truth helpers for the guarantee tests / serving stats.
+# ---------------------------------------------------------------------------
+
+def planted_points(task: tasks.Task) -> np.ndarray:
+    """Unique domain points whose labels the scenario corrupted."""
+    if task.flipped is None or not task.flipped.any():
+        return np.zeros((0,) + tuple(task.x.shape[2:]), task.x.dtype)
+    flat = task.flat_x
+    sel = task.flipped.reshape(-1)
+    return (np.unique(flat[sel], axis=0) if flat.ndim == 2
+            else np.unique(flat[sel]))
+
+
+def contradicted_points(task: tasks.Task) -> np.ndarray:
+    """Points carrying BOTH labels in S — the sub-multiset no classifier
+    can be consistent with (each contributes ≥ min(n₊, n₋) to OPT)."""
+    xf, yf = task.flat_x, task.flat_y
+    if xf.ndim == 2:                     # feature rows: O(m²) but tiny m
+        eq = (xf[:, None, :] == xf[None]).all(-1)
+        both = ((eq & (yf[None] > 0)).any(1)
+                & (eq & (yf[None] < 0)).any(1))
+        pts = xf[both]
+        return np.unique(pts, axis=0) if pts.size else pts
+    vals = np.unique(xf)
+    pos = np.isin(vals, xf[yf > 0])
+    neg = np.isin(vals, xf[yf < 0])
+    return vals[pos & neg]
+
+
+def quarantine_recall(dispute_x: np.ndarray, target_pts: np.ndarray,
+                      ) -> float:
+    """Fraction of the target point set that ended up quarantined."""
+    tgt = np.asarray(target_pts)
+    if tgt.shape[0] == 0:
+        return 1.0
+    dis = np.asarray(dispute_x)
+    if tgt.ndim == 2:
+        hit = (dis[:, None, :] == tgt[None]).all(-1).any(0) \
+            if dis.shape[0] else np.zeros(tgt.shape[0], bool)
+    else:
+        hit = np.isin(tgt, dis)
+    return float(hit.mean())
+
+
+def scenario_report(task: tasks.Task, result, b: int | None = None,
+                    ) -> dict:
+    """Guarantee stats of one solved task: E_S(f) vs OPT, quarantine
+    recall on contradicted/planted points.  ``result`` is either a
+    ClassifyResult or a Batched/ShardedClassifyResult with lane b."""
+    import jax.numpy as jnp
+
+    from repro.core import classify
+
+    res = result.per_task(b) if b is not None else result
+    f = classify.make_classifier(task.cls, res)
+    errs = int(weak.empirical_errors(f(jnp.asarray(task.flat_x)),
+                                     jnp.asarray(task.flat_y)))
+    opt = tasks.true_opt(task)
+    contr = contradicted_points(task)
+    return {
+        "scenario": task.scenario,
+        "errors": errs,
+        "opt": opt,
+        "guarantee_ok": errs <= opt,
+        "attempts": res.attempts,
+        "disputed": int(res.dispute_count),
+        "contradicted": int(contr.shape[0]),
+        "recall_contradicted": quarantine_recall(
+            np.asarray(res.dispute_x), contr),
+        "recall_planted": quarantine_recall(
+            np.asarray(res.dispute_x), planted_points(task)),
+        "bits": res.ledger.total_bits,
+    }

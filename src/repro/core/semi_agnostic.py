@@ -138,7 +138,7 @@ def run_semi_agnostic(x, y, key, cfg: BoostConfig, cls,
                             dispute_neg=jnp.asarray(neg))
     preds = f(jnp.asarray(xf))
     final_errors = int(weak.empirical_errors(preds, jnp.asarray(yf)))
-    n = getattr(cls, "n", 1 << getattr(cls, "value_bits", 16))
+    n = L.domain_size(cls)
     led = L.boost_attempt_ledger(cfg, cls, m, num_rounds, stuck=False)
     led.bits_dispute = int(wf.sum()) * L.example_bits(n) * cfg.k
     return SemiAgnosticResult(

@@ -1,0 +1,440 @@
+"""Mesh-sharded batched AccuratelyClassify — k players as device shards.
+
+`core/batched.py` runs B tasks in one jitted program, but it still
+*simulates* the k players inside a single device: the "coreset
+transmission" of step 2(a) is a vmap lane, not a message.  This module
+runs the identical protocol over a real device mesh with a ``players``
+axis: each device holds only its players' shards of every task, the
+per-round coreset and weight-sum exchange is an actual
+``lax.all_gather`` (the star topology's k → center messages), the alive
+count is a ``lax.psum``, and the §2.2 no-center variant broadcasts the
+acting center's hypothesis back with a ``psum`` — so the bytes the
+communication ledger charges correspond to payloads that really cross
+device boundaries.
+
+Two properties are load-bearing and tested (tests/test_sharded_batched):
+
+* **Bit-identical parity.**  Given the same per-task keys, every output
+  (hypotheses, quarantine masks, stuck/round/alive histories, ledger
+  bit counts) equals `core/batched.py`'s exactly.  This holds by
+  construction: the per-player steps (coreset selection, weight sums,
+  MW updates) touch only local rows, the pooled arrays entering the
+  center ERM are reassembled in player order by the all_gather, and
+  integer/float op order is unchanged — a player living on another
+  device computes the same row it computed as a vmap lane.
+
+* **Ledger ≡ payload.**  The engine counts, *at the collective sites*,
+  how many coreset examples and weight-sum scalars each attempt
+  gathered (increments are taken from the gathered arrays' shapes, so
+  the counter moves iff the collective executes, by its payload size).
+  ``validate_ledger`` then checks the Theorem 4.1 accounting against
+  those measured counts: ledger coreset bits = gathered examples ×
+  ``example_bits(n)``, ledger weight-sum bits = per-attempt gathered
+  scalars × ``weight_sum_bits(m_alive, T)``, quarantine messages =
+  k·P per stuck attempt.  The accounting is validated by construction,
+  not by trust.
+
+The mesh's ``players`` axis size p must divide k; each device then
+hosts kloc = k/p players (p = k is one player per device).  On a
+single-device host the same program runs with p = 1 — the collectives
+still execute (over an axis of size 1), so the wire accounting and the
+program structure are identical, only the transport is trivial.  Use
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to simulate an
+N-device CPU mesh (see TESTING.md).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import approximation, batched, classify, ledger as L, weak
+from repro.core import weights as W
+from repro.core.boost_attempt import _center_erm, _gather_coreset, _shard_map
+from repro.core.types import BoostConfig
+
+AXIS = "players"
+
+
+def make_players_mesh(k: int, devices=None) -> Mesh:
+    """A 1-axis ``players`` mesh of p devices, p = the largest divisor
+    of k the host can supply (p = 1 degenerates to the local engine,
+    p = k is one player per device)."""
+    devices = list(jax.devices() if devices is None else devices)
+    p = max(d for d in range(1, min(k, len(devices)) + 1) if k % d == 0)
+    return Mesh(np.asarray(devices[:p]), (AXIS,))
+
+
+class _RoundCarry(NamedTuple):
+    t: jax.Array            # hypotheses produced so far
+    it: jax.Array           # loop iterations (wire rounds)
+    stuck: jax.Array
+    hits: jax.Array         # [kloc, mloc] — local players only
+    key: jax.Array
+    h_params: jax.Array     # [t_buf, 4] replicated
+    core_x: jax.Array       # [k, c(, F)] pooled coreset (all_gather output)
+    core_y: jax.Array       # [k, c]
+    min_loss: jax.Array
+    wire_core: jax.Array    # int32 — coreset examples gathered this attempt
+    wire_ws: jax.Array      # int32 — weight-sum scalars gathered this attempt
+    wire_bytes: jax.Array   # int32 — machine bytes of those collectives
+
+
+class _TaskCarry(NamedTuple):
+    attempt: jax.Array
+    done: jax.Array
+    alive: jax.Array        # [kloc, mloc]
+    disputed: jax.Array     # [kloc, mloc]
+    key: jax.Array
+    h_params: jax.Array
+    rounds: jax.Array
+    min_loss: jax.Array
+    hist_stuck: jax.Array   # [A]
+    hist_rounds: jax.Array  # [A]
+    hist_alive: jax.Array   # [A]
+    hist_p: jax.Array       # [A]
+    hist_wire_core: jax.Array   # [A] per-attempt gathered coreset examples
+    hist_wire_ws: jax.Array     # [A] per-attempt gathered weight-sum scalars
+    wire_bytes: jax.Array       # total collective payload, machine bytes
+    wire_q_points: jax.Array    # quarantine point-set messages (k·P total)
+    wire_q_counts: jax.Array    # quarantine count reports (k·P total)
+
+
+def _slice_player_keys(keys_all: jax.Array, kloc: int) -> jax.Array:
+    """This device's kloc keys out of the k per-player keys — sliced on
+    the raw key data because dynamic_slice on typed keys is flaky on the
+    pinned 0.4.x toolchain."""
+    pid = jax.lax.axis_index(AXIS)
+    data = jax.random.key_data(keys_all)                  # [k, key_words]
+    loc = jax.lax.dynamic_slice_in_dim(data, pid * kloc, kloc, axis=0)
+    return jax.random.wrap_key_data(loc)
+
+
+def _round_body(cfg: BoostConfig, cls, k: int, x, y, alive, x_orders,
+                y_sorted, alive_sorted, no_center: bool,
+                c: _RoundCarry) -> _RoundCarry:
+    # LOCKSTEP: this is boost_attempt._round_body with the vmap-lane
+    # pooling replaced by collectives (and _attempt_body below mirrors
+    # batched._attempt_body the same way).  Any semantic change to the
+    # round/attempt bodies there must land here too — the exact-parity
+    # tests (tests/test_sharded_batched.py) fail on any divergence.
+    kloc = x.shape[0]
+    key, kc = jax.random.split(c.key)
+    keys_all = jax.random.split(kc, k)    # the host loop's k-key stream
+    keys = _slice_player_keys(keys_all, kloc)
+    # --- players (local rows only): step 2(a) coreset + 2(b) sums ------
+    idx = jax.vmap(
+        lambda kk, xx, yy, hh, aa, oo, yso, aso:
+        approximation.select_coreset(
+            kk, xx if xx.ndim == 1 else xx[:, 0], yy, hh, aa,
+            cfg.coreset_size, cfg.deterministic_coreset and x.ndim == 2,
+            order=oo, y_sorted=yso, alive_sorted=aso)
+    )(keys, x, y, c.hits, alive, x_orders, y_sorted, alive_sorted)
+    cx, cy = _gather_coreset(x, y, idx)                   # [kloc, c(, F)]
+    log_wsums = jax.vmap(W.log_weight_sum)(c.hits, alive)  # [kloc]
+    # --- the wire: every player's coreset + one scalar to the center ---
+    cx_all = jax.lax.all_gather(cx, AXIS)                 # [p, kloc, c(, F)]
+    cy_all = jax.lax.all_gather(cy, AXIS)
+    ws_all = jax.lax.all_gather(log_wsums, AXIS)          # [p, kloc]
+    # payload counters, taken from the gathered arrays themselves so
+    # they move iff the collective executed, by its actual size
+    n_examples = int(np.prod(cy_all.shape))               # k · c, exactly
+    n_scalars = int(np.prod(ws_all.shape))                # k
+    n_bytes = (cx_all.size * cx_all.dtype.itemsize
+               + cy_all.size * cy_all.dtype.itemsize
+               + ws_all.size * ws_all.dtype.itemsize)
+    cx_all = cx_all.reshape((k,) + cx_all.shape[2:])      # player order
+    cy_all = cy_all.reshape((k,) + cy_all.shape[2:])
+    ws_all = ws_all.reshape(-1)
+    mix = W.mixture_weights(ws_all)
+    # --- center: step 2(c)+(d) pooled weighted ERM ----------------------
+    if no_center:
+        # §2.2: the first device acts as center; only it runs the ERM and
+        # the result is psum-broadcast back (exact: all other summands
+        # are literal zeros).
+        pid = jax.lax.axis_index(AXIS)
+        h0, loss0 = jax.lax.cond(
+            pid == 0,
+            lambda: _center_erm(cls, cx_all, cy_all, mix, cfg.coreset_size),
+            lambda: (jnp.zeros((weak.PARAM_DIM,), jnp.float32),
+                     jnp.float32(0)))
+        h = jax.lax.psum(jnp.where(pid == 0, h0, 0.0), AXIS)
+        loss = jax.lax.psum(jnp.where(pid == 0, loss0, 0.0), AXIS)
+    else:
+        h, loss = _center_erm(cls, cx_all, cy_all, mix, cfg.coreset_size)
+    stuck_now = loss > cfg.weak_threshold
+    # --- players: step 2(f) multiplicative-weights update (local) ------
+    pred = cls.predict(h, x)
+    new_hits = jnp.where(stuck_now, c.hits,
+                         W.update_hits(c.hits, pred == y, alive))
+    h_params = c.h_params.at[c.t].set(
+        jnp.where(stuck_now, c.h_params[c.t], h))
+    return _RoundCarry(
+        t=jnp.where(stuck_now, c.t, c.t + 1),
+        it=c.it + 1,
+        stuck=stuck_now,
+        hits=new_hits,
+        key=key,
+        h_params=h_params,
+        core_x=cx_all, core_y=cy_all,
+        min_loss=loss,
+        wire_core=c.wire_core + n_examples,
+        wire_ws=c.wire_ws + n_scalars,
+        wire_bytes=c.wire_bytes + n_bytes,
+    )
+
+
+def _attempt_body(cfg: BoostConfig, cls, k: int, x, y, x_orders,
+                  t_buf: int, no_center: bool,
+                  c: _TaskCarry) -> _TaskCarry:
+    kloc, mloc = x.shape[0], x.shape[1]
+    key, sub = jax.random.split(c.key)
+    m_alive = jax.lax.psum(jnp.sum(c.alive.astype(jnp.int32)), AXIS)
+    bound = batched.num_rounds_dynamic(cfg, m_alive)
+    # per-attempt sorted gathers (alive changes between attempts)
+    y_sorted = jnp.take_along_axis(y, x_orders, axis=1)
+    alive_sorted = jnp.take_along_axis(c.alive, x_orders, axis=1)
+    rc0 = _RoundCarry(
+        t=jnp.int32(0), it=jnp.int32(0), stuck=jnp.asarray(False),
+        hits=W.init_hits((kloc, mloc)), key=sub,
+        h_params=jnp.zeros((t_buf, weak.PARAM_DIM), jnp.float32),
+        core_x=jnp.zeros((k, cfg.coreset_size) + x.shape[2:], x.dtype),
+        core_y=jnp.zeros((k, cfg.coreset_size), y.dtype),
+        min_loss=jnp.float32(0),
+        wire_core=jnp.int32(0), wire_ws=jnp.int32(0),
+        wire_bytes=jnp.int32(0),
+    )
+
+    def cond(rc: _RoundCarry):
+        return (~rc.stuck) & (rc.t < bound)
+
+    out = jax.lax.while_loop(
+        cond,
+        functools.partial(_round_body, cfg, cls, k, x, y, c.alive,
+                          x_orders, y_sorted, alive_sorted, no_center),
+        rc0)
+    stuck = out.stuck
+    # ---- full-point quarantine: the pooled stuck coreset is replicated
+    # (it is the all_gather output), each device kills its local copies.
+    core_flat = out.core_x.reshape((-1,) + out.core_x.shape[2:])
+    dead_new = c.alive & classify.match_points(x, core_flat) & stuck
+    p_count = jnp.where(stuck, classify.distinct_count(core_flat), 0)
+    a = c.attempt
+    return _TaskCarry(
+        attempt=a + 1,
+        done=~stuck,
+        alive=c.alive & ~dead_new,
+        disputed=c.disputed | dead_new,
+        key=key,
+        h_params=jnp.where(stuck, c.h_params, out.h_params),
+        rounds=jnp.where(stuck, c.rounds, out.t),
+        min_loss=out.min_loss,
+        hist_stuck=c.hist_stuck.at[a].set(stuck),
+        hist_rounds=c.hist_rounds.at[a].set(out.t),
+        hist_alive=c.hist_alive.at[a].set(m_alive),
+        hist_p=c.hist_p.at[a].set(p_count),
+        hist_wire_core=c.hist_wire_core.at[a].set(out.wire_core),
+        hist_wire_ws=c.hist_wire_ws.at[a].set(out.wire_ws),
+        wire_bytes=c.wire_bytes + out.wire_bytes,
+        wire_q_points=c.wire_q_points + k * p_count,
+        wire_q_counts=c.wire_q_counts + k * p_count,
+    )
+
+
+def _classify_one_sharded(x, y, alive0, key, cfg: BoostConfig, cls,
+                          k: int, t_buf: int,
+                          no_center: bool) -> _TaskCarry:
+    """One task's whole protocol on this device's [kloc, mloc] shard.
+    vmap-ed over the leading task axis inside shard_map."""
+    a_max = cfg.opt_budget + 1
+    x1d = x if x.ndim == 2 else x[:, :, 0]
+    x_orders = jax.vmap(jnp.argsort)(x1d)
+    carry = _TaskCarry(
+        attempt=jnp.int32(0), done=jnp.asarray(False),
+        alive=alive0, disputed=jnp.zeros_like(alive0),
+        key=key,
+        h_params=jnp.zeros((t_buf, weak.PARAM_DIM), jnp.float32),
+        rounds=jnp.int32(0), min_loss=jnp.float32(0),
+        hist_stuck=jnp.zeros((a_max,), bool),
+        hist_rounds=jnp.zeros((a_max,), jnp.int32),
+        hist_alive=jnp.zeros((a_max,), jnp.int32),
+        hist_p=jnp.zeros((a_max,), jnp.int32),
+        hist_wire_core=jnp.zeros((a_max,), jnp.int32),
+        hist_wire_ws=jnp.zeros((a_max,), jnp.int32),
+        wire_bytes=jnp.int32(0),
+        wire_q_points=jnp.int32(0), wire_q_counts=jnp.int32(0),
+    )
+
+    def cond(cy: _TaskCarry):
+        return (~cy.done) & (cy.attempt < a_max)
+
+    return jax.lax.while_loop(
+        cond,
+        functools.partial(_attempt_body, cfg, cls, k, x, y, x_orders,
+                          t_buf, no_center),
+        carry)
+
+
+@functools.lru_cache(maxsize=None)
+def _build_sharded(mesh: Mesh, cfg: BoostConfig, cls, t_buf: int,
+                   no_center: bool):
+    k = cfg.k
+    p = mesh.shape[AXIS]
+    if k % p != 0:
+        raise ValueError(f"players mesh size {p} must divide k={k}")
+
+    def per_device(x, y, alive, keys):
+        one = functools.partial(_classify_one_sharded, cfg=cfg, cls=cls,
+                                k=k, t_buf=t_buf, no_center=no_center)
+        out = jax.vmap(one)(x, y, alive, keys)
+        return {
+            "attempt": out.attempt, "done": out.done,
+            "alive": out.alive, "disputed": out.disputed,
+            "h_params": out.h_params, "rounds": out.rounds,
+            "min_loss": out.min_loss,
+            "hist_stuck": out.hist_stuck, "hist_rounds": out.hist_rounds,
+            "hist_alive": out.hist_alive, "hist_p": out.hist_p,
+            "hist_wire_core": out.hist_wire_core,
+            "hist_wire_ws": out.hist_wire_ws,
+            "wire_bytes": out.wire_bytes,
+            "wire_q_points": out.wire_q_points,
+            "wire_q_counts": out.wire_q_counts,
+        }
+
+    sharded = P(None, AXIS)
+    in_specs = (sharded, sharded, sharded, P())
+    out_specs = {
+        "attempt": P(), "done": P(), "alive": sharded,
+        "disputed": sharded, "h_params": P(), "rounds": P(),
+        "min_loss": P(), "hist_stuck": P(), "hist_rounds": P(),
+        "hist_alive": P(), "hist_p": P(), "hist_wire_core": P(),
+        "hist_wire_ws": P(), "wire_bytes": P(), "wire_q_points": P(),
+        "wire_q_counts": P(),
+    }
+    return jax.jit(_shard_map(per_device, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs))
+
+
+@dataclasses.dataclass
+class ShardedClassifyResult(batched.BatchedClassifyResult):
+    """BatchedClassifyResult + the measured collective payloads.
+
+    ``per_task``, ``classifier`` and ``ledger`` are inherited unchanged
+    (the protocol state is bit-identical to the local batched engine);
+    the wire_* fields record what the collectives actually moved.
+    """
+
+    hist_wire_core: np.ndarray = None   # [B, A] coreset examples gathered
+    hist_wire_ws: np.ndarray = None     # [B, A] weight-sum scalars gathered
+    wire_bytes: np.ndarray = None       # [B] machine bytes of collectives
+    wire_q_points: np.ndarray = None    # [B] quarantine point messages
+    wire_q_counts: np.ndarray = None    # [B] quarantine count reports
+    mesh_devices: int = 1
+
+    def wire_summary(self, b: int) -> dict:
+        return {
+            "coreset_examples": int(self.hist_wire_core[b].sum()),
+            "weight_sum_scalars": int(self.hist_wire_ws[b].sum()),
+            "collective_bytes": int(self.wire_bytes[b]),
+            "quarantine_point_msgs": int(self.wire_q_points[b]),
+            "quarantine_count_msgs": int(self.wire_q_counts[b]),
+            "mesh_devices": int(self.mesh_devices),
+        }
+
+    def validate_ledger(self, b: int) -> dict:
+        """Cross-check Theorem 4.1 accounting against measured payloads.
+
+        Raises AssertionError on any mismatch; returns the comparison.
+        Checks, per task:
+        * ledger coreset bits == gathered examples × example_bits(n);
+        * ledger weight-sum bits == Σ_attempts gathered scalars ×
+          weight_sum_bits(m_alive, T) with per-attempt m_alive;
+        * per attempt, gathered payload == wire_rounds · k · c examples
+          and wire_rounds · k scalars (the protocol's message pattern);
+        * quarantine messages == k · Σ P over stuck attempts.
+        """
+        cfg, cls = self.cfg, self.cls
+        n = L.domain_size(cls)
+        led = self.ledger(b)
+        n_att = int(self.attempts[b])
+        got_core = int(self.hist_wire_core[b, :n_att].sum())
+        got_ws = int(self.hist_wire_ws[b, :n_att].sum())
+        exp_ws_bits = 0
+        for a in range(n_att):
+            wire_rounds = int(self.hist_rounds[b, a]) \
+                + (1 if self.hist_stuck[b, a] else 0)
+            assert int(self.hist_wire_core[b, a]) == \
+                wire_rounds * cfg.k * cfg.coreset_size, (b, a)
+            assert int(self.hist_wire_ws[b, a]) == wire_rounds * cfg.k, \
+                (b, a)
+            m_a = max(int(self.hist_alive[b, a]), 2)
+            exp_ws_bits += int(self.hist_wire_ws[b, a]) \
+                * L.weight_sum_bits(m_a, cfg.num_rounds(m_a))
+        assert led.bits_coresets == got_core * L.example_bits(n), (
+            led.bits_coresets, got_core)
+        assert led.bits_weight_sums == exp_ws_bits, (
+            led.bits_weight_sums, exp_ws_bits)
+        p_total = int(self.hist_p[b, :n_att][
+            np.asarray(self.hist_stuck[b, :n_att], bool)].sum())
+        assert int(self.wire_q_points[b]) == cfg.k * p_total
+        assert int(self.wire_q_counts[b]) == cfg.k * p_total
+        return {
+            "bits_coresets": led.bits_coresets,
+            "coreset_examples_gathered": got_core,
+            "bits_weight_sums": led.bits_weight_sums,
+            "weight_sum_scalars_gathered": got_ws,
+            "quarantine_msgs": int(self.wire_q_points[b]),
+            "collective_bytes": int(self.wire_bytes[b]),
+        }
+
+
+def run_accurately_classify_sharded(x, y, keys, cfg: BoostConfig, cls,
+                                    mesh: Mesh | None = None, alive=None,
+                                    no_center: bool = False,
+                                    ) -> ShardedClassifyResult:
+    """B-task AccuratelyClassify over a real ``players`` device mesh.
+
+    Same contract as ``batched.run_accurately_classify_batched`` (and
+    bit-identical outputs on identical inputs); ``mesh`` defaults to
+    ``make_players_mesh(k)`` over the host's devices.
+    """
+    x = jnp.asarray(x)
+    y = jnp.asarray(y)
+    B, k, mloc = x.shape[0], x.shape[1], x.shape[2]
+    if k != cfg.k:
+        raise ValueError(f"x has {k} players but cfg.k={cfg.k}")
+    keys = jnp.asarray(keys)
+    if keys.ndim == 0:
+        keys = jax.random.split(keys, B)
+    if keys.shape[0] != B:
+        raise ValueError(f"need {B} task keys, got shape {keys.shape}")
+    if alive is None:
+        alive = jnp.ones((B, k, mloc), bool)
+    else:
+        alive = jnp.asarray(alive)
+    if mesh is None:
+        mesh = make_players_mesh(k)
+    t_buf = cfg.num_rounds(k * mloc)
+    fn = _build_sharded(mesh, cfg, cls, t_buf, no_center)
+    out = jax.device_get(fn(x, y, alive, keys))
+    return ShardedClassifyResult(
+        hypotheses=out["h_params"], rounds=out["rounds"],
+        ok=np.asarray(out["done"]), attempts=out["attempt"],
+        alive=out["alive"], disputed=out["disputed"],
+        min_loss=out["min_loss"],
+        hist_stuck=out["hist_stuck"], hist_rounds=out["hist_rounds"],
+        hist_alive=out["hist_alive"], hist_p=out["hist_p"],
+        x=np.asarray(x), y=np.asarray(y), alive0=np.asarray(alive),
+        cfg=cfg, cls=cls,
+        hist_wire_core=out["hist_wire_core"],
+        hist_wire_ws=out["hist_wire_ws"],
+        wire_bytes=out["wire_bytes"],
+        wire_q_points=out["wire_q_points"],
+        wire_q_counts=out["wire_q_counts"],
+        mesh_devices=mesh.shape[AXIS])

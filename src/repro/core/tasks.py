@@ -24,6 +24,8 @@ class Task:
     target_params: np.ndarray
     noise_count: int         # number of flipped labels (OPT ≤ this)
     cls: object
+    flipped: np.ndarray | None = None   # [k, m_loc] bool — planted noise
+    scenario: str = "uniform"           # which adversary corrupted S
 
     @property
     def flat_x(self):
@@ -86,13 +88,21 @@ def make_task(cls, m: int, k: int, noise: int, seed: int = 0,
 
 
 def make_batch(cls, B: int, m: int, k: int, noise: int, seed0: int = 0,
-               adversarial_split: bool = True):
+               adversarial_split: bool = True, scenario: str | None = None):
     """B independent tasks stacked for the batched engine.
 
     Returns (x [B, k, m/k(, F)], y [B, k, m/k], tasks list) — the one
     batch constructor shared by serving, benchmarks, examples and
     tests, so per-task seeding/splitting can never drift between them.
+    ``scenario`` routes corruption through core/scenarios.py instead of
+    the default uniform flips (None keeps the historical RNG stream).
     """
+    if scenario is not None:
+        from repro.core import scenarios
+        spec = scenarios.ScenarioSpec(name=scenario, noise=noise)
+        return scenarios.make_scenario_batch(
+            cls, B, m, k, spec, seed0=seed0,
+            adversarial_split=adversarial_split)
     ts = [make_task(cls, m=m, k=k, noise=noise, seed=seed0 + b,
                     adversarial_split=adversarial_split)
           for b in range(B)]

@@ -7,19 +7,27 @@ Two workloads share this entry point:
   are what the dry-run lowers at production shapes.
 * ``--workload classify`` — serve B independent AccuratelyClassify
   boosting tasks as ONE device dispatch via the batched engine
-  (core/batched.py): multi-tenant protocol serving, where each request
-  is a full resilient-boosting task and throughput is tasks/sec.
+  (core/batched.py), or, with ``--engine sharded``, over a real
+  ``players`` device mesh (core/sharded_batched.py) where the per-round
+  coreset/weight-sum exchange is an actual collective and the ledger is
+  validated against the measured payloads.  ``--scenario`` picks the
+  adversarial noise model (core/scenarios.py): uniform flips, targeted
+  flips on the heaviest points, a byzantine player corrupting its whole
+  shard, boundary-hugging noise, or drifting noise waves.
 
 Usage:
     python -m repro.launch.serve --arch qwen3-32b --smoke \
         --batch 4 --prompt-len 64 --gen 16
     python -m repro.launch.serve --workload classify \
         --batch 32 --m 512 --k 4 --noise 2
+    python -m repro.launch.serve --workload classify --engine sharded \
+        --scenario byzantine --batch 8 --m 512 --k 4
 """
 
 from __future__ import annotations
 
 import argparse
+import functools
 import json
 import time
 
@@ -78,7 +86,7 @@ def run(args) -> dict:
 
 def run_classify(args) -> dict:
     """Serve a batch of B boosting tasks in one jitted dispatch."""
-    from repro.core import batched, tasks, weak
+    from repro.core import batched, scenarios, sharded_batched, tasks, weak
     from repro.core.types import BoostConfig
 
     cls = weak.make_class(args.cls, n=args.domain,
@@ -88,21 +96,50 @@ def run_classify(args) -> dict:
         opt_budget=args.opt_budget,
         deterministic_coreset=args.cls != "stumps")
     B = args.batch
-    x, y, _ = tasks.make_batch(cls, B, args.m, args.k, args.noise,
-                               seed0=args.seed)
+    x, y, ts = tasks.make_batch(cls, B, args.m, args.k, args.noise,
+                                seed0=args.seed, scenario=args.scenario)
     keys = jax.random.split(jax.random.key(args.seed), B)
+    if args.engine == "sharded":
+        run = functools.partial(
+            sharded_batched.run_accurately_classify_sharded,
+            mesh=sharded_batched.make_players_mesh(args.k))
+    else:
+        run = batched.run_accurately_classify_batched
     # compile once, then measure the steady-state dispatch
-    batched.run_accurately_classify_batched(x, y, keys, cfg, cls)
+    run(x, y, keys, cfg, cls)
     t0 = time.time()
-    res = batched.run_accurately_classify_batched(x, y, keys, cfg, cls)
+    res = run(x, y, keys, cfg, cls)
     wall = time.time() - t0
     result = {
-        "workload": "classify", "batch": B, "m": args.m, "k": args.k,
-        "class": args.cls, "noise": args.noise,
+        "workload": "classify", "engine": args.engine, "batch": B,
+        "m": args.m, "k": args.k, "class": args.cls,
+        "noise": args.noise, "scenario": args.scenario or "uniform",
         "ok": int(res.ok.sum()), "attempts_max": int(res.attempts.max()),
         "wall_s": round(wall, 4),
         "tasks_per_s": round(B / max(wall, 1e-9), 2),
     }
+    if args.scenario is not None:
+        # the adversary decides how much it corrupts (byzantine flips a
+        # whole shard regardless of --noise): report what was planted
+        result["noise"] = max(int(t.noise_count) for t in ts)
+        reports = [scenarios.scenario_report(ts[b], res, b)
+                   for b in range(B) if res.ok[b]]
+        result["guarantee_ok"] = int(sum(r["guarantee_ok"]
+                                         for r in reports))
+        result["recall_contradicted_min"] = round(
+            min((r["recall_contradicted"] for r in reports),
+                default=1.0), 3)
+        result["bits_max"] = max((r["bits"] for r in reports), default=0)
+    if args.engine == "sharded":
+        validated = 0
+        for b in range(B):
+            if res.ok[b]:
+                res.validate_ledger(b)
+                validated += 1
+        result["mesh_devices"] = int(res.mesh_devices)
+        result["ledger_vs_payload"] = (f"validated_{validated}/{B}"
+                                       if validated else "no_ok_lanes")
+        result["collective_bytes_max"] = int(res.wire_bytes.max())
     print(json.dumps(result))
     return result
 
@@ -126,6 +163,11 @@ def main():
     ap.add_argument("--coreset", type=int, default=100)
     ap.add_argument("--features", type=int, default=8)
     ap.add_argument("--opt-budget", type=int, default=16)
+    ap.add_argument("--engine", default="batched",
+                    choices=["batched", "sharded"])
+    ap.add_argument("--scenario", default=None,
+                    choices=[None, "clean", "uniform", "targeted_heavy",
+                             "byzantine", "boundary", "drift"])
     args = ap.parse_args()
     if args.workload == "classify":
         run_classify(args)

@@ -119,6 +119,56 @@ def test_ledger_monotonicity(k, rounds, m, coreset):
         c2, cls, m, rounds, stuck=False).total_bits >= a.total_bits
 
 
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 64), st.integers(4, 10 ** 7),
+       st.integers(16, 2048), st.integers(0, 1), st.data())
+def test_ledger_within_theorem_41_bound(k, m, coreset, stuck, data):
+    """One attempt's exact charged bits sit under the Theorem 4.1 form
+    O(k·log|S|·(d·log n + log|S|)) with a small explicit constant (the
+    1.5 slack absorbs the hypothesis-broadcast and weight-sum terms the
+    asymptotic form hides — measured worst ratio ≈ 1.07)."""
+    cls = weak.Thresholds(n=N)
+    cfg = BoostConfig(k=k, coreset_size=coreset, domain_size=N)
+    T = cfg.num_rounds(m)
+    rounds = data.draw(st.integers(1, T), label="rounds")
+    led = ledger.boost_attempt_ledger(cfg, cls, m, rounds, bool(stuck))
+    bound = ledger.theorem_41_bound(cfg, cls, m, opt=0, constant=1.5)
+    assert led.total_bits <= bound, (led.total_bits, bound)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 32), st.integers(1, 18), st.integers(100, 10 ** 6),
+       st.integers(16, 1024), st.integers(0, 1))
+def test_ledger_monotone_in_rounds_k_coreset(k, rounds, m, coreset,
+                                             stuck):
+    """boost_attempt_ledger totals are monotone in each resource knob:
+    more rounds, more players, or bigger coresets never charge less."""
+    cls = weak.Thresholds(n=N)
+    stuck = bool(stuck)
+    base = ledger.boost_attempt_ledger(
+        BoostConfig(k=k, coreset_size=coreset, domain_size=N),
+        cls, m, rounds, stuck)
+    more_rounds = ledger.boost_attempt_ledger(
+        BoostConfig(k=k, coreset_size=coreset, domain_size=N),
+        cls, m, rounds + 1, stuck)
+    more_players = ledger.boost_attempt_ledger(
+        BoostConfig(k=k + 1, coreset_size=coreset, domain_size=N),
+        cls, m, rounds, stuck)
+    more_coreset = ledger.boost_attempt_ledger(
+        BoostConfig(k=k, coreset_size=coreset + 1, domain_size=N),
+        cls, m, rounds, stuck)
+    assert more_rounds.total_bits >= base.total_bits
+    assert more_players.total_bits >= base.total_bits
+    assert more_coreset.total_bits >= base.total_bits
+    # and the bound itself is monotone where the ledger is
+    for opt in (0, 1, 5):
+        assert ledger.theorem_41_bound(
+            BoostConfig(k=k, coreset_size=coreset, domain_size=N),
+            cls, m, opt + 1) >= ledger.theorem_41_bound(
+            BoostConfig(k=k, coreset_size=coreset, domain_size=N),
+            cls, m, opt)
+
+
 @settings(max_examples=20, deadline=None)
 @given(st.integers(0, 2 ** 31 - 1), st.integers(50, 400))
 def test_quantile_coreset_range_property(seed, c):

@@ -1,0 +1,72 @@
+"""Direct unit tests for core/semi_agnostic.py (the reduction baseline).
+
+Previously only smoke-covered via test_substrate.py; these pin the two
+contracts the baseline's analysis leans on:
+
+* ``patch`` makes the final classifier EXACT on every broadcast point —
+  f answers the full-count majority there, so no broadcast point can be
+  classified worse than pointwise-optimally;
+* the patch-broadcast ledger entry is exactly
+  |misclassified| · (⌈log2 n⌉ + 1) bits per player-broadcast, i.e.
+  ``patched · example_bits(n) · k`` in total — counted, not bounded.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ledger as L
+from repro.core import semi_agnostic, tasks, weak
+from repro.core.types import BoostConfig
+
+N = 1 << 12
+CLS = weak.Thresholds(n=N)
+CFG = BoostConfig(k=4, coreset_size=400, domain_size=N)
+
+
+def _run(noise, seed):
+    task = tasks.make_task(CLS, m=1024, k=4, noise=noise, seed=seed)
+    res = semi_agnostic.run_semi_agnostic(
+        jnp.asarray(task.x), jnp.asarray(task.y), jax.random.key(0),
+        CFG, CLS)
+    return task, res
+
+
+def test_patch_exact_on_every_broadcast_point():
+    task, res = _run(noise=6, seed=2)
+    f = res.classifier
+    pts = np.asarray(f.dispute_x)
+    assert pts.shape[0] > 0, "no point was broadcast — weak scenario"
+    xf, yf = task.flat_x, task.flat_y
+    for p in pts.tolist():
+        copies = yf[xf == p]
+        maj = 1 if (copies > 0).sum() >= (copies < 0).sum() else -1
+        got = int(np.asarray(f(jnp.asarray([p], xf.dtype)))[0])
+        assert got == maj, (p, got, maj)
+    # exactness ⇒ errors at broadcast points are the pointwise minimum,
+    # so patching can only help: E_S(f) ≤ E_S(g)
+    assert res.final_errors <= res.boost_errors
+
+
+def test_patch_bits_counted_exactly():
+    task, res = _run(noise=6, seed=2)
+    g = res.classifier.g                      # unpatched ensemble
+    gx = np.asarray(g(jnp.asarray(task.x)))
+    misclassified = int((gx != task.y).sum())
+    assert res.patched == misclassified
+    # |misclassified| · (⌈log2 n⌉+1) bits per player-broadcast
+    per_example = L.example_bits(N)
+    assert per_example == int(np.ceil(np.log2(N))) + 1
+    assert res.ledger.bits_dispute == res.patched * per_example * CFG.k
+    # and the boosting rounds are charged like any BoostAttempt
+    assert res.ledger.bits_coresets == \
+        CFG.num_rounds(1024) * CFG.k * CFG.coreset_size * per_example
+
+
+def test_clean_sample_needs_no_patch():
+    task, res = _run(noise=0, seed=5)
+    assert res.boost_errors == 0
+    assert res.patched == 0
+    assert res.final_errors == 0
+    assert res.ledger.bits_dispute == 0
+    assert np.asarray(res.classifier.dispute_x).shape[0] == 0

@@ -1,0 +1,194 @@
+"""Mesh-sharded batched engine ≡ local batched engine, bit for bit —
+and the communication ledger ≡ the collective payloads actually moved.
+
+Two layers:
+
+* In-process: a 1-device ``players`` mesh (the collectives execute over
+  an axis of size 1, so the program structure and wire accounting are
+  the real ones, only the transport is trivial).  Full-field parity
+  against ``core/batched.py`` plus ``validate_ledger`` on every lane.
+* Subprocess: a REAL 2-device CPU mesh
+  (``XLA_FLAGS=--xla_force_host_platform_device_count=2`` must be set
+  before jax initialises, hence the subprocess — same pattern as
+  tests/test_sharded_parity.py).  Covers k=4 over p=2 (two players per
+  device), the §2.2 no-center model, and the feature/sampled-coreset
+  track (AxisStumps), asserting bitwise-equal hypotheses, masks,
+  histories and per-field ledger bits, and the ledger-vs-payload
+  identities.
+"""
+
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import batched, scenarios, sharded_batched, tasks, weak
+from repro.core.types import BoostConfig
+
+N = 1 << 12
+
+
+def _assert_engine_parity(ref, got, B):
+    np.testing.assert_array_equal(ref.hypotheses, got.hypotheses)
+    np.testing.assert_array_equal(ref.rounds, got.rounds)
+    np.testing.assert_array_equal(ref.ok, got.ok)
+    np.testing.assert_array_equal(ref.attempts, got.attempts)
+    np.testing.assert_array_equal(ref.alive, got.alive)
+    np.testing.assert_array_equal(ref.disputed, got.disputed)
+    np.testing.assert_array_equal(ref.hist_stuck, got.hist_stuck)
+    np.testing.assert_array_equal(ref.hist_rounds, got.hist_rounds)
+    np.testing.assert_array_equal(ref.hist_alive, got.hist_alive)
+    np.testing.assert_array_equal(ref.hist_p, got.hist_p)
+    for b in range(B):
+        for f in ("bits_coresets", "bits_weight_sums", "bits_hypotheses",
+                  "bits_control", "bits_dispute", "rounds", "attempts"):
+            assert getattr(ref.ledger(b), f) == getattr(got.ledger(b), f), f
+
+
+def test_sharded_engine_parity_single_device_mesh():
+    """players-mesh program ≡ batched engine on this host's devices."""
+    cls = weak.Thresholds(n=N)
+    cfg = BoostConfig(k=4, coreset_size=24, domain_size=N, opt_budget=32)
+    B, m = 2, 512
+    x, y, _ = tasks.make_batch(cls, B, m, 4, 3, seed0=11)
+    keys = jax.random.split(jax.random.key(5), B)
+    ref = batched.run_accurately_classify_batched(x, y, keys, cfg, cls)
+    got = sharded_batched.run_accurately_classify_sharded(
+        x, y, keys, cfg, cls)
+    _assert_engine_parity(ref, got, B)
+    # classifiers agree pointwise too
+    for b in range(B):
+        flat = jax.numpy.asarray(x[b].reshape(-1))
+        np.testing.assert_array_equal(
+            np.asarray(ref.classifier(b)(flat)),
+            np.asarray(got.classifier(b)(flat)))
+
+
+def test_sharded_wire_equals_ledger_single_device_mesh():
+    """Theorem 4.1 accounting == payloads measured at the collectives."""
+    cls = weak.Thresholds(n=N)
+    cfg = BoostConfig(k=4, coreset_size=24, domain_size=N, opt_budget=32)
+    B, m = 2, 512
+    x, y, _ = tasks.make_batch(cls, B, m, 4, 3, seed0=11)
+    keys = jax.random.split(jax.random.key(5), B)
+    got = sharded_batched.run_accurately_classify_sharded(
+        x, y, keys, cfg, cls)
+    for b in range(B):
+        report = got.validate_ledger(b)       # raises on any mismatch
+        assert report["coreset_examples_gathered"] > 0
+        assert report["collective_bytes"] > 0
+        summary = got.wire_summary(b)
+        assert summary["mesh_devices"] >= 1
+        # a stuck attempt happened (noise > 0) ⇒ quarantine messages flowed
+        assert summary["quarantine_point_msgs"] > 0
+
+
+def test_sharded_engine_scenario_parity():
+    """Scenario-corrupted batches run identically on both engines (the
+    adversary lives in the data, not the engine)."""
+    cls = weak.Thresholds(n=N)
+    cfg = BoostConfig(k=4, coreset_size=24, domain_size=N, opt_budget=32)
+    spec = scenarios.ScenarioSpec(name="targeted_heavy", noise=8)
+    x, y, ts = scenarios.make_scenario_batch(cls, 2, 512, 4, spec,
+                                             seed0=7)
+    keys = jax.random.split(jax.random.key(1), 2)
+    ref = batched.run_accurately_classify_batched(x, y, keys, cfg, cls)
+    got = sharded_batched.run_accurately_classify_sharded(
+        x, y, keys, cfg, cls)
+    _assert_engine_parity(ref, got, 2)
+    for b in range(2):
+        got.validate_ledger(b)
+        rep = scenarios.scenario_report(ts[b], got, b)
+        assert rep["guarantee_ok"], rep
+
+
+def test_players_mesh_picks_a_divisor_of_k():
+    """make_players_mesh never builds a mesh the engine would reject:
+    its size always divides k, for any k and device count."""
+    ndev = len(jax.devices())
+    for k in (1, 2, 3, 4, 6, 16):
+        mesh = sharded_batched.make_players_mesh(k)
+        p = mesh.shape[sharded_batched.AXIS]
+        assert k % p == 0 and 1 <= p <= ndev, (k, p)
+
+
+_SCRIPT = r"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+assert jax.device_count() == 2, jax.devices()
+
+from repro.core import batched, sharded_batched, tasks, weak
+from repro.core import ledger as L
+from repro.core.types import BoostConfig
+
+N = 1 << 12
+cls = weak.Thresholds(n=N)
+cfg = BoostConfig(k=4, coreset_size=100, domain_size=N, opt_budget=16)
+B, m = 3, 256
+x, y, _ = tasks.make_batch(cls, B, m, 4, 3, seed0=11)
+keys = jax.random.split(jax.random.key(5), B)
+ref = batched.run_accurately_classify_batched(x, y, keys, cfg, cls)
+
+mesh = sharded_batched.make_players_mesh(4)
+assert mesh.shape["players"] == 2, mesh          # 2 players per device
+
+for no_center in (False, True):
+    got = sharded_batched.run_accurately_classify_sharded(
+        x, y, keys, cfg, cls, mesh=mesh, no_center=no_center)
+    np.testing.assert_array_equal(ref.hypotheses, got.hypotheses)
+    np.testing.assert_array_equal(ref.attempts, got.attempts)
+    np.testing.assert_array_equal(ref.alive, got.alive)
+    np.testing.assert_array_equal(ref.disputed, got.disputed)
+    np.testing.assert_array_equal(ref.hist_stuck, got.hist_stuck)
+    np.testing.assert_array_equal(ref.hist_rounds, got.hist_rounds)
+    np.testing.assert_array_equal(ref.hist_alive, got.hist_alive)
+    np.testing.assert_array_equal(ref.hist_p, got.hist_p)
+    for b in range(B):
+        for f in ("bits_coresets", "bits_weight_sums",
+                  "bits_hypotheses", "bits_control", "bits_dispute",
+                  "rounds", "attempts"):
+            assert getattr(ref.ledger(b), f) == \
+                getattr(got.ledger(b), f), (no_center, b, f)
+        got.validate_ledger(b)
+        # the ledger's per-round coreset/weight-sum bits equal the
+        # payload the all_gather actually moved, restated explicitly:
+        n_att = int(got.attempts[b])
+        assert got.ledger(b).bits_coresets == \
+            int(got.hist_wire_core[b, :n_att].sum()) * L.example_bits(N)
+
+# feature track: randomized (PRNG) coresets over the real mesh
+cls2 = weak.AxisStumps(num_features=4)
+cfg2 = BoostConfig(k=4, coreset_size=64, domain_size=N, opt_budget=8,
+                   deterministic_coreset=False)
+x2, y2, _ = tasks.make_batch(cls2, 2, 128, 4, 1, seed0=3)
+keys2 = jax.random.split(jax.random.key(9), 2)
+ref2 = batched.run_accurately_classify_batched(x2, y2, keys2, cfg2, cls2)
+got2 = sharded_batched.run_accurately_classify_sharded(
+    x2, y2, keys2, cfg2, cls2, mesh=mesh)
+np.testing.assert_array_equal(ref2.hypotheses, got2.hypotheses)
+np.testing.assert_array_equal(ref2.attempts, got2.attempts)
+np.testing.assert_array_equal(ref2.disputed, got2.disputed)
+for b in range(2):
+    got2.validate_ledger(b)
+print("SHARDED_BATCHED_2DEV_OK")
+"""
+
+
+@pytest.mark.xdist_group(name="device_mesh_subprocess")
+def test_sharded_batched_two_device_mesh():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=2")
+    env["JAX_PLATFORMS"] = "cpu"
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = (os.path.join(root, "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    out = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "SHARDED_BATCHED_2DEV_OK" in out.stdout

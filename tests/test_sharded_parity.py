@@ -11,6 +11,8 @@ import os
 import subprocess
 import sys
 
+import pytest
+
 _SCRIPT = r"""
 import numpy as np
 import jax
@@ -57,6 +59,7 @@ print("SHARDED_PARITY_OK")
 """
 
 
+@pytest.mark.xdist_group(name="device_mesh_subprocess")
 def test_sharded_parity_two_devices():
     env = dict(os.environ)
     env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
