@@ -1,0 +1,75 @@
+"""Render CI step summaries (GITHUB_STEP_SUMMARY markdown).
+
+Two modes, both reading artifacts the jobs already produce — the point
+is that a regression is visible on the run page without downloading
+anything:
+
+    step_summary.py durations <pytest-output-file>
+        The "slowest durations" block pytest prints under --durations=N,
+        as a markdown table.
+
+    step_summary.py bench <bench-csv-file>
+        The name,us_per_call,derived CSV that benchmarks/run.py prints,
+        as a markdown table (derived split into its ;-separated fields).
+
+Both modes are best-effort: missing/empty input produces a note, not a
+failure (the summary step must never mask the real job status).
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+
+
+def durations(path: str) -> str:
+    try:
+        with open(path, encoding="utf-8", errors="replace") as f:
+            text = f.read()
+    except OSError as e:
+        return f"_no pytest output ({e})_\n"
+    rows = re.findall(
+        r"^\s*(\d+\.\d+)s\s+(call|setup|teardown)\s+(\S+)\s*$",
+        text, re.MULTILINE)
+    if not rows:
+        return "_no --durations block in pytest output_\n"
+    out = ["## Slowest tests", "",
+           "| seconds | phase | test |", "|---:|---|---|"]
+    for secs, phase, test in rows:
+        out.append(f"| {secs} | {phase} | `{test}` |")
+    return "\n".join(out) + "\n"
+
+
+def bench(path: str) -> str:
+    try:
+        with open(path, encoding="utf-8", errors="replace") as f:
+            lines = [ln.strip() for ln in f if ln.strip()]
+    except OSError as e:
+        return f"_no bench output ({e})_\n"
+    rows = []
+    for ln in lines:
+        m = re.match(r'^([\w-]+),(-?[\d.]+),"?(.*?)"?$', ln)
+        if m and m.group(1) != "name":
+            rows.append(m.groups())
+    if not rows:
+        return "_no bench CSV rows_\n"
+    out = ["## Benchmark smoke", "",
+           "| bench | µs/call | derived |", "|---|---:|---|"]
+    for name, us, derived in rows:
+        derived = "<br>".join(p for p in derived.split(";") if p)
+        flag = " ⚠️" if us == "-1" else ""
+        out.append(f"| {name}{flag} | {us} | {derived} |")
+    return "\n".join(out) + "\n"
+
+
+def main(argv) -> int:
+    if len(argv) != 3 or argv[1] not in ("durations", "bench"):
+        print(__doc__, file=sys.stderr)
+        return 2
+    fn = durations if argv[1] == "durations" else bench
+    sys.stdout.write(fn(argv[2]))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))

@@ -1,7 +1,7 @@
 """Benchmark harness entry: one benchmark per paper claim.
 
 Prints ``name,us_per_call,derived`` CSV (plus bench-specific fields in
-the derived column).  ``python -m benchmarks.run [--only NAME]``.
+the derived column).  ``python -m benchmarks.run [--only NAME[,NAME…]]``.
 """
 
 from __future__ import annotations
@@ -12,15 +12,30 @@ import os
 import sys
 import time
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+def _ensure_src_importable() -> None:
+    """Make ``repro`` importable without clobbering the caller's path.
+
+    An existing ``PYTHONPATH=src`` (how CI invokes tier-1 and this
+    harness) wins; only when ``repro`` cannot be resolved at all is the
+    repo's own ``src/`` appended — resolved once, relative to the repo
+    root, never blindly prepended at import time.
+    """
+    try:
+        import repro  # noqa: F401
+    except ModuleNotFoundError:
+        repo_root = os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__)))
+        sys.path.append(os.path.join(repo_root, "src"))
 
 
 def _suite():
     from benchmarks import (baselines, batched_classify, finite_class,
                             kernel_micro, paper_claims, roofline,
-                            sharded_scenarios)
+                            serving, sharded_scenarios)
     return {
         "batched_classify": batched_classify.run_all,
+        "serving": serving.run_all,
         "sharded_scenarios": sharded_scenarios.run_all,
         "comm_vs_opt": paper_claims.comm_vs_opt,
         "comm_vs_k": paper_claims.comm_vs_k,
@@ -39,12 +54,20 @@ def _suite():
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names")
     ap.add_argument("--out", default="experiments/bench_results.json")
     args = ap.parse_args()
+    _ensure_src_importable()
     suite = _suite()
     if args.only:
-        suite = {args.only: suite[args.only]}
+        names = [n.strip() for n in args.only.split(",") if n.strip()]
+        unknown = [n for n in names if n not in suite]
+        if unknown:
+            raise SystemExit(
+                f"unknown benchmark(s) {unknown}; pick from "
+                f"{sorted(suite)}")
+        suite = {n: suite[n] for n in names}
     print("name,us_per_call,derived")
     all_rows = {}
     failures = 0
@@ -59,7 +82,10 @@ def main() -> None:
                 extra = ";".join(f"{k}={v}" for k, v in row.items()
                                  if k not in ("bench", "derived", "cfg",
                                               "cls", "us_per_call"))
-                print(f"{name},{row.get('us_per_call', round(us, 0))},"
+                # per-row bench id, not the suite key — a multi-row
+                # suite's rows must be tellable apart in the CSV/summary
+                print(f"{row.get('bench', name)},"
+                      f"{row.get('us_per_call', round(us, 0))},"
                       f"\"{derived};{extra}\"")
         except Exception as e:  # noqa: BLE001
             failures += 1

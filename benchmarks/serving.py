@@ -1,0 +1,136 @@
+"""Continuous-batching serving benchmark: throughput/latency per bucket
+policy, gated on zero steady-state recompiles and bit-parity.
+
+A mixed-shape request stream (three m shapes across ≥ 3 (B, mloc)
+buckets, mixed noise and adversarial scenarios) is replayed from a
+Poisson and a bursty arrival trace through the scheduler
+(repro/launch/scheduler.py), once per admission policy:
+
+* ``pack``  — dispatch as soon as anything is queued (latency-first);
+* ``fill``  — hold for a full batch or the head deadline
+  (throughput-first).
+
+The cache is warmed first (``BoostScheduler.warm``), so the timed
+replay is pure steady state.  Three gates make this a regression test,
+not just a report (run.py exits non-zero if any trips):
+
+* **zero recompiles** — the steady replay must not compile anything;
+* **parity** — a sample of completions must be bit-identical to the
+  one-shot engine run of the same request (hypotheses, attempts, total
+  ledger bits);
+* **ledger ≡ payload** — every ok sharded completion passes
+  ``validate_ledger`` (Theorem 4.1 bits vs measured collective
+  payloads).
+
+``REPRO_BENCH_SMOKE=1`` (the CI bench-smoke job) shrinks the stream;
+the gates are identical at both scales.
+"""
+
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.launch import scheduler as S
+
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+N_REQUESTS = 60 if SMOKE else 200
+PARITY_SAMPLE = 8 if SMOKE else 24
+
+SHAPES = [
+    {"m": 96, "k": 2, "noise": 1},
+    {"m": 128, "k": 2, "noise": 0},
+    {"m": 192, "k": 2, "noise": 2, "scenario": "drift"},
+]
+LATTICE = S.BucketLattice(b_sizes=(4, 8), mloc_sizes=(64, 128))
+COMMON = dict(coreset_size=64, opt_budget=8)
+
+
+def _stream(trace: str, engine: str, n: int = N_REQUESTS):
+    if trace == "bursty":
+        arr = S.bursty_trace(n, rate_per_s=400.0, burst=8, seed=5)
+    else:
+        arr = S.poisson_trace(n, rate_per_s=400.0, seed=5)
+    return S.make_request_stream(n, arr, SHAPES, seed0=11,
+                                 engine=engine, **COMMON)
+
+
+def _assert_parity(sched: S.BoostScheduler, completions):
+    """Scheduler lanes ≡ one-shot engine runs, bit for bit."""
+    idx = np.linspace(0, len(completions) - 1,
+                      min(PARITY_SAMPLE, len(completions)),
+                      dtype=int)
+    for i in idx:
+        c = completions[int(i)]
+        one = sched.one_shot(c.request)
+        np.testing.assert_array_equal(
+            c.result.hypotheses[c.lane], one.hypotheses[0])
+        assert int(c.result.attempts[c.lane]) == int(one.attempts[0])
+        assert bool(c.result.ok[c.lane]) == bool(one.ok[0])
+        if c.ok:
+            assert (c.per_task().ledger.total_bits
+                    == one.per_task(0).ledger.total_bits)
+
+
+def bench_stream(policy: str, trace: str, engine: str = "batched",
+                 cache: S.CompileCache | None = None) -> dict:
+    reqs = _stream(trace, engine)
+    sched = S.BoostScheduler(lattice=LATTICE, policy=policy,
+                             fill_wait_s=0.02, cache=cache)
+    sched.warm(reqs, b_sizes=LATTICE.b_sizes + (1,))  # +1 for one_shot
+    compiles_warm = sched.cache.stats.compiles
+    done = sched.run_stream(reqs)
+    steady_compiles = sched.cache.stats.compiles - compiles_warm
+    assert steady_compiles == 0, (
+        f"steady state recompiled {steady_compiles}×")
+    assert len(done) == len(reqs)
+    _assert_parity(sched, done)
+    validated = 0
+    if engine == "sharded":
+        for c in done:
+            if c.ok:
+                c.validate_ledger()
+                validated += 1
+    summary = S.latency_summary(done)
+    return {
+        "policy": policy, "trace": trace, "engine": engine,
+        "requests": len(done), "dispatches": sched.stats.dispatches,
+        "buckets_hit": len(summary["buckets"]),
+        "filler_lanes": sched.stats.filler_lanes,
+        "steady_compiles": steady_compiles,
+        "cache_hits": sched.cache.stats.hits,
+        "ledger_validated": validated,
+        "tasks_per_s": summary["tasks_per_s"],
+        "p50_latency_s": summary["p50_latency_s"],
+        "p99_latency_s": summary["p99_latency_s"],
+    }
+
+
+def run_all():
+    rows = []
+    cache = S.CompileCache()        # shared: policies reuse programs
+    grid = [("pack", "poisson", "batched"),
+            ("pack", "bursty", "batched"),
+            ("fill", "bursty", "batched"),
+            ("pack", "poisson", "sharded")]
+    for policy, trace, engine in grid:
+        r = bench_stream(policy, trace, engine, cache=cache)
+        rows.append({
+            "bench": f"serving_{engine}_{policy}_{trace}",
+            "us_per_call": round(1e6 / max(r["tasks_per_s"], 1e-9), 1),
+            "derived": (f"tps={r['tasks_per_s']};"
+                        f"p50={r['p50_latency_s']};"
+                        f"p99={r['p99_latency_s']};"
+                        f"steady_compiles={r['steady_compiles']};"
+                        f"buckets={r['buckets_hit']}"),
+            **r,
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    import json
+
+    for row in run_all():
+        print(row["bench"], json.dumps(row))

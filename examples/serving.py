@@ -1,0 +1,62 @@
+"""Continuous-batching boosting service in ~40 lines.
+
+A mixed stream of AccuratelyClassify requests — different sample
+sizes, noise levels and adversarial scenarios — arrives as a Poisson
+process and is served through the shape-bucketed scheduler: requests
+pad up to a small (B, mloc) bucket lattice, every bucket's program is
+compiled exactly once, and steady-state traffic runs with zero
+recompiles while each request's result stays bit-identical to a
+one-shot engine run.
+
+    PYTHONPATH=src python examples/serving.py
+"""
+
+import argparse
+
+from repro.launch import scheduler as S
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=48)
+    ap.add_argument("--rate", type=float, default=300.0)
+    ap.add_argument("--policy", default="pack",
+                    choices=["pack", "fill"])
+    a = ap.parse_args()
+
+    shapes = [
+        {"m": 96, "k": 2, "noise": 1},
+        {"m": 128, "k": 2, "noise": 0},
+        {"m": 192, "k": 2, "noise": 2, "scenario": "byzantine"},
+    ]
+    reqs = S.make_request_stream(
+        a.requests, S.poisson_trace(a.requests, a.rate), shapes,
+        coreset_size=64, opt_budget=8)
+
+    sched = S.BoostScheduler(
+        lattice=S.BucketLattice(b_sizes=(4, 8), mloc_sizes=(64, 128)),
+        policy=a.policy)
+    compiled = sched.warm(reqs)
+    print(f"warm: {compiled} bucket programs compiled")
+
+    done = sched.run_stream(reqs)
+    st, cs = sched.stats, sched.cache.stats
+    print(f"served {len(done)} requests in {st.dispatches} dispatches "
+          f"({st.filler_lanes} filler lanes, "
+          f"{st.padded_requests} padded requests)")
+    print(f"compile cache: {cs.hits} hits, "
+          f"{cs.compiles - compiled} steady-state compiles")
+    summary = S.latency_summary(done)
+    print(f"throughput {summary['tasks_per_s']} tasks/s, "
+          f"p50 {summary['p50_latency_s']}s, "
+          f"p99 {summary['p99_latency_s']}s")
+    for name, row in summary["buckets"].items():
+        print(f"  {name:24s} served={row['served']:3d} "
+              f"p50={row['p50_latency_s']}s p99={row['p99_latency_s']}s")
+    bad = [c for c in done if not c.ok]
+    print(f"budget-exhausted lanes (byzantine OPT > opt_budget): "
+          f"{len(bad)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -144,6 +144,45 @@ def _classify_batched_jit(x, y, alive0, keys, cfg, cls, t_buf):
     return jax.vmap(one)(x, y, alive0, keys)
 
 
+def stack_for_dispatch(items, B: int):
+    """Stack admitted (x, y, alive, key) tuples into bucket arrays.
+
+    ``items`` holds up to B tasks already padded to a common [k, mloc];
+    short batches are filled by duplicating lane 0 (a live lane — dead
+    filler would spin through the whole opt_budget and a batch is as
+    slow as its slowest lane).  Returns (x, y, alive, keys, n_real);
+    lanes ≥ n_real are filler and their results must be discarded.
+    """
+    n_real = len(items)
+    if not 0 < n_real <= B:
+        raise ValueError(f"need 1..{B} items, got {n_real}")
+    items = list(items) + [items[0]] * (B - n_real)
+    x = np.stack([it[0] for it in items])
+    y = np.stack([it[1] for it in items])
+    alive = np.stack([it[2] for it in items])
+    key_data = np.stack([np.asarray(jax.random.key_data(it[3]))
+                         for it in items])
+    keys = jax.random.wrap_key_data(jnp.asarray(key_data))
+    return x, y, alive, keys, n_real
+
+
+def lower_classify(x, y, alive, keys, cfg: BoostConfig, cls):
+    """AOT-compile the batched engine for one input signature.
+
+    Returns a ``jax.stages.Compiled`` executable with the statics
+    (cfg, cls, t_buf) baked in — call it as ``compiled(x, y, alive,
+    keys)`` on arrays of exactly this shape/dtype.  Unlike the implicit
+    jit cache, the caller owns the executable's lifetime: dropping it
+    (e.g. a serving compile-cache eviction) really frees the program,
+    and re-lowering really recompiles.  Output is bit-identical to the
+    jit path (same trace, same compiler).
+    """
+    t_buf = cfg.num_rounds(x.shape[1] * x.shape[2])
+    return _classify_batched_jit.lower(
+        jnp.asarray(x), jnp.asarray(y), jnp.asarray(alive), keys, cfg,
+        cls, t_buf).compile()
+
+
 @dataclasses.dataclass
 class BatchedClassifyResult:
     """Host view of one batched dispatch (B tasks).
@@ -172,6 +211,11 @@ class BatchedClassifyResult:
     alive0: np.ndarray
     cfg: BoostConfig
     cls: object
+    # optional [B] true sample sizes — when the serving layer pads a
+    # request's shards up to a bucket mloc, the protocol's |S| is still
+    # the request's own m, and the dispute-report bit width ⌈log2 m⌉
+    # must charge that, not the padded capacity
+    m_true: np.ndarray | None = None
 
     @property
     def batch(self) -> int:
@@ -182,7 +226,9 @@ class BatchedClassifyResult:
         cfg, cls = self.cfg, self.cls
         k, mloc = self.x.shape[1], self.x.shape[2]
         n = L.domain_size(cls)
-        m_bits_m = max(int(np.ceil(np.log2(max(k * mloc, 2)))), 1)
+        m_eff = (k * mloc if self.m_true is None
+                 else int(self.m_true[b]))
+        m_bits_m = max(int(np.ceil(np.log2(max(m_eff, 2)))), 1)
         led = Ledger()
         for a in range(int(self.attempts[b])):
             stuck = bool(self.hist_stuck[b, a])
@@ -218,7 +264,8 @@ class BatchedClassifyResult:
 
 
 def run_accurately_classify_batched(x, y, keys, cfg: BoostConfig, cls,
-                                    alive=None) -> BatchedClassifyResult:
+                                    alive=None, compiled=None,
+                                    m_true=None) -> BatchedClassifyResult:
     """B-task AccuratelyClassify in one device dispatch.
 
     x, y: [B, k, mloc] int shards or [B, k, mloc, F] feature rows;
@@ -226,6 +273,11 @@ def run_accurately_classify_batched(x, y, keys, cfg: BoostConfig, cls,
     reference loop reproduces it exactly) or a single key to split.
     ``alive``: optional [B, k, mloc] initial mask (False = padding, so
     ragged batches are padded to a common mloc and masked out).
+    ``compiled``: optional executable from :func:`lower_classify` for
+    this signature — the serving layer's compile cache passes it so a
+    dispatch can never trigger an implicit recompile.
+    ``m_true``: optional [B] true per-task sample sizes (see
+    ``BatchedClassifyResult.m_true``).
     """
     x = jnp.asarray(x)
     y = jnp.asarray(y)
@@ -239,9 +291,12 @@ def run_accurately_classify_batched(x, y, keys, cfg: BoostConfig, cls,
         alive = jnp.ones((B, k, mloc), bool)
     else:
         alive = jnp.asarray(alive)
-    t_buf = cfg.num_rounds(k * mloc)
-    out = jax.device_get(_classify_batched_jit(
-        x, y, alive, keys, cfg, cls, t_buf))
+    if compiled is not None:
+        out = jax.device_get(compiled(x, y, alive, keys))
+    else:
+        t_buf = cfg.num_rounds(k * mloc)
+        out = jax.device_get(_classify_batched_jit(
+            x, y, alive, keys, cfg, cls, t_buf))
     return BatchedClassifyResult(
         hypotheses=out.h_params, rounds=out.rounds,
         ok=np.asarray(out.done), attempts=out.attempt,
@@ -249,4 +304,5 @@ def run_accurately_classify_batched(x, y, keys, cfg: BoostConfig, cls,
         hist_stuck=out.hist_stuck, hist_rounds=out.hist_rounds,
         hist_alive=out.hist_alive, hist_p=out.hist_p,
         x=np.asarray(x), y=np.asarray(y), alive0=np.asarray(alive),
-        cfg=cfg, cls=cls)
+        cfg=cfg, cls=cls,
+        m_true=None if m_true is None else np.asarray(m_true))

@@ -321,6 +321,18 @@ def _build_sharded(mesh: Mesh, cfg: BoostConfig, cls, t_buf: int,
                               out_specs=out_specs))
 
 
+def lower_classify_sharded(x, y, alive, keys, cfg: BoostConfig, cls,
+                           mesh: Mesh, no_center: bool = False):
+    """AOT-compile the sharded engine for one input signature (the
+    mesh-collective twin of ``batched.lower_classify``).  The returned
+    executable is owned by the caller — a serving compile cache reuses
+    it across admissions and dropping it really frees the program."""
+    t_buf = cfg.num_rounds(x.shape[1] * x.shape[2])
+    fn = _build_sharded(mesh, cfg, cls, t_buf, no_center)
+    return fn.lower(jnp.asarray(x), jnp.asarray(y), jnp.asarray(alive),
+                    keys).compile()
+
+
 @dataclasses.dataclass
 class ShardedClassifyResult(batched.BatchedClassifyResult):
     """BatchedClassifyResult + the measured collective payloads.
@@ -397,6 +409,7 @@ class ShardedClassifyResult(batched.BatchedClassifyResult):
 def run_accurately_classify_sharded(x, y, keys, cfg: BoostConfig, cls,
                                     mesh: Mesh | None = None, alive=None,
                                     no_center: bool = False,
+                                    compiled=None, m_true=None,
                                     ) -> ShardedClassifyResult:
     """B-task AccuratelyClassify over a real ``players`` device mesh.
 
@@ -420,9 +433,12 @@ def run_accurately_classify_sharded(x, y, keys, cfg: BoostConfig, cls,
         alive = jnp.asarray(alive)
     if mesh is None:
         mesh = make_players_mesh(k)
-    t_buf = cfg.num_rounds(k * mloc)
-    fn = _build_sharded(mesh, cfg, cls, t_buf, no_center)
-    out = jax.device_get(fn(x, y, alive, keys))
+    if compiled is not None:
+        out = jax.device_get(compiled(x, y, alive, keys))
+    else:
+        t_buf = cfg.num_rounds(k * mloc)
+        fn = _build_sharded(mesh, cfg, cls, t_buf, no_center)
+        out = jax.device_get(fn(x, y, alive, keys))
     return ShardedClassifyResult(
         hypotheses=out["h_params"], rounds=out["rounds"],
         ok=np.asarray(out["done"]), attempts=out["attempt"],
@@ -432,6 +448,7 @@ def run_accurately_classify_sharded(x, y, keys, cfg: BoostConfig, cls,
         hist_alive=out["hist_alive"], hist_p=out["hist_p"],
         x=np.asarray(x), y=np.asarray(y), alive0=np.asarray(alive),
         cfg=cfg, cls=cls,
+        m_true=None if m_true is None else np.asarray(m_true),
         hist_wire_core=out["hist_wire_core"],
         hist_wire_ws=out["hist_wire_ws"],
         wire_bytes=out["wire_bytes"],

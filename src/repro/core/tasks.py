@@ -110,6 +110,31 @@ def make_batch(cls, B: int, m: int, k: int, noise: int, seed0: int = 0,
             ts)
 
 
+def pad_shards(x: np.ndarray, y: np.ndarray, mloc: int):
+    """Pad per-player shards up to ``mloc`` rows for shape bucketing.
+
+    x: [k, mloc0(, F)], y: [k, mloc0] — one task's shards.  Returns
+    (x_pad, y_pad, alive) at [k, mloc(, F)] where the appended rows
+    repeat each shard's last example and are dead in the alive mask, so
+    the engines ignore them entirely (the masking is bit-safe:
+    tests/test_batched.py::test_batched_ragged_padding).
+    """
+    k, mloc0 = y.shape
+    if mloc < mloc0:
+        raise ValueError(f"bucket mloc={mloc} < task mloc={mloc0}")
+    alive = np.ones((k, mloc0), bool)
+    pad = mloc - mloc0
+    if pad == 0:
+        return x, y, alive
+    reps = [(0, 0)] * x.ndim
+    reps[1] = (0, pad)
+    x_pad = np.pad(x, reps, mode="edge")
+    y_pad = np.pad(y, [(0, 0), (0, pad)], mode="edge")
+    alive_pad = np.pad(alive, [(0, 0), (0, pad)],
+                       constant_values=False)
+    return x_pad, y_pad, alive_pad
+
+
 def true_opt(task: Task, grid: int = 4096) -> int:
     """Brute-force OPT over a hypothesis grid (exact for small classes).
 

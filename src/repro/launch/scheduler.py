@@ -1,0 +1,553 @@
+"""Continuous-batching task server for heterogeneous boosting requests.
+
+The one-shot drivers (``launch/serve.py --workload classify``) run one
+homogeneous batch per process: every request must share (m, k, coreset,
+scenario, engine), and each new shape pays a fresh jit compile.  This
+module serves a *stream* of mixed requests through the existing engines
+with none of that:
+
+* **Shape bucketing.**  Requests are padded up to a small lattice of
+  canonical (B, mloc) buckets — per-player shards pad to the next
+  lattice ``mloc`` with dead rows (``tasks.pad_shards``; bit-safe per
+  tests/test_batched.py), short batches fill lanes by duplicating a
+  live lane (``batched.stack_for_dispatch``).  Engine statics (k,
+  BoostConfig, hypothesis class, engine kind) partition requests into
+  *compat groups*; noise level and scenario are data, so one in-flight
+  batch freely mixes adversaries.
+
+* **Compile cache.**  Each bucket's program is AOT-compiled once
+  (``batched.lower_classify`` / ``sharded_batched.lower_classify_sharded``)
+  and held in an LRU cache keyed on (compat, B, mloc).  Steady-state
+  traffic hits the cache — zero recompiles, counters exposed in
+  ``SchedulerStats`` and asserted in tests/test_scheduler.py.  The
+  cache owns its executables, so eviction past the capacity really
+  frees the program and a re-admission really recompiles.
+
+* **Continuous admission.**  A virtual clock replays an arrival trace
+  (Poisson or bursty, ``poisson_trace``/``bursty_trace``); while a
+  batch is in flight new arrivals queue up, and when the dispatch
+  returns the freed slots are refilled from the queue — iteration-level
+  batching at the dispatch granularity (a jitted while-loop program
+  cannot be entered mid-flight, so the admission quantum is one
+  dispatch).  Two policies: ``pack`` dispatches as soon as any request
+  is queued (smallest bucket B that covers the queue), ``fill`` holds
+  admission until a full max-B batch is ready or ``fill_wait_s`` has
+  passed for the oldest request.
+
+Every completion is bit-identical to the one-shot engine run of the
+same padded request (``BoostScheduler.one_shot`` is that baseline;
+tests pin it per request, plus host-reference parity on a sample), and
+sharded completions carry ``validate_ledger``-checkable wire counters.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.core import batched, scenarios, sharded_batched, tasks, weak
+from repro.core.types import BoostConfig
+
+
+# ---------------------------------------------------------------------------
+# Requests and their generated payloads
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One boosting task as a serving request (hashable, self-seeded)."""
+
+    rid: int
+    m: int = 256                 # total sample size (k must divide it)
+    k: int = 4
+    noise: int = 0
+    clsname: str = "thresholds"
+    domain: int = 1 << 12
+    num_features: int = 8
+    coreset_size: int = 100
+    opt_budget: int = 16
+    scenario: str | None = None  # core/scenarios.py adversary, or uniform
+    engine: str = "batched"      # "batched" | "sharded"
+    seed: int = 0
+    arrival_s: float = 0.0
+
+    def make_cls(self):
+        return weak.make_class(self.clsname, n=self.domain,
+                               num_features=self.num_features)
+
+    def make_cfg(self) -> BoostConfig:
+        return BoostConfig(
+            k=self.k, coreset_size=self.coreset_size,
+            domain_size=self.domain, opt_budget=self.opt_budget,
+            deterministic_coreset=self.clsname != "stumps")
+
+    def make_task(self) -> tasks.Task:
+        if self.scenario is not None:
+            return scenarios.make_scenario_task(
+                self.make_cls(), m=self.m, k=self.k,
+                spec=scenarios.ScenarioSpec(name=self.scenario,
+                                            noise=self.noise),
+                seed=self.seed)
+        return tasks.make_task(self.make_cls(), m=self.m, k=self.k,
+                               noise=self.noise, seed=self.seed)
+
+    def make_key(self):
+        return jax.random.key(self.seed)
+
+
+@dataclasses.dataclass(frozen=True)
+class CompatKey:
+    """Engine statics — requests in one dispatch must share these."""
+
+    engine: str
+    cfg: BoostConfig
+    cls: object
+
+    @classmethod
+    def of(cls_, req: Request) -> "CompatKey":
+        return cls_(engine=req.engine, cfg=req.make_cfg(),
+                    cls=req.make_cls())
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketKey:
+    compat: CompatKey
+    B: int
+    mloc: int
+
+
+# ---------------------------------------------------------------------------
+# The bucket lattice
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BucketLattice:
+    """Canonical (B, mloc) grid requests are padded up to.
+
+    Small on purpose: each lattice point is one compiled program, and
+    steady-state traffic should touch a handful.  ``mloc`` rounds up to
+    the next lattice value (never down — padding is dead rows, not
+    truncation); ``B`` is chosen per dispatch by the admission policy.
+    """
+
+    b_sizes: tuple = (1, 4, 8)
+    mloc_sizes: tuple = (64, 128, 256)
+
+    def bucket_mloc(self, mloc: int) -> int:
+        for s in self.mloc_sizes:
+            if mloc <= s:
+                return s
+        raise ValueError(
+            f"mloc={mloc} exceeds lattice {self.mloc_sizes!r}")
+
+    def bucket_b(self, queued: int) -> int:
+        for s in self.b_sizes:
+            if queued <= s:
+                return s
+        return self.b_sizes[-1]
+
+    @property
+    def max_b(self) -> int:
+        return self.b_sizes[-1]
+
+
+# ---------------------------------------------------------------------------
+# The compile cache
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    compiles: int = 0            # == misses; kept separate so tests can
+    compile_s: float = 0.0       # assert "recompiled exactly once"
+
+
+class CompileCache:
+    """LRU of AOT-compiled bucket programs.
+
+    Keyed on :class:`BucketKey`; the values are ``jax.stages.Compiled``
+    executables owned by this cache — unlike the implicit jit cache,
+    evicting one really frees it and the next admission of that bucket
+    really recompiles (tests assert exactly-once).  ``capacity=None``
+    means unbounded (the lattice already bounds the population).
+    """
+
+    def __init__(self, capacity: int | None = None):
+        self.capacity = capacity
+        self.stats = CacheStats()
+        self._entries: "collections.OrderedDict" = collections.OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def get(self, key: BucketKey, build: Callable[[], object]):
+        if key in self._entries:
+            self._entries.move_to_end(key)
+            self.stats.hits += 1
+            return self._entries[key]
+        t0 = time.perf_counter()
+        compiled = build()
+        self.stats.compile_s += time.perf_counter() - t0
+        self.stats.misses += 1
+        self.stats.compiles += 1
+        self._entries[key] = compiled
+        if self.capacity is not None and len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+            self.stats.evictions += 1
+        return compiled
+
+
+# ---------------------------------------------------------------------------
+# Completions + stats
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Completion:
+    """One served request: its lane of a bucket dispatch."""
+
+    request: Request
+    task: tasks.Task
+    result: batched.BatchedClassifyResult   # the whole dispatch
+    lane: int
+    bucket: BucketKey
+    queue_wait_s: float          # arrival → dispatch start (virtual)
+    service_s: float             # dispatch wall time (shared by lanes)
+    latency_s: float             # arrival → completion (virtual)
+
+    @property
+    def ok(self) -> bool:
+        return bool(self.result.ok[self.lane])
+
+    def per_task(self):
+        return self.result.per_task(self.lane)
+
+    def classifier(self):
+        return self.result.classifier(self.lane)
+
+    def validate_ledger(self) -> dict:
+        if not isinstance(self.result,
+                          sharded_batched.ShardedClassifyResult):
+            raise TypeError("wire validation needs the sharded engine")
+        return self.result.validate_ledger(self.lane)
+
+
+@dataclasses.dataclass
+class SchedulerStats:
+    dispatches: int = 0
+    served: int = 0
+    filler_lanes: int = 0
+    padded_requests: int = 0
+    per_bucket: dict = dataclasses.field(default_factory=dict)
+
+    def note(self, bucket: BucketKey, n_real: int, B: int):
+        self.dispatches += 1
+        self.served += n_real
+        self.filler_lanes += B - n_real
+        key = (bucket.B, bucket.mloc, bucket.compat.engine)
+        self.per_bucket[key] = self.per_bucket.get(key, 0) + n_real
+
+
+def _percentile(xs, q):
+    return float(np.percentile(np.asarray(xs, np.float64), q)) if xs else 0.0
+
+
+def latency_summary(completions) -> dict:
+    """tasks/sec + p50/p99 latency, overall and per bucket."""
+    if not completions:
+        return {"served": 0}
+    lats = [c.latency_s for c in completions]
+    span = max(c.latency_s + c.request.arrival_s for c in completions)
+    out = {
+        "served": len(completions),
+        "tasks_per_s": round(len(completions) / max(span, 1e-9), 2),
+        "p50_latency_s": round(_percentile(lats, 50), 4),
+        "p99_latency_s": round(_percentile(lats, 99), 4),
+        "buckets": {},
+    }
+    by_bucket = collections.defaultdict(list)
+    for c in completions:
+        by_bucket[(c.bucket.B, c.bucket.mloc,
+                   c.bucket.compat.engine)].append(c.latency_s)
+    for bk, ls in sorted(by_bucket.items()):
+        out["buckets"][f"B{bk[0]}_mloc{bk[1]}_{bk[2]}"] = {
+            "served": len(ls),
+            "p50_latency_s": round(_percentile(ls, 50), 4),
+            "p99_latency_s": round(_percentile(ls, 99), 4),
+        }
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The scheduler
+# ---------------------------------------------------------------------------
+
+class BoostScheduler:
+    """Continuous-batching server over the batched/sharded engines.
+
+    ``run_stream`` replays an arrival-stamped request list against a
+    virtual clock: compute time is measured wall time, arrival time is
+    the trace's.  ``submit``/``step`` expose the same machinery for
+    open-loop driving.
+    """
+
+    def __init__(self, lattice: BucketLattice | None = None,
+                 policy: str = "pack", fill_wait_s: float = 0.05,
+                 cache_capacity: int | None = None,
+                 cache: CompileCache | None = None):
+        if policy not in ("pack", "fill"):
+            raise ValueError(f"unknown policy {policy!r}")
+        self.lattice = lattice or BucketLattice()
+        self.policy = policy
+        self.fill_wait_s = fill_wait_s
+        # ``cache`` lets several schedulers (e.g. a policy comparison)
+        # share one pool of compiled programs
+        if cache is not None and cache_capacity is not None:
+            raise ValueError(
+                "pass either cache= (shared, already sized) or "
+                "cache_capacity=, not both")
+        self.cache = cache or CompileCache(capacity=cache_capacity)
+        self.stats = SchedulerStats()
+        self._queues: dict = collections.defaultdict(collections.deque)
+        self._meshes: dict = {}
+
+    # -- request intake ----------------------------------------------------
+
+    def submit(self, req: Request):
+        """Generate the request's task data, pad it to its bucket mloc
+        and enqueue it.  Queues are per (compat, bucket-mloc): a padded
+        request's PRNG stream depends on its padded shape (the
+        randomized coreset draws per-row), so re-padding at admission
+        would break bit-parity with the one-shot baseline — each
+        request is padded exactly once, here."""
+        if req.m % req.k:
+            raise ValueError(f"k={req.k} must divide m={req.m}")
+        task = req.make_task()
+        mloc_b = self.lattice.bucket_mloc(req.m // req.k)
+        x, y, alive = tasks.pad_shards(task.x, task.y, mloc_b)
+        if alive.shape[1] != req.m // req.k:
+            self.stats.padded_requests += 1
+        self._queues[(CompatKey.of(req), mloc_b)].append(
+            (req, task, (x, y, alive, req.make_key())))
+
+    def queued(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    # -- one dispatch ------------------------------------------------------
+
+    def _mesh(self, k: int):
+        if k not in self._meshes:
+            self._meshes[k] = sharded_batched.make_players_mesh(k)
+        return self._meshes[k]
+
+    def _compiled(self, bucket: BucketKey, x, y, alive, keys):
+        compat = bucket.compat
+        if compat.engine == "sharded":
+            build = lambda: sharded_batched.lower_classify_sharded(  # noqa: E731
+                x, y, alive, keys, compat.cfg, compat.cls,
+                mesh=self._mesh(compat.cfg.k))
+        else:
+            build = lambda: batched.lower_classify(  # noqa: E731
+                x, y, alive, keys, compat.cfg, compat.cls)
+        return self.cache.get(bucket, build)
+
+    def _dispatch(self, bucket: BucketKey, x, y, alive, keys, m_true):
+        """Compile-cache lookup + engine run → (result, service_s).
+
+        ``service_s`` excludes any cache-miss compile — ``run_stream``
+        charges compile time separately from the cache's ``compile_s``
+        counter.
+        """
+        compiled = self._compiled(bucket, x, y, alive, keys)
+        compat = bucket.compat
+        t0 = time.perf_counter()
+        if compat.engine == "sharded":
+            res = sharded_batched.run_accurately_classify_sharded(
+                x, y, keys, compat.cfg, compat.cls,
+                mesh=self._mesh(compat.cfg.k), alive=alive,
+                compiled=compiled, m_true=m_true)
+        else:
+            res = batched.run_accurately_classify_batched(
+                x, y, keys, compat.cfg, compat.cls, alive=alive,
+                compiled=compiled, m_true=m_true)
+        return res, time.perf_counter() - t0
+
+    def step(self, now: float = 0.0):
+        """Admit one batch from the fullest-eligible queue and dispatch.
+
+        Returns (completions, service_s) — empty if nothing is queued.
+        Admission pops up to bucket-B requests per compat group; the
+        rest stay queued for the next step (the "slots free up" cycle).
+        """
+        qkey = self._pick_queue()
+        if qkey is None:
+            return [], 0.0
+        compat, mloc_b = qkey
+        q = self._queues[qkey]
+        B = self.lattice.bucket_b(len(q))
+        take = min(len(q), B)
+        admitted = [q.popleft() for _ in range(take)]
+        if not q:
+            del self._queues[qkey]
+        items = [a[2] for a in admitted]
+        x, y, alive, keys, n_real = batched.stack_for_dispatch(items, B)
+        bucket = BucketKey(compat=compat, B=B, mloc=mloc_b)
+        m_true = np.array([a[0].m for a in admitted]
+                          + [admitted[0][0].m] * (B - n_real))
+        res, service_s = self._dispatch(bucket, x, y, alive, keys,
+                                        m_true)
+        self.stats.note(bucket, n_real, B)
+        completions = []
+        for lane, (req, task, _data) in enumerate(admitted):
+            completions.append(Completion(
+                request=req, task=task, result=res, lane=lane,
+                bucket=bucket,
+                queue_wait_s=max(now - req.arrival_s, 0.0),
+                service_s=service_s,
+                latency_s=max(now - req.arrival_s, 0.0) + service_s))
+        return completions, service_s
+
+    def _pick_queue(self):
+        """Oldest head request wins — FIFO across bucket queues."""
+        best, best_t = None, None
+        for qkey, q in self._queues.items():
+            t = q[0][0].arrival_s
+            if best_t is None or t < best_t:
+                best, best_t = qkey, t
+        return best
+
+    # -- closed-loop stream ------------------------------------------------
+
+    def run_stream(self, requests) -> list:
+        """Serve an arrival-stamped request stream to completion.
+
+        Virtual clock: arrivals advance it when the server is idle,
+        dispatches advance it by their measured wall time (compile time
+        on a cache miss is charged to the dispatch that missed — warm
+        the cache first to measure steady state).
+        """
+        pending = sorted(requests, key=lambda r: (r.arrival_s, r.rid))
+        clock = 0.0
+        i = 0
+        completions = []
+        while i < len(pending) or self.queued():
+            # admit everything that has arrived by now
+            while i < len(pending) and pending[i].arrival_s <= clock:
+                self.submit(pending[i])
+                i += 1
+            if not self.queued():
+                clock = max(clock, pending[i].arrival_s)
+                continue
+            if self.policy == "fill" and i < len(pending):
+                deadline = self._fill_deadline()
+                if deadline is not None and clock < deadline:
+                    # hold admission for a fuller batch, but never past
+                    # the head request's deadline
+                    clock = max(clock,
+                                min(pending[i].arrival_s, deadline))
+                    continue
+            compile_s0 = self.cache.stats.compile_s
+            done, service_s = self.step(now=clock)
+            dcompile = self.cache.stats.compile_s - compile_s0
+            clock += service_s + dcompile
+            for c in done:
+                c.latency_s += dcompile
+                completions.append(c)
+        return completions
+
+    def _fill_deadline(self) -> float | None:
+        """Virtual time at which the oldest queue must dispatch even if
+        not full; None when it is already full enough."""
+        q = self._queues[self._pick_queue()]
+        if len(q) >= self.lattice.max_b:
+            return None
+        return q[0][0].arrival_s + self.fill_wait_s
+
+    # -- warmup ------------------------------------------------------------
+
+    def warm(self, requests, b_sizes: tuple | None = None) -> int:
+        """Compile every bucket a request set can reach.
+
+        The admission policy picks the bucket B from the instantaneous
+        queue depth, so replaying a trace once does NOT deterministically
+        visit every bucket the next replay will.  This enumerates the
+        reachable set — each distinct (compat, bucket-mloc) × each
+        lattice B — and compiles the missing ones with representative
+        payloads, so a warmed scheduler serves any arrival order of
+        these requests with zero recompiles.  Returns the number of
+        programs compiled.
+        """
+        groups = {}
+        for req in requests:
+            mloc_b = self.lattice.bucket_mloc(req.m // req.k)
+            groups.setdefault((CompatKey.of(req), mloc_b), req)
+        before = self.cache.stats.compiles
+        for (compat, mloc_b), req in groups.items():
+            task = req.make_task()
+            x, y, alive = tasks.pad_shards(task.x, task.y, mloc_b)
+            item = (x, y, alive, req.make_key())
+            for B in (b_sizes or self.lattice.b_sizes):
+                xb, yb, ab, keys, _ = batched.stack_for_dispatch(
+                    [item], B)
+                self._compiled(BucketKey(compat=compat, B=B,
+                                         mloc=mloc_b),
+                               xb, yb, ab, keys)
+        return self.cache.stats.compiles - before
+
+    # -- parity baseline ---------------------------------------------------
+
+    def one_shot(self, req: Request):
+        """The one-shot engine run the scheduler must reproduce bit for
+        bit: B=1, the request's own bucket mloc, same key.  Uses the
+        same compile cache (B=1 buckets), so repeated parity checks
+        don't recompile."""
+        task = req.make_task()
+        mloc_b = self.lattice.bucket_mloc(req.m // req.k)
+        x, y, alive = tasks.pad_shards(task.x, task.y, mloc_b)
+        x, y, alive, keys, _ = batched.stack_for_dispatch(
+            [(x, y, alive, req.make_key())], 1)
+        bucket = BucketKey(compat=CompatKey.of(req), B=1, mloc=mloc_b)
+        res, _ = self._dispatch(bucket, x, y, alive, keys,
+                                np.array([req.m]))
+        return res
+
+
+# ---------------------------------------------------------------------------
+# Arrival traces
+# ---------------------------------------------------------------------------
+
+def poisson_trace(n: int, rate_per_s: float, seed: int = 0):
+    """n exponential inter-arrival gaps (a Poisson process), as stamps."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate_per_s, size=n)
+    return np.cumsum(gaps)
+
+
+def bursty_trace(n: int, rate_per_s: float, burst: int = 8,
+                 seed: int = 0):
+    """Same mean rate, but arrivals land in bursts of ``burst`` at the
+    burst's start — the worst case for a fill policy's head latency."""
+    rng = np.random.default_rng(seed)
+    n_bursts = int(np.ceil(n / burst))
+    gaps = rng.exponential(burst / rate_per_s, size=n_bursts)
+    starts = np.cumsum(gaps)
+    return np.repeat(starts, burst)[:n]
+
+
+def make_request_stream(n: int, arrivals, shapes, seed0: int = 0,
+                        **common) -> list:
+    """n requests cycling through ``shapes`` (dicts of Request field
+    overrides), stamped with ``arrivals``."""
+    reqs = []
+    for i in range(n):
+        fields = dict(shapes[i % len(shapes)])
+        fields.update(common)
+        reqs.append(Request(rid=i, seed=seed0 + i,
+                            arrival_s=float(arrivals[i]), **fields))
+    return reqs

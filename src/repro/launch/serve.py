@@ -14,6 +14,13 @@ Two workloads share this entry point:
   adversarial noise model (core/scenarios.py): uniform flips, targeted
   flips on the heaviest points, a byzantine player corrupting its whole
   shard, boundary-hugging noise, or drifting noise waves.
+* ``--workload serve-stream`` — continuous batching: a stream of
+  heterogeneous requests (mixed m, noise, scenario) replayed from a
+  Poisson or bursty arrival trace through
+  :mod:`repro.launch.scheduler`'s shape-bucketed compile cache.
+  Reports tasks/sec, p50/p99 latency per bucket, and the cache
+  hit/miss/compile counters (steady state after ``--warmup`` must show
+  zero compiles).
 
 Usage:
     python -m repro.launch.serve --arch qwen3-32b --smoke \
@@ -22,11 +29,14 @@ Usage:
         --batch 32 --m 512 --k 4 --noise 2
     python -m repro.launch.serve --workload classify --engine sharded \
         --scenario byzantine --batch 8 --m 512 --k 4
+    python -m repro.launch.serve --workload serve-stream \
+        --requests 64 --trace poisson --rate 100 --policy pack
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import functools
 import json
 import time
@@ -144,10 +154,73 @@ def run_classify(args) -> dict:
     return result
 
 
+def _next_pow2(v: int) -> int:
+    return 1 << max(v - 1, 1).bit_length()
+
+
+def run_serve_stream(args) -> dict:
+    """Replay a mixed-shape request stream through the scheduler."""
+    from repro.launch import scheduler as S
+
+    if args.m % (2 * args.k):
+        raise SystemExit(
+            f"--m {args.m} must be a multiple of 2*k={2 * args.k}: the "
+            "serve-stream shape mix includes m/2, and every shape's k "
+            "shards must be equal-sized")
+    n = args.requests
+    shapes = [
+        {"m": args.m // 2, "noise": 0},
+        {"m": args.m, "noise": args.noise},
+        {"m": args.m * 2, "noise": args.noise,
+         "scenario": args.scenario},
+    ]
+    if args.trace == "bursty":
+        arrivals = S.bursty_trace(n, rate_per_s=args.rate,
+                                  burst=args.burst, seed=args.seed)
+    else:
+        arrivals = S.poisson_trace(n, rate_per_s=args.rate,
+                                   seed=args.seed)
+    reqs = S.make_request_stream(
+        n, arrivals, shapes, seed0=args.seed, k=args.k,
+        clsname=args.cls, domain=args.domain,
+        num_features=args.features,
+        coreset_size=args.coreset, opt_budget=args.opt_budget,
+        engine=args.engine)
+    # one lattice point per distinct shape: the next power of two over
+    # each shape's per-player mloc (deduped, so nearby shapes share)
+    lattice = S.BucketLattice(
+        b_sizes=(1, 4, 8),
+        mloc_sizes=tuple(sorted({_next_pow2(s["m"] // args.k)
+                                 for s in shapes})))
+    sched = S.BoostScheduler(lattice=lattice, policy=args.policy,
+                             fill_wait_s=args.fill_wait)
+    if args.warmup:
+        sched.warm(reqs)                # compile every reachable bucket
+    warm = dataclasses.replace(sched.cache.stats)
+    done = sched.run_stream(reqs)
+    result = {
+        "workload": "serve-stream", "engine": args.engine,
+        "trace": args.trace, "policy": args.policy,
+        "requests": n, "dispatches": sched.stats.dispatches,
+        "padded_requests": sched.stats.padded_requests,
+        "filler_lanes": sched.stats.filler_lanes,
+        "cache_hits": sched.cache.stats.hits,
+        "cache_compiles": sched.cache.stats.compiles,
+        "steady_compiles": sched.cache.stats.compiles - warm.compiles,
+        "ok": sum(c.ok for c in done),
+        **S.latency_summary(done),
+    }
+    if args.engine == "sharded":
+        result["ledger_validated"] = sum(
+            bool(c.validate_ledger()) for c in done if c.ok)
+    print(json.dumps(result))
+    return result
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--workload", default="lm",
-                    choices=["lm", "classify"])
+                    choices=["lm", "classify", "serve-stream"])
     ap.add_argument("--arch", default="deepseek-7b")
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--batch", type=int, default=4)
@@ -168,8 +241,21 @@ def main():
     ap.add_argument("--scenario", default=None,
                     choices=[None, "clean", "uniform", "targeted_heavy",
                              "byzantine", "boundary", "drift"])
+    # serve-stream workload
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--trace", default="poisson",
+                    choices=["poisson", "bursty"])
+    ap.add_argument("--rate", type=float, default=100.0)
+    ap.add_argument("--burst", type=int, default=8)
+    ap.add_argument("--policy", default="pack",
+                    choices=["pack", "fill"])
+    ap.add_argument("--fill-wait", type=float, default=0.05)
+    ap.add_argument("--warmup", action=argparse.BooleanOptionalAction,
+                    default=True)
     args = ap.parse_args()
-    if args.workload == "classify":
+    if args.workload == "serve-stream":
+        run_serve_stream(args)
+    elif args.workload == "classify":
         run_classify(args)
     else:
         run(args)
