@@ -1,0 +1,156 @@
+"""Fault-injection benchmark: infrastructure adversaries + preemption.
+
+Three gates make this a regression test, not just a report (run.py
+exits non-zero if any trips):
+
+* **engine parity under the mask** — for every adversary (dropout,
+  flaky, rejoin) the sharded engine's outputs are bit-identical to the
+  local batched engine given the same player schedule;
+* **ledger ≡ payload under the mask** — every ok sharded lane passes
+  ``validate_ledger`` (Theorem 4.1 bits vs measured collective
+  payloads, with only alive players' messages charged), and the masked
+  run charges strictly fewer bits than the all-alive baseline;
+* **preempt/resume parity** — a scheduler stream with an injected
+  preemption (checkpoint → requeue → resume) completes every request
+  bit-identical to its ``one_shot`` run.
+
+Reported: tasks/sec per adversary and the communication saved by the
+mask, plus the preempted stream's end-to-end rate (NOTE: the stepping
+programs compile through the implicit jit cache, so this number
+includes their one-time compiles — it gates parity, not latency).
+
+``REPRO_BENCH_SMOKE=1`` (the CI bench-smoke job) shrinks the batch;
+the gates are identical at both scales.
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro.core import batched, scenarios, sharded_batched, tasks, weak
+from repro.core.types import BoostConfig
+from repro.launch import scheduler as S
+
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+B = 2 if SMOKE else 8
+M = 256 if SMOKE else 512
+N = 1 << 12
+N_REQUESTS = 12 if SMOKE else 48
+
+SPECS = {
+    "dropout": scenarios.InfraSpec(name="dropout", player=1,
+                                   drop_round=5),
+    "flaky": scenarios.InfraSpec(name="flaky", player=2, miss_rate=0.3,
+                                 horizon=64),
+    "rejoin": scenarios.InfraSpec(name="rejoin", player=0, drop_round=4,
+                                  rejoin_round=12),
+}
+
+
+def _assert_engine_parity(ref, got):
+    np.testing.assert_array_equal(ref.hypotheses, got.hypotheses)
+    np.testing.assert_array_equal(ref.attempts, got.attempts)
+    np.testing.assert_array_equal(ref.disputed, got.disputed)
+    np.testing.assert_array_equal(ref.hist_players, got.hist_players)
+
+
+def bench_adversary(name: str) -> dict:
+    cls = weak.Thresholds(n=N)
+    cfg = BoostConfig(k=4, coreset_size=100, domain_size=N,
+                      opt_budget=16)
+    spec = SPECS[name]
+    sched = spec.schedule(4, seed=0)
+    x, y, ts = tasks.make_batch(cls, B, M, 4, 3, seed0=11)
+    keys = jax.random.split(jax.random.key(5), B)
+    run = batched.run_accurately_classify_batched
+    baseline = run(x, y, keys, cfg, cls)
+    run(x, y, keys, cfg, cls, player_sched=sched)      # warm
+    t0 = time.perf_counter()
+    res = run(x, y, keys, cfg, cls, player_sched=sched)
+    wall = time.perf_counter() - t0
+    assert bool(res.ok.all())
+    mesh = sharded_batched.make_players_mesh(4)
+    got = sharded_batched.run_accurately_classify_sharded(
+        x, y, keys, cfg, cls, mesh=mesh, player_sched=sched)
+    _assert_engine_parity(res, got)                    # gate 1
+    bits_masked = bits_full = 0
+    for b in range(B):
+        got.validate_ledger(b)                         # gate 2
+        bits_masked += got.ledger(b).total_bits
+        bits_full += baseline.ledger(b).total_bits
+        rep = scenarios.infra_report(ts[b], res, b, spec)
+        assert rep["guarantee_ok"], (name, b, rep)
+    assert bits_masked < bits_full, (name, bits_masked, bits_full)
+    return {
+        "bench": f"fault_{name}",
+        "us_per_call": round(1e6 * wall / B, 1),
+        "derived": (f"tps={round(B / max(wall, 1e-9), 1)};"
+                    f"bits_saved_pct="
+                    f"{round(100 * (1 - bits_masked / bits_full), 1)};"
+                    f"survivor_guarantees={B}/{B}"),
+        "tasks_per_s": round(B / max(wall, 1e-9), 2),
+        "bits_masked": bits_masked,
+        "bits_all_alive": bits_full,
+    }
+
+
+def bench_preempt_resume() -> dict:
+    shapes = [{"m": 64, "k": 2, "noise": 1},
+              {"m": 128, "k": 2, "noise": 2}]
+    lattice = S.BucketLattice(b_sizes=(2, 4), mloc_sizes=(32, 64))
+    common = dict(coreset_size=48, opt_budget=6)
+    arrivals = S.poisson_trace(N_REQUESTS, rate_per_s=500.0, seed=5)
+    reqs = S.make_request_stream(N_REQUESTS, arrivals, shapes,
+                                 seed0=11, **common)
+    with tempfile.TemporaryDirectory() as ck:
+        sched = S.BoostScheduler(lattice=lattice, ckpt_dir=ck,
+                                 preempt={0: 3, 1: 4})
+        sched.warm(reqs, b_sizes=lattice.b_sizes + (1,))
+        t0 = time.perf_counter()
+        done = sched.run_stream(reqs)
+        wall = time.perf_counter() - t0
+        assert len(done) == N_REQUESTS
+        assert sched.stats.preemptions == 2
+        assert sched.stats.resumes == 2
+        idx = np.linspace(0, len(done) - 1,
+                          min(8, len(done)), dtype=int)
+        for i in idx:                                  # gate 3
+            c = done[int(i)]
+            one = sched.one_shot(c.request)
+            np.testing.assert_array_equal(
+                c.result.hypotheses[c.lane], one.hypotheses[0])
+            np.testing.assert_array_equal(
+                c.result.disputed[c.lane], one.disputed[0])
+            if c.ok:
+                assert (c.per_task().ledger.total_bits
+                        == one.per_task(0).ledger.total_bits)
+        resumed = [c for c in done if c.resumed]
+    return {
+        "bench": "fault_preempt_resume",
+        "us_per_call": round(1e6 * wall / N_REQUESTS, 1),
+        "derived": (f"tps={round(N_REQUESTS / max(wall, 1e-9), 1)};"
+                    f"preemptions={sched.stats.preemptions};"
+                    f"resumed_requests={len(resumed)};"
+                    f"parity_checked={len(idx)}"),
+        "tasks_per_s": round(N_REQUESTS / max(wall, 1e-9), 2),
+        "preemptions": sched.stats.preemptions,
+        "resumes": sched.stats.resumes,
+    }
+
+
+def run_all():
+    rows = [bench_adversary(name) for name in sorted(SPECS)]
+    rows.append(bench_preempt_resume())
+    return rows
+
+
+if __name__ == "__main__":
+    import json
+
+    for row in run_all():
+        print(row["bench"], json.dumps(row))

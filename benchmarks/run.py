@@ -2,13 +2,22 @@
 
 Prints ``name,us_per_call,derived`` CSV (plus bench-specific fields in
 the derived column).  ``python -m benchmarks.run [--only NAME[,NAME…]]``.
+
+Besides ``--out`` (the merged machine-readable results), every run
+appends one dated ``BENCH_<n>.json`` snapshot at the repo root — the
+perf-trajectory record: n increments monotonically, each file carries
+the date, the suites run and their rows, so regressions are diffable
+across PRs (the CI bench-smoke job uploads the snapshot as an
+artifact).  ``--no-trajectory`` suppresses it.
 """
 
 from __future__ import annotations
 
 import argparse
+import glob
 import json
 import os
+import re
 import sys
 import time
 
@@ -30,12 +39,13 @@ def _ensure_src_importable() -> None:
 
 
 def _suite():
-    from benchmarks import (baselines, batched_classify, finite_class,
-                            kernel_micro, paper_claims, roofline,
-                            serving, sharded_scenarios)
+    from benchmarks import (baselines, batched_classify, fault_injection,
+                            finite_class, kernel_micro, paper_claims,
+                            roofline, serving, sharded_scenarios)
     return {
         "batched_classify": batched_classify.run_all,
         "serving": serving.run_all,
+        "fault_injection": fault_injection.run_all,
         "sharded_scenarios": sharded_scenarios.run_all,
         "comm_vs_opt": paper_claims.comm_vs_opt,
         "comm_vs_k": paper_claims.comm_vs_k,
@@ -52,11 +62,42 @@ def _suite():
     }
 
 
+def _repo_root() -> str:
+    return os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def write_trajectory_snapshot(all_rows: dict, failures: int,
+                              only: str | None) -> str:
+    """Append the next dated BENCH_<n>.json at the repo root."""
+    root = _repo_root()
+    taken = []
+    for f in glob.glob(os.path.join(root, "BENCH_*.json")):
+        m = re.fullmatch(r"BENCH_(\d+)\.json", os.path.basename(f))
+        if m:
+            taken.append(int(m.group(1)))
+    n = max(taken, default=0) + 1
+    path = os.path.join(root, f"BENCH_{n}.json")
+    snapshot = {
+        "n": n,
+        "date": time.strftime("%Y-%m-%d %H:%M:%S"),
+        "only": only,
+        "suites_run": sorted(all_rows),
+        "failures": failures,
+        "results": all_rows,
+    }
+    with open(path, "w") as f:
+        json.dump(snapshot, f, indent=1, default=str)
+    return path
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated benchmark names")
     ap.add_argument("--out", default="experiments/bench_results.json")
+    ap.add_argument("--no-trajectory", action="store_true",
+                    help="skip the dated BENCH_<n>.json repo-root "
+                         "snapshot")
     args = ap.parse_args()
     _ensure_src_importable()
     suite = _suite()
@@ -106,6 +147,13 @@ def main() -> None:
         all_rows = merged
     with open(args.out, "w") as f:
         json.dump(all_rows, f, indent=1, default=str)
+    if not args.no_trajectory:
+        # only suites that actually produced rows; failures are counted
+        # in the snapshot's own field, not smuggled in as null results
+        path = write_trajectory_snapshot(
+            {n: all_rows[n] for n in suite if n in all_rows},
+            failures, args.only)
+        print(f"# trajectory snapshot: {path}", file=sys.stderr)
     if failures:
         raise SystemExit(1)
 

@@ -1,0 +1,110 @@
+"""Fault-tolerant protocol execution, end to end.
+
+Demonstrates the three layers ISSUE 4 added:
+
+1. **Infrastructure adversaries** — dropout / flaky / rejoin player
+   schedules run through the batched engine: the protocol proceeds with
+   k′ < k players, the guarantee E_S(f) ≤ OPT holds over the surviving
+   shards, and the masked communication ledger charges strictly fewer
+   bits than the all-alive run.
+2. **Round-granular stepping** — the same protocol executed in 3-round
+   slices via ``init_state / run_rounds / finalize``, bit-identical to
+   the monolithic dispatch.
+3. **Checkpoint / resume** — a run preempted mid-protocol, its state
+   serialized to a msgpack file, restored and completed — the output is
+   bit-identical to the uninterrupted run.
+
+    PYTHONPATH=src python examples/fault_tolerance.py
+"""
+
+import argparse
+import os
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.core import batched, scenarios, tasks, weak
+from repro.ckpt import msgpack_ckpt
+from repro.core.types import BoostConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=3)
+    ap.add_argument("--m", type=int, default=512)
+    ap.add_argument("--k", type=int, default=4)
+    ap.add_argument("--noise", type=int, default=3)
+    a = ap.parse_args()
+
+    N = 1 << 12
+    cls = weak.Thresholds(n=N)
+    cfg = BoostConfig(k=a.k, coreset_size=100, domain_size=N,
+                      opt_budget=16)
+    x, y, ts = tasks.make_batch(cls, a.batch, a.m, a.k, a.noise,
+                                seed0=11)
+    keys = jax.random.split(jax.random.key(5), a.batch)
+    baseline = batched.run_accurately_classify_batched(x, y, keys, cfg,
+                                                       cls)
+
+    # -- 1: infrastructure adversaries ----------------------------------
+    specs = [
+        scenarios.InfraSpec(name="dropout", player=1, drop_round=5),
+        scenarios.InfraSpec(name="flaky", player=2, miss_rate=0.3),
+        scenarios.InfraSpec(name="rejoin", player=0, drop_round=4,
+                            rejoin_round=12),
+    ]
+    for spec in specs:
+        sched = spec.schedule(a.k, seed=0)
+        res = batched.run_accurately_classify_batched(
+            x, y, keys, cfg, cls, player_sched=sched)
+        print(f"adversary {spec.name}: "
+              f"survivors={int(spec.survivors(a.k).sum())}/{a.k}")
+        for b in range(a.batch):
+            rep = scenarios.infra_report(ts[b], res, b, spec)
+            saved = 1 - res.ledger(b).total_bits \
+                / baseline.ledger(b).total_bits
+            ok = "OK " if rep["guarantee_ok"] else "BAD"
+            print(f"  task {b}: E_surv={rep['errors']:2d} "
+                  f"OPT_surv={rep['opt']:2d} [{ok}] "
+                  f"attempts={rep['attempts']} "
+                  f"bits={rep['bits']} (saved {saved:.1%} vs all-alive)")
+
+    # -- 2: round-granular stepping --------------------------------------
+    state = batched.init_state(x, y, keys, cfg)
+    slices = 0
+    a_max = cfg.opt_budget + 1
+    while bool(np.any(~np.asarray(state.done)
+                      & (np.asarray(state.attempt) < a_max))):
+        state = batched.run_rounds(state, x, y, cfg, cls, n=3)
+        slices += 1
+    sliced = batched.finalize(state, x, y, baseline.alive0, cfg, cls)
+    same = np.array_equal(baseline.hypotheses, sliced.hypotheses)
+    print(f"stepping: {slices} slices of 3 rounds — "
+          f"bit-identical to monolithic run: {same}")
+
+    # -- 3: checkpoint / resume ------------------------------------------
+    state = batched.run_rounds(batched.init_state(x, y, keys, cfg),
+                               x, y, cfg, cls, n=4)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "engine_state.msgpack")
+        msgpack_ckpt.save_pytree(path, jax.device_get(state),
+                                 meta={"rounds_done": 4})
+        size = os.path.getsize(path)
+        del state                             # the preemption
+        template = batched.init_state(x, y, keys, cfg)
+        restored, meta = msgpack_ckpt.load_pytree(path, like=template)
+        done = batched.run_rounds(restored, x, y, cfg, cls)
+    resumed = batched.finalize(done, x, y, baseline.alive0, cfg, cls)
+    same = (np.array_equal(baseline.hypotheses, resumed.hypotheses)
+            and np.array_equal(baseline.disputed, resumed.disputed)
+            and all(baseline.ledger(b).total_bits
+                    == resumed.ledger(b).total_bits
+                    for b in range(a.batch)))
+    print(f"checkpoint/resume: preempted after "
+          f"{meta['rounds_done']} rounds, state file {size / 1024:.1f} "
+          f"KiB — resumed run bit-identical: {same}")
+
+
+if __name__ == "__main__":
+    main()

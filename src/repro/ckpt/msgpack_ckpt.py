@@ -52,7 +52,14 @@ def save_pytree(path: str, tree, meta: dict | None = None) -> None:
 
 def load_pytree(path: str, like=None):
     """Returns (tree_or_flat_dict, meta).  With ``like``, restores the
-    exact pytree structure of ``like``."""
+    exact pytree structure of ``like``.
+
+    Restoring into a template of mismatched shapes (e.g. resuming a
+    round-granular engine state against a different batch or opt_budget)
+    fails loudly per leaf instead of surfacing as a reshape error deep
+    inside a jit trace — checkpoint/resume parity depends on the state
+    landing in exactly the slots it left.
+    """
     with open(path, "rb") as f:
         payload = msgpack.unpackb(f.read())
     arrays = {
@@ -69,10 +76,17 @@ def load_pytree(path: str, like=None):
         raise KeyError(f"checkpoint missing keys: {sorted(missing)[:5]}...")
     flat, treedef = jax.tree_util.tree_flatten_with_path(like)
     leaves = []
-    for path, leaf in flat:
+    for tree_path, leaf in flat:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                       for p in path)
-        leaves.append(jnp.asarray(arrays[key]).astype(leaf.dtype))
+                       for p in tree_path)
+        arr = arrays[key]
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(
+                f"checkpoint leaf {key!r} has shape {tuple(arr.shape)} "
+                f"but the template expects {tuple(np.shape(leaf))} — "
+                f"restore against the inputs the state was saved for "
+                f"(file: {path})")
+        leaves.append(jnp.asarray(arr).astype(leaf.dtype))
     return jax.tree_util.tree_unflatten(
         jax.tree_util.tree_structure(like), leaves), meta
 

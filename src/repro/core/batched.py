@@ -1,36 +1,50 @@
-"""Device-resident batched AccuratelyClassify engine.
+"""Device-resident batched AccuratelyClassify engine, round-steppable.
 
 The host-driven loop in :mod:`repro.core.classify` dispatches one
 BoostAttempt at a time and round-trips to numpy for every quarantine —
 ``O(B · attempts)`` dispatches for B independent tasks.  This module
-runs B tasks in ONE jitted program: the outer attempt loop, the inner
-BoostAttempt round loop, the stuck check, the full-point quarantine and
-the dispute bookkeeping are all ``lax.while_loop`` bodies ``vmap``-ed
-over a leading task axis, so the host sees exactly one dispatch per
-batch.
+runs B tasks in ONE jitted program, and (since the fault-tolerance PR)
+exposes the protocol as a **round-granular stepping API**:
 
-Semantics are the reference loop's, bit for bit (tests/test_batched.py
-asserts it):
+* :func:`init_state`   — build the full protocol state (a pytree of
+  arrays, msgpack-serializable for checkpoint/resume);
+* :func:`run_rounds`   — advance every unfinished task by up to ``n``
+  wire rounds (one step = one BoostAttempt round; attempt transitions —
+  stuck→quarantine→retry, success, budget exhaustion — happen *inside*
+  the step body, so a task crosses attempt boundaries mid-slice);
+* :func:`finalize`     — materialise a :class:`BatchedClassifyResult`.
+
+``run_rounds(state, ..., n=∞)`` is the whole protocol; running it in
+slices (a preemptible scheduler, a checkpoint every N rounds) produces
+bit-identical output to the uninterrupted run — the step body is the
+same program either way, and the state round-trips exactly
+(tests/test_fault_tolerance.py pins both).
+
+**Fault tolerance.**  Every round consults a dynamic ``player_alive
+[k]`` mask (row ``min(step, R−1)`` of a ``[R, k]`` schedule): an absent
+player sends no coreset and no weight sum (its mixture weight is 0 and
+its coreset rows are excluded from quarantine matching), receives no
+hypothesis (its MW state freezes), and the ledger charges only bits
+alive players actually moved (`ledger.boost_attempt_ledger_masked`).
+With the default all-alive schedule every value — floats included — is
+bit-identical to the pre-fault-tolerance engine; the host-reference
+parity suite (tests/test_batched.py) keeps that honest.
+
+Semantics are the reference loop's, bit for bit:
 
 * the per-attempt PRNG stream is the same ``key, sub = split(key)``
-  sequence ``run_accurately_classify`` performs on the host;
+  sequence ``run_accurately_classify`` performs on the host (keys are
+  carried as raw ``key_data`` words so the state is pure numerics);
 * the round bound is the paper's dynamic T = ⌈6·log2 m_alive⌉ per task
-  per attempt (a traced bound inside a fixed ⌈6·log2 m⌉-sized program);
+  per attempt, with m_alive counting examples of players alive at the
+  attempt's first round;
 * quarantine is the array form of np.unique/np.isin — masked
   point-matching against the stuck coreset (classify.match_points),
-  with the dispute-table size from classify.distinct_count so the
-  communication ledger charges the identical bit counts.
+  with the dispute-table size from classify.distinct_count_masked so
+  the communication ledger charges the identical bit counts.
 
 Tasks finish at different attempt counts; finished lanes freeze (the
-standard vmap-of-while masking) while stragglers continue.  Dead lanes
-cost only select ops, so a batch is as slow as its slowest task, not
-the sum.
-
-The per-task protocol state (hits, alive, dispute masks) is small and
-uniform across tasks — the regime where distributed-boosting analyses
-(Chen–Balcan–Chau; smooth-boosting weight caps, Blanc et al. 2024) put
-the bottleneck on per-round work rather than communication — which is
-exactly what this engine amortises across the batch.
+standard vmap-of-while masking) while stragglers continue.
 """
 
 from __future__ import annotations
@@ -48,19 +62,40 @@ from repro.core import weights as W
 from repro.core.types import BoostConfig, ClassifyResult, Ledger
 
 
-class _TaskCarry(NamedTuple):
-    attempt: jax.Array       # int32 — attempts executed so far
-    done: jax.Array          # bool  — some attempt succeeded
-    alive: jax.Array         # [k, mloc] current alive mask
-    disputed: jax.Array      # [k, mloc] quarantined-example mask
-    key: jax.Array
-    h_params: jax.Array      # [T_buf, 4] ensemble of the winning attempt
-    rounds: jax.Array        # int32 rounds of the winning attempt
-    min_loss: jax.Array      # last center ERM loss (diagnostic)
-    hist_stuck: jax.Array    # [A] bool   per-attempt stuck flag
-    hist_rounds: jax.Array   # [A] int32  per-attempt rounds
-    hist_alive: jax.Array    # [A] int32  alive count entering the attempt
-    hist_p: jax.Array        # [A] int32  distinct disputed points
+class StepState(NamedTuple):
+    """Whole-protocol state of B tasks, one wire round at a time.
+
+    Every field carries a leading ``[B]`` task axis; PRNG keys are raw
+    ``key_data`` words (uint32) so the tuple is a plain-array pytree —
+    msgpack-serializable via ckpt/msgpack_ckpt with no special cases.
+    """
+
+    # -- protocol-level ---------------------------------------------------
+    attempt: jax.Array        # int32 — attempts executed so far
+    done: jax.Array           # bool  — some attempt succeeded
+    alive: jax.Array          # [k, mloc] current alive-example mask
+    disputed: jax.Array       # [k, mloc] quarantined-example mask
+    key_data: jax.Array       # task key (raw words)
+    h_params: jax.Array       # [t_buf, 4] ensemble of the winning attempt
+    rounds: jax.Array         # int32 rounds of the winning attempt
+    min_loss: jax.Array       # last center ERM loss (diagnostic)
+    hist_stuck: jax.Array     # [A] bool   per-attempt stuck flag
+    hist_rounds: jax.Array    # [A] int32  per-attempt rounds
+    hist_alive: jax.Array     # [A] int32  alive examples entering attempt
+    hist_p: jax.Array         # [A] int32  distinct disputed points
+    hist_players: jax.Array       # [A] Σ_wire-rounds alive players
+    hist_players_h: jax.Array     # [A] same over successful rounds only
+    hist_players_last: jax.Array  # [A] alive players at the last round
+    # -- in-attempt -------------------------------------------------------
+    in_attempt: jax.Array     # bool — an attempt is in flight
+    akey_data: jax.Array      # current attempt's round key (raw words)
+    t: jax.Array              # int32 hypotheses produced this attempt
+    bound: jax.Array          # int32 this attempt's round bound
+    hits: jax.Array           # [k, mloc] MW state
+    cur_h: jax.Array          # [t_buf, 4] growing ensemble
+    core_x: jax.Array         # [k, c(, F)] last round's pooled coreset
+    core_y: jax.Array         # [k, c]
+    step: jax.Array           # int32 global wire-round counter
 
 
 def num_rounds_dynamic(cfg: BoostConfig, m_alive: jax.Array) -> jax.Array:
@@ -70,78 +105,195 @@ def num_rounds_dynamic(cfg: BoostConfig, m_alive: jax.Array) -> jax.Array:
     return jnp.ceil(cfg.rounds_factor * jnp.log2(m)).astype(jnp.int32)
 
 
-def _attempt_body(cfg: BoostConfig, cls, x, y, x_orders, t_buf: int,
-                  c: _TaskCarry) -> _TaskCarry:
-    # LOCKSTEP: core/sharded_batched.py mirrors this body (and the
-    # boost_attempt round body) with device-shard state + collectives;
-    # keep them in sync — tests/test_sharded_batched.py pins exact
-    # parity and fails on any divergence.
-    key, sub = jax.random.split(c.key)
-    m_alive = jnp.sum(c.alive.astype(jnp.int32))
-    bound = num_rounds_dynamic(cfg, m_alive)
-    hits0 = W.init_hits(x.shape[:2])
-    out = boost_attempt.boost_attempt_arrays(
-        x, y, c.alive, hits0, sub, cfg, cls, t_buf,
-        round_bound=bound, x_orders=x_orders)
-    stuck = out.stuck
-    # ---- full-point quarantine, array form (no-op unless stuck) --------
-    core_flat = out.core_x.reshape((-1,) + out.core_x.shape[2:])
-    dead_new = c.alive & classify.match_points(x, core_flat) & stuck
-    p_count = jnp.where(stuck, classify.distinct_count(core_flat), 0)
-    a = c.attempt
-    return _TaskCarry(
-        attempt=a + 1,
-        done=~stuck,
-        alive=c.alive & ~dead_new,
-        disputed=c.disputed | dead_new,
-        key=key,
-        h_params=jnp.where(stuck, c.h_params, out.h_params),
-        rounds=jnp.where(stuck, c.rounds, out.t),
-        min_loss=out.min_loss,
-        hist_stuck=c.hist_stuck.at[a].set(stuck),
-        hist_rounds=c.hist_rounds.at[a].set(out.t),
-        hist_alive=c.hist_alive.at[a].set(m_alive),
-        hist_p=c.hist_p.at[a].set(p_count),
-    )
+def canon_player_sched(player_sched, B: int, k: int) -> jax.Array:
+    """Normalise a player schedule to ``[B, R, k]`` bool.
+
+    Accepts None (all alive, R = 1), ``[R, k]`` (shared by every task)
+    or ``[B, R, k]``.  Row ``min(step, R−1)`` is the round's mask, so
+    the final row extends forever.  Every round must keep ≥ 1 player
+    alive (the mixture is undefined over zero senders).
+    """
+    if player_sched is None:
+        return jnp.ones((B, 1, k), bool)
+    sched = jnp.asarray(player_sched, bool)
+    if sched.ndim == 2:
+        sched = jnp.broadcast_to(sched[None], (B,) + sched.shape)
+    if sched.shape[0] != B or sched.shape[2] != k:
+        raise ValueError(
+            f"player_sched {sched.shape} incompatible with B={B}, k={k}")
+    if not bool(jnp.all(jnp.any(sched, axis=-1))):
+        raise ValueError("player_sched has a round with zero alive "
+                         "players — the protocol cannot proceed")
+    return sched
 
 
-def classify_one_arrays(x, y, alive0, key, cfg: BoostConfig, cls,
-                        t_buf: int) -> _TaskCarry:
-    """Whole-protocol AccuratelyClassify for ONE task, fully on device.
+def init_state(x, y, keys, cfg: BoostConfig, alive=None,
+               t_buf: int | None = None) -> StepState:
+    """Fresh protocol state for a [B, k, mloc(, F)] batch."""
+    x = jnp.asarray(x)
+    y = jnp.asarray(y)
+    B, k, mloc = x.shape[0], x.shape[1], x.shape[2]
+    if alive is None:
+        alive = jnp.ones((B, k, mloc), bool)
+    else:
+        alive = jnp.asarray(alive)
+    if t_buf is None:
+        t_buf = cfg.num_rounds(k * mloc)
+    a_max = cfg.opt_budget + 1
+    c = cfg.coreset_size
+    kd = jax.random.key_data(jnp.asarray(keys))
+    i32 = functools.partial(jnp.zeros, dtype=jnp.int32)
+    return StepState(
+        attempt=i32((B,)), done=jnp.zeros((B,), bool),
+        alive=alive, disputed=jnp.zeros_like(alive),
+        key_data=kd,
+        h_params=jnp.zeros((B, t_buf, weak.PARAM_DIM), jnp.float32),
+        rounds=i32((B,)), min_loss=jnp.zeros((B,), jnp.float32),
+        hist_stuck=jnp.zeros((B, a_max), bool),
+        hist_rounds=i32((B, a_max)), hist_alive=i32((B, a_max)),
+        hist_p=i32((B, a_max)), hist_players=i32((B, a_max)),
+        hist_players_h=i32((B, a_max)),
+        hist_players_last=i32((B, a_max)),
+        in_attempt=jnp.zeros((B,), bool),
+        akey_data=jnp.zeros_like(kd),
+        t=i32((B,)), bound=i32((B,)),
+        hits=W.init_hits((B, k, mloc)),
+        cur_h=jnp.zeros((B, t_buf, weak.PARAM_DIM), jnp.float32),
+        core_x=jnp.zeros((B, k, c) + x.shape[3:], x.dtype),
+        core_y=jnp.zeros((B, k, c), y.dtype),
+        step=i32((B,)))
 
-    ``t_buf`` is the static hypothesis-buffer size (≥ any dynamic round
-    bound, i.e. cfg.num_rounds(total sample size)).  Designed to be
-    ``vmap``-ed over a leading task axis — all shapes are fixed.
+
+def _one_step(cfg: BoostConfig, cls, x, y, x_orders, sched,
+              s: StepState) -> StepState:
+    """ONE wire round of ONE task (vmap-ed over the batch axis).
+
+    LOCKSTEP: core/sharded_batched.py mirrors this body with
+    device-shard state + collectives; keep them in sync — the exact
+    parity tests (tests/test_sharded_batched.py) fail on divergence.
     """
     a_max = cfg.opt_budget + 1
-    x1d = x if x.ndim == 2 else x[:, :, 0]
-    x_orders = jax.vmap(jnp.argsort)(x1d)   # hoisted across ALL attempts
-    carry = _TaskCarry(
-        attempt=jnp.int32(0), done=jnp.asarray(False),
-        alive=alive0, disputed=jnp.zeros_like(alive0),
-        key=key,
-        h_params=jnp.zeros((t_buf, weak.PARAM_DIM), jnp.float32),
-        rounds=jnp.int32(0), min_loss=jnp.float32(0),
-        hist_stuck=jnp.zeros((a_max,), bool),
-        hist_rounds=jnp.zeros((a_max,), jnp.int32),
-        hist_alive=jnp.zeros((a_max,), jnp.int32),
-        hist_p=jnp.zeros((a_max,), jnp.int32),
-    )
+    active = (~s.done) & (s.attempt < a_max)
+    k = x.shape[0]
+    pa = sched[jnp.minimum(s.step, sched.shape[0] - 1)]          # [k]
+    # ---- attempt start (no-op when one is already in flight) ----------
+    start = ~s.in_attempt
+    tkey = jax.random.wrap_key_data(s.key_data)
+    nk, sub = jax.random.split(tkey)
+    key_data = jnp.where(start, jax.random.key_data(nk), s.key_data)
+    akey_data = jnp.where(start, jax.random.key_data(sub), s.akey_data)
+    m_alive = jnp.sum((s.alive & pa[:, None]).astype(jnp.int32))
+    a = s.attempt
+    bound = jnp.where(start, num_rounds_dynamic(cfg, m_alive), s.bound)
+    hits = jnp.where(start, W.init_hits(x.shape[:2]), s.hits)
+    cur_h = jnp.where(start, jnp.zeros_like(s.cur_h), s.cur_h)
+    t = jnp.where(start, 0, s.t)
+    hist_alive = jnp.where(start, s.hist_alive.at[a].set(m_alive),
+                           s.hist_alive)
+    # ---- one BoostAttempt round (the reference round body) ------------
+    y_sorted = jnp.take_along_axis(y, x_orders, axis=1)
+    alive_sorted = jnp.take_along_axis(s.alive, x_orders, axis=1)
+    carry = boost_attempt._Carry(
+        t=t, it=jnp.int32(0), stuck=jnp.asarray(False),
+        hits=hits, key=jax.random.wrap_key_data(akey_data),
+        h_params=cur_h,
+        core_idx=jnp.zeros((k, cfg.coreset_size), jnp.int32),
+        core_x=s.core_x, core_y=s.core_y, min_loss=s.min_loss)
+    out = boost_attempt._round_body(
+        cfg, cls, x, y, s.alive, x_orders, y_sorted, alive_sorted,
+        carry, player_alive=pa)
+    stuck = out.stuck
+    success = (~stuck) & (out.t >= bound)
+    ended = stuck | success
+    k_alive = jnp.sum(pa.astype(jnp.int32))
+    # ---- full-point quarantine, masked to the round's senders ---------
+    core_flat = out.core_x.reshape((-1,) + out.core_x.shape[2:])
+    valid_flat = jnp.repeat(pa, cfg.coreset_size)
+    masked_flat = classify.mask_invalid_points(core_flat, valid_flat)
+    dead_new = s.alive & classify.match_points(x, masked_flat) & stuck
+    p_count = jnp.where(
+        stuck, classify.distinct_count_masked(core_flat, valid_flat), 0)
+    nxt = StepState(
+        attempt=jnp.where(ended, a + 1, a),
+        done=s.done | success,
+        alive=s.alive & ~dead_new,
+        disputed=s.disputed | dead_new,
+        key_data=key_data,
+        h_params=jnp.where(success, out.h_params, s.h_params),
+        rounds=jnp.where(success, out.t, s.rounds),
+        min_loss=out.min_loss,
+        hist_stuck=jnp.where(ended, s.hist_stuck.at[a].set(stuck),
+                             s.hist_stuck),
+        hist_rounds=jnp.where(ended, s.hist_rounds.at[a].set(out.t),
+                              s.hist_rounds),
+        hist_alive=hist_alive,
+        hist_p=jnp.where(ended, s.hist_p.at[a].set(p_count), s.hist_p),
+        hist_players=s.hist_players.at[a].add(k_alive),
+        hist_players_h=s.hist_players_h.at[a].add(
+            jnp.where(stuck, 0, k_alive)),
+        hist_players_last=s.hist_players_last.at[a].set(k_alive),
+        in_attempt=~ended,
+        akey_data=jax.random.key_data(out.key),
+        t=out.t,
+        bound=bound,
+        hits=out.hits,
+        cur_h=out.h_params,
+        core_x=out.core_x, core_y=out.core_y,
+        step=s.step + 1)
+    # finished lanes freeze (vmap-of-while masking)
+    return jax.tree_util.tree_map(
+        lambda new, old: jnp.where(active, new, old), nxt, s)
 
-    def cond(cy: _TaskCarry):
-        return (~cy.done) & (cy.attempt < a_max)
 
-    return jax.lax.while_loop(
-        cond,
-        functools.partial(_attempt_body, cfg, cls, x, y, x_orders, t_buf),
-        carry)
+def _run_steps(x, y, sched, state: StepState, n, cfg: BoostConfig,
+               cls) -> StepState:
+    """Advance every active task by up to ``n`` wire rounds (traced)."""
+    a_max = cfg.opt_budget + 1
+    x1d = x if x.ndim == 3 else x[..., 0]
+    x_orders = jax.vmap(jax.vmap(jnp.argsort))(x1d)   # hoisted per slice
+
+    def active(s: StepState):
+        return (~s.done) & (s.attempt < a_max)
+
+    def cond(carry):
+        s, i = carry
+        return jnp.any(active(s)) & (i < n)
+
+    def body(carry):
+        s, i = carry
+        s2 = jax.vmap(functools.partial(_one_step, cfg, cls))(
+            x, y, x_orders, sched, s)
+        return s2, i + 1
+
+    out, _ = jax.lax.while_loop(cond, body, (state, jnp.int32(0)))
+    return out
+
+
+_RUN_FOREVER = jnp.int32(2 ** 30)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "cls"))
+def _run_rounds_jit(x, y, sched, state, n, cfg, cls):
+    return _run_steps(x, y, sched, state, n, cfg, cls)
+
+
+def run_rounds(state: StepState, x, y, cfg: BoostConfig, cls,
+               n: int | None = None, player_sched=None) -> StepState:
+    """Advance the protocol by up to ``n`` wire rounds (None = to
+    completion).  ``n`` is traced — every slice size shares one
+    compiled program per input signature."""
+    x = jnp.asarray(x)
+    y = jnp.asarray(y)
+    B, k = x.shape[0], x.shape[1]
+    sched = canon_player_sched(player_sched, B, k)
+    n_arr = _RUN_FOREVER if n is None else jnp.int32(n)
+    return _run_rounds_jit(x, y, sched, state, n_arr, cfg, cls)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "cls", "t_buf"))
-def _classify_batched_jit(x, y, alive0, keys, cfg, cls, t_buf):
-    one = functools.partial(classify_one_arrays, cfg=cfg, cls=cls,
-                            t_buf=t_buf)
-    return jax.vmap(one)(x, y, alive0, keys)
+def _classify_batched_jit(x, y, alive0, keys, sched, cfg, cls, t_buf):
+    state = init_state(x, y, keys, cfg, alive=alive0, t_buf=t_buf)
+    return _run_steps(x, y, sched, state, _RUN_FOREVER, cfg, cls)
 
 
 def stack_for_dispatch(items, B: int):
@@ -166,21 +318,23 @@ def stack_for_dispatch(items, B: int):
     return x, y, alive, keys, n_real
 
 
-def lower_classify(x, y, alive, keys, cfg: BoostConfig, cls):
+def lower_classify(x, y, alive, keys, cfg: BoostConfig, cls,
+                   player_sched=None):
     """AOT-compile the batched engine for one input signature.
 
     Returns a ``jax.stages.Compiled`` executable with the statics
     (cfg, cls, t_buf) baked in — call it as ``compiled(x, y, alive,
-    keys)`` on arrays of exactly this shape/dtype.  Unlike the implicit
-    jit cache, the caller owns the executable's lifetime: dropping it
-    (e.g. a serving compile-cache eviction) really frees the program,
-    and re-lowering really recompiles.  Output is bit-identical to the
-    jit path (same trace, same compiler).
+    keys, player_sched)`` on arrays of exactly this shape/dtype.
+    Unlike the implicit jit cache, the caller owns the executable's
+    lifetime: dropping it (e.g. a serving compile-cache eviction) really
+    frees the program, and re-lowering really recompiles.  Output is
+    bit-identical to the jit path (same trace, same compiler).
     """
     t_buf = cfg.num_rounds(x.shape[1] * x.shape[2])
+    sched = canon_player_sched(player_sched, x.shape[0], x.shape[1])
     return _classify_batched_jit.lower(
-        jnp.asarray(x), jnp.asarray(y), jnp.asarray(alive), keys, cfg,
-        cls, t_buf).compile()
+        jnp.asarray(x), jnp.asarray(y), jnp.asarray(alive), keys, sched,
+        cfg, cls, t_buf).compile()
 
 
 @dataclasses.dataclass
@@ -216,13 +370,33 @@ class BatchedClassifyResult:
     # the request's own m, and the dispute-report bit width ⌈log2 m⌉
     # must charge that, not the padded capacity
     m_true: np.ndarray | None = None
+    # per-attempt alive-player sums under the dropout mask ([B, A]); an
+    # all-alive run carries wire_rounds·k / rounds·k / k and the ledger
+    # reduces bit-for-bit to the unmasked accounting
+    hist_players: np.ndarray | None = None
+    hist_players_h: np.ndarray | None = None
+    hist_players_last: np.ndarray | None = None
 
     @property
     def batch(self) -> int:
         return int(self.rounds.shape[0])
 
+    def _attempt_players(self, b: int, a: int):
+        """(player_rounds, player_h_rounds, players_last) of attempt a,
+        falling back to the all-alive counts for legacy results."""
+        if self.hist_players is None:
+            wire = int(self.hist_rounds[b, a]) \
+                + (1 if self.hist_stuck[b, a] else 0)
+            return (wire * self.cfg.k,
+                    int(self.hist_rounds[b, a]) * self.cfg.k, self.cfg.k)
+        return (int(self.hist_players[b, a]),
+                int(self.hist_players_h[b, a]),
+                int(self.hist_players_last[b, a]))
+
     def ledger(self, b: int) -> Ledger:
-        """Bit-identical to the Ledger the reference loop accumulates."""
+        """Bit-identical to the Ledger the reference loop accumulates
+        (all players alive); under a dropout mask, charges only bits
+        alive players actually sent."""
         cfg, cls = self.cfg, self.cls
         k, mloc = self.x.shape[1], self.x.shape[2]
         n = L.domain_size(cls)
@@ -232,22 +406,33 @@ class BatchedClassifyResult:
         led = Ledger()
         for a in range(int(self.attempts[b])):
             stuck = bool(self.hist_stuck[b, a])
-            led = led + L.boost_attempt_ledger(
+            pl_rounds, pl_h, pl_last = self._attempt_players(b, a)
+            led = led + L.boost_attempt_ledger_masked(
                 cfg, cls, max(int(self.hist_alive[b, a]), 2),
-                int(self.hist_rounds[b, a]), stuck)
+                int(self.hist_rounds[b, a]), stuck,
+                pl_rounds, pl_h, pl_last)
             if stuck:
                 p = int(self.hist_p[b, a])
-                led.bits_control += cfg.k * p * L.point_bits(n)
-                led.bits_dispute += cfg.k * p * 2 * m_bits_m
+                led.bits_control += pl_last * p * L.point_bits(n)
+                led.bits_dispute += pl_last * p * 2 * m_bits_m
         return led
 
-    def per_task(self, b: int) -> ClassifyResult:
-        """Materialise task b as a reference-shaped ClassifyResult."""
+    def per_task(self, b: int, player_mask=None) -> ClassifyResult:
+        """Materialise task b as a reference-shaped ClassifyResult.
+
+        ``player_mask`` ([k] bool) restricts the dispute-table label
+        counts to the given players' copies — pass the surviving-player
+        set of a fault scenario so the D-vote is pointwise-optimal over
+        the shards that are still there.
+        """
         if not self.ok[b]:
             raise RuntimeError(
                 f"task {b} exceeded opt_budget={self.cfg.opt_budget}")
+        alive0 = self.alive0[b]
+        if player_mask is not None:
+            alive0 = alive0 & np.asarray(player_mask, bool)[:, None]
         pts, pos, neg = classify.dispute_table(
-            self.x[b], self.y[b], self.alive0[b], self.disputed[b])
+            self.x[b], self.y[b], alive0, self.disputed[b])
         n_att = int(self.attempts[b])
         return ClassifyResult(
             hypotheses=jnp.asarray(self.hypotheses[b]),
@@ -259,13 +444,34 @@ class BatchedClassifyResult:
             stuck_history=[bool(s) for s in self.hist_stuck[b, :n_att]],
             ledger=self.ledger(b))
 
-    def classifier(self, b: int) -> classify.ResilientClassifier:
-        return classify.make_classifier(self.cls, self.per_task(b))
+    def classifier(self, b: int,
+                   player_mask=None) -> classify.ResilientClassifier:
+        return classify.make_classifier(
+            self.cls, self.per_task(b, player_mask=player_mask))
+
+
+def finalize(state: StepState, x, y, alive0, cfg: BoostConfig, cls,
+             m_true=None) -> BatchedClassifyResult:
+    """Materialise a (host) result from stepped protocol state."""
+    out = jax.device_get(state)
+    return BatchedClassifyResult(
+        hypotheses=out.h_params, rounds=out.rounds,
+        ok=np.asarray(out.done), attempts=out.attempt,
+        alive=out.alive, disputed=out.disputed, min_loss=out.min_loss,
+        hist_stuck=out.hist_stuck, hist_rounds=out.hist_rounds,
+        hist_alive=out.hist_alive, hist_p=out.hist_p,
+        x=np.asarray(x), y=np.asarray(y), alive0=np.asarray(alive0),
+        cfg=cfg, cls=cls,
+        m_true=None if m_true is None else np.asarray(m_true),
+        hist_players=out.hist_players,
+        hist_players_h=out.hist_players_h,
+        hist_players_last=out.hist_players_last)
 
 
 def run_accurately_classify_batched(x, y, keys, cfg: BoostConfig, cls,
                                     alive=None, compiled=None,
-                                    m_true=None) -> BatchedClassifyResult:
+                                    m_true=None, player_sched=None,
+                                    ) -> BatchedClassifyResult:
     """B-task AccuratelyClassify in one device dispatch.
 
     x, y: [B, k, mloc] int shards or [B, k, mloc, F] feature rows;
@@ -278,6 +484,9 @@ def run_accurately_classify_batched(x, y, keys, cfg: BoostConfig, cls,
     dispatch can never trigger an implicit recompile.
     ``m_true``: optional [B] true per-task sample sizes (see
     ``BatchedClassifyResult.m_true``).
+    ``player_sched``: optional [R, k] or [B, R, k] per-round
+    player-alive schedule (see :func:`canon_player_sched`) — the
+    infrastructure-adversary hook (dropout/flaky/rejoin).
     """
     x = jnp.asarray(x)
     y = jnp.asarray(y)
@@ -291,18 +500,11 @@ def run_accurately_classify_batched(x, y, keys, cfg: BoostConfig, cls,
         alive = jnp.ones((B, k, mloc), bool)
     else:
         alive = jnp.asarray(alive)
+    sched = canon_player_sched(player_sched, B, k)
     if compiled is not None:
-        out = jax.device_get(compiled(x, y, alive, keys))
+        out = compiled(x, y, alive, keys, sched)
     else:
         t_buf = cfg.num_rounds(k * mloc)
-        out = jax.device_get(_classify_batched_jit(
-            x, y, alive, keys, cfg, cls, t_buf))
-    return BatchedClassifyResult(
-        hypotheses=out.h_params, rounds=out.rounds,
-        ok=np.asarray(out.done), attempts=out.attempt,
-        alive=out.alive, disputed=out.disputed, min_loss=out.min_loss,
-        hist_stuck=out.hist_stuck, hist_rounds=out.hist_rounds,
-        hist_alive=out.hist_alive, hist_p=out.hist_p,
-        x=np.asarray(x), y=np.asarray(y), alive0=np.asarray(alive),
-        cfg=cfg, cls=cls,
-        m_true=None if m_true is None else np.asarray(m_true))
+        out = _classify_batched_jit(x, y, alive, keys, sched, cfg, cls,
+                                    t_buf)
+    return finalize(out, x, y, alive, cfg, cls, m_true=m_true)

@@ -82,7 +82,8 @@ def _center_erm(cls, cx, cy, mix, c):
 
 
 def _round_body(cfg: BoostConfig, cls, x, y, alive, x_orders,
-                y_sorted, alive_sorted, carry: _Carry) -> _Carry:
+                y_sorted, alive_sorted, carry: _Carry, *,
+                player_alive=None) -> _Carry:
     key, kc = jax.random.split(carry.key)
     keys = jax.random.split(kc, x.shape[0])
     # --- players: step 2(a) coreset + step 2(b) weight sums -------------
@@ -95,6 +96,13 @@ def _round_body(cfg: BoostConfig, cls, x, y, alive, x_orders,
     )(keys, x, y, carry.hits, alive, x_orders, y_sorted, alive_sorted)
     cx, cy = _gather_coreset(x, y, idx)
     log_wsums = jax.vmap(W.log_weight_sum)(carry.hits, alive)     # [k]
+    if player_alive is not None:
+        # a player absent this round sends nothing: its weight sum is
+        # excluded from the mixture (−inf ⇒ mixture weight 0, so its
+        # coreset entries carry zero weight in the center ERM — the
+        # candidate behaviours they add are sound: zero-weight points
+        # can only certify MORE hypotheses, never hide a good one)
+        log_wsums = jnp.where(player_alive, log_wsums, -jnp.inf)
     mix = W.mixture_weights(log_wsums)
     # --- center: step 2(c)+(d) weighted ERM over the pooled coreset -----
     h, loss = _center_erm(cls, cx, cy, mix, cfg.coreset_size)
@@ -102,8 +110,11 @@ def _round_body(cfg: BoostConfig, cls, x, y, alive, x_orders,
     # --- players: step 2(f) multiplicative-weights update ---------------
     pred = cls.predict(h, x)
     correct = (pred == y)
-    new_hits = jnp.where(stuck_now, carry.hits,
-                         W.update_hits(carry.hits, correct, alive))
+    upd = W.update_hits(carry.hits, correct, alive)
+    if player_alive is not None:
+        # absent players never received h_t: their MW state freezes
+        upd = jnp.where(player_alive[:, None], upd, carry.hits)
+    new_hits = jnp.where(stuck_now, carry.hits, upd)
     h_params = carry.h_params.at[carry.t].set(
         jnp.where(stuck_now, carry.h_params[carry.t], h))
     return _Carry(

@@ -73,16 +73,50 @@ def match_points(x: jax.Array, pts: jax.Array) -> jax.Array:
 
 
 def distinct_count(pts: jax.Array) -> jax.Array:
-    """|unique(pts)| as a traced int32 (first-occurrence counting)."""
+    """|unique(pts)| as a traced int32 (first-occurrence counting) —
+    the all-valid case of :func:`distinct_count_masked`, kept as one
+    implementation so the two can never diverge."""
+    return distinct_count_masked(pts, jnp.ones((pts.shape[0],), bool))
+
+
+def _sentinel(dtype) -> jax.Array:
+    """A value no real point can equal under sorting: +inf for floats,
+    dtype max for ints (outside every [0, n) domain)."""
+    return (jnp.asarray(jnp.inf, dtype)
+            if jnp.issubdtype(dtype, jnp.floating)
+            else jnp.asarray(jnp.iinfo(dtype).max, dtype))
+
+
+def mask_invalid_points(pts: jax.Array, valid: jax.Array) -> jax.Array:
+    """Replace entries where ``valid`` is False so they can never match
+    a real point (``match_points``-safe sentinel: scalar points → the
+    sorting sentinel; float rows → NaN, never ==)."""
+    if pts.ndim == 2:
+        if jnp.issubdtype(pts.dtype, jnp.floating):
+            return jnp.where(valid[:, None], pts, jnp.nan)
+        return jnp.where(valid[:, None], pts, _sentinel(pts.dtype))
+    return jnp.where(valid, pts, _sentinel(pts.dtype))
+
+
+def distinct_count_masked(pts: jax.Array, valid: jax.Array) -> jax.Array:
+    """|unique(pts[valid])| as a traced int32.
+
+    The all-valid case is bit-identical to :func:`distinct_count` — the
+    fault-tolerant engines call this with the per-round player mask so a
+    dropped player's (untransmitted) coreset rows never inflate the
+    dispute-table size P.
+    """
     if pts.ndim == 2:
         eq = jnp.all(pts[:, None, :] == pts[None], axis=-1)     # [P, P]
+        eq = eq & valid[None, :] & valid[:, None]
         earlier = jnp.tril(eq, k=-1)
-        first = ~jnp.any(earlier, axis=-1)
+        first = valid & ~jnp.any(earlier, axis=-1)
         return jnp.sum(first.astype(jnp.int32))
-    ps = jnp.sort(pts)
+    big = _sentinel(pts.dtype)
+    ps = jnp.sort(jnp.where(valid, pts, big))
     bumps = jnp.concatenate(
         [jnp.ones((1,), bool), ps[1:] != ps[:-1]])
-    return jnp.sum(bumps.astype(jnp.int32))
+    return jnp.sum((bumps & (ps != big)).astype(jnp.int32))
 
 
 def dispute_table(x: np.ndarray, y: np.ndarray, alive0: np.ndarray,
@@ -92,7 +126,11 @@ def dispute_table(x: np.ndarray, y: np.ndarray, alive0: np.ndarray,
     Because quarantine always removes *every* copy of a disputed point,
     the copies of a point alive at its quarantine time are exactly its
     initially-alive copies — so the D-table counts are reconstructible
-    from the mask alone, independent of attempt order.
+    from the mask alone, independent of attempt order.  Points with zero
+    alive copies under ``alive0`` (e.g. every copy lived at a player
+    masked out of the table) carry no label evidence and are dropped —
+    the ensemble decides there, matching the host loop's zero-support
+    filter.
     """
     x, y = np.asarray(x), np.asarray(y)
     alive0, disputed = np.asarray(alive0), np.asarray(disputed)
@@ -105,7 +143,8 @@ def dispute_table(x: np.ndarray, y: np.ndarray, alive0: np.ndarray,
         flat = x.reshape(-1)
         pts = np.unique(flat[sel])
     pos, neg = _point_counts(x, y, alive0, pts)
-    return pts, pos, neg
+    keep = (pos + neg) > 0
+    return pts[keep], pos[keep], neg[keep]
 
 
 def _kill_points(x: np.ndarray, alive: np.ndarray, pts: np.ndarray):

@@ -63,6 +63,34 @@ def boost_attempt_ledger(cfg: BoostConfig, cls, m: int, rounds: int,
     return led
 
 
+def boost_attempt_ledger_masked(cfg: BoostConfig, cls, m: int, rounds: int,
+                                stuck: bool, player_rounds: int,
+                                player_h_rounds: int,
+                                players_last: int) -> Ledger:
+    """:func:`boost_attempt_ledger` under a per-round ``player_alive``
+    mask — only bits that alive players actually sent are charged.
+
+    ``player_rounds``   = Σ over wire rounds of the alive-player count
+                          (== wire_rounds·k when nobody drops);
+    ``player_h_rounds`` = the same sum over *successful* rounds only
+                          (hypothesis broadcasts reach alive players);
+    ``players_last``    = alive players at the attempt's final wire
+                          round (stuck flag / halt control bits).
+
+    With an all-alive mask every field reduces bit-for-bit to
+    :func:`boost_attempt_ledger` — the parity suites pin this.
+    """
+    n = domain_size(cls)
+    T = cfg.num_rounds(m)
+    wire_rounds = rounds + (1 if stuck else 0)
+    led = Ledger(attempts=1, rounds=wire_rounds)
+    led.bits_coresets = player_rounds * cfg.coreset_size * example_bits(n)
+    led.bits_weight_sums = player_rounds * weight_sum_bits(m, T)
+    led.bits_hypotheses = player_h_rounds * cls.hypothesis_bits()
+    led.bits_control = players_last * (1 if stuck else 0) + players_last
+    return led
+
+
 def theorem_41_bound(cfg: BoostConfig, cls, m: int, opt: int,
                      constant: float = 1.0) -> float:
     """O(OPT · k·log|S|·(d·log n + log|S|)) with an explicit constant and

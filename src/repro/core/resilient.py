@@ -77,7 +77,17 @@ def init_state(cfg: ResilientConfig) -> ResilientState:
 
 def batch_weights(state: ResilientState, ids: np.ndarray,
                   cfg: ResilientConfig):
-    """MW weights + alive mask for a batch (normalized within batch)."""
+    """MW weights + alive mask for a batch.
+
+    The weights are SmoothBoost-cap-clipped relative MW weights, NOT
+    normalized: ``w = 2^{clip(h_min − h, −cfg.mw_cap_bits, 0)}``, so the
+    batch's lightest-hit example gets weight exactly 1, every other
+    weight lies in ``[2^{−cap}, 1]`` (the cap bounds the skew the MW
+    distribution can impose on a step), and the sum is whatever it is —
+    the training loss divides by the weight sum itself.  With MW
+    weighting disabled, all-ones.  ``alive`` is the quarantine mask as
+    float (0 = quarantined, excluded from the loss).
+    """
     ids = np.asarray(ids)
     if not (cfg.mw_enabled and cfg.mw_loss_weighting):
         w = np.ones(ids.shape, np.float32)
@@ -90,20 +100,35 @@ def batch_weights(state: ResilientState, ids: np.ndarray,
 
 def update(state: ResilientState, ids, per_example_nll,
            cfg: ResilientConfig, step: int) -> ResilientState:
-    """Post-step MW update + (periodically) the hard-core quarantine."""
+    """Post-step MW update + (periodically) the hard-core quarantine.
+
+    Duplicate-safe: when ``ids`` repeats an id (sampling with
+    replacement), every occurrence counts — hits accumulate via
+    ``np.add.at`` (fancy-index ``+=`` silently dropped all but one
+    increment) and the loss EMA folds the occurrences sequentially in
+    batch order (plain ``nll_ema[ids] =`` was last-write-wins).
+    """
     ids = np.asarray(ids)
     nll = np.asarray(per_example_nll, np.float32)
     # EMA of the example's loss
-    seen = state.seen[ids]
-    ema = state.nll_ema[ids]
-    alpha = np.where(seen == 0, 1.0, 0.3).astype(np.float32)
-    state.nll_ema[ids] = (1 - alpha) * ema + alpha * nll
-    state.seen[ids] = seen + 1
+    if np.unique(ids).size == ids.size:
+        # no duplicates: the vectorized fold is exact
+        seen = state.seen[ids]
+        ema = state.nll_ema[ids]
+        alpha = np.where(seen == 0, 1.0, 0.3).astype(np.float32)
+        state.nll_ema[ids] = (1 - alpha) * ema + alpha * nll
+        state.seen[ids] = seen + 1
+    else:
+        for j in range(ids.size):          # sequential, duplicate-aware
+            i = ids[j]
+            a = np.float32(1.0 if state.seen[i] == 0 else 0.3)
+            state.nll_ema[i] = (1 - a) * state.nll_ema[i] + a * nll[j]
+            state.seen[i] += 1
     if cfg.mw_enabled:
         # "correct" analog: the model fits this example better than the
         # batch median ⇒ halve its weight (hits += 1)
         med = np.median(nll)
-        state.hits[ids] += (nll <= med).astype(np.int32)
+        np.add.at(state.hits, ids, (nll <= med).astype(np.int32))
     if cfg.quarantine_enabled and step > 0 and step % cfg.check_every == 0:
         _hard_core_check(state, cfg, step)
     return state

@@ -35,6 +35,27 @@ All corruptors are pure numpy on the already-split ``[k, mloc]``
 arrays, deterministic in their rng, and return an explicit flip mask so
 tests can compute recall/precision of the quarantine against the
 planted ground truth.
+
+Infrastructure adversaries (:class:`InfraSpec`) attack the *protocol*
+rather than the labels: they emit a per-round ``player_alive [R, k]``
+schedule the fault-tolerant engines consume (``player_sched=``):
+
+``dropout``
+    Player j participates until wire round r, then vanishes forever —
+    the Blum et al. communication-aware setting where a party's budget
+    (or the party) runs out mid-protocol.
+``flaky``
+    Player j misses a Bernoulli(``miss_rate``) subset of rounds (a
+    straggler that overruns the round deadline) but always returns.
+``rejoin``
+    Player j is absent for rounds [r, r′), then rejoins with its MW
+    state frozen at departure — a preempted worker coming back.
+
+Pinned guarantees (tests/test_fault_tolerance.py): the protocol still
+terminates with E_S(f) ≤ OPT *over the surviving shards* (players alive
+in the schedule's final row), and the communication ledger equals the
+measured collective payloads **under the mask** — only bits alive
+players actually sent are charged.
 """
 
 from __future__ import annotations
@@ -47,6 +68,7 @@ from repro.core import tasks, weak
 
 SCENARIOS = ("clean", "uniform", "targeted_heavy", "byzantine",
              "boundary", "drift")
+INFRA = ("none", "dropout", "flaky", "rejoin")
 
 
 def _x1d(x: np.ndarray) -> np.ndarray:
@@ -195,6 +217,97 @@ def make_scenario_batch(cls, B: int, m: int, k: int, spec: ScenarioSpec,
           for b in range(B)]
     return (np.stack([t.x for t in ts]), np.stack([t.y for t in ts]),
             ts)
+
+
+# ---------------------------------------------------------------------------
+# Infrastructure adversaries: per-round player-alive schedules.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class InfraSpec:
+    """A named infrastructure adversary with its knobs (hashable).
+
+    The schedule row at wire round ``min(step, R−1)`` is the round's
+    player mask — the final row extends forever, so ``dropout`` ends on
+    a dead row and ``flaky``/``rejoin`` end on a live one.
+    """
+
+    name: str = "none"
+    player: int = 0              # the targeted player
+    drop_round: int = 6          # dropout/rejoin: first absent round
+    rejoin_round: int = 18       # rejoin: first round back
+    miss_rate: float = 0.3       # flaky: per-round absence probability
+    horizon: int = 64            # flaky: schedule rows drawn
+
+    def __post_init__(self):
+        if self.name not in INFRA:
+            raise ValueError(
+                f"unknown infra adversary {self.name!r}; pick from {INFRA}")
+        if self.name == "rejoin" and self.rejoin_round <= self.drop_round:
+            raise ValueError("rejoin_round must exceed drop_round")
+
+    def schedule(self, k: int, seed: int = 0) -> np.ndarray:
+        """The ``[R, k]`` bool player_alive schedule this adversary
+        induces.  Every row keeps ≥ 1 player alive (k ≥ 2 required for
+        any adversary that silences a player)."""
+        if self.name == "none":
+            return np.ones((1, k), bool)
+        if k < 2:
+            raise ValueError(f"{self.name} needs k ≥ 2 players")
+        j = self.player % k
+        if self.name == "dropout":
+            sched = np.ones((self.drop_round + 1, k), bool)
+            sched[self.drop_round:, j] = False
+        elif self.name == "rejoin":
+            sched = np.ones((self.rejoin_round + 1, k), bool)
+            sched[self.drop_round:self.rejoin_round, j] = False
+        else:                                           # flaky
+            rng = np.random.default_rng(
+                np.random.SeedSequence([seed, 0xF1A2]))
+            sched = np.ones((self.horizon, k), bool)
+            sched[:, j] = rng.random(self.horizon) >= self.miss_rate
+            sched[-1, j] = True        # always returns eventually
+        assert sched.any(axis=-1).all()
+        return sched
+
+    def survivors(self, k: int, seed: int = 0) -> np.ndarray:
+        """[k] bool — players alive at the schedule's horizon (its
+        final, forever-repeating row): the shard set the E_S(f) ≤ OPT
+        guarantee is pinned over."""
+        return self.schedule(k, seed=seed)[-1]
+
+
+def infra_report(task: tasks.Task, result, b: int,
+                 spec: InfraSpec, seed: int = 0) -> dict:
+    """Guarantee stats of one fault-injected task, over the shards of
+    surviving players only: E_S(f) vs OPT restricted to those shards,
+    with the dispute vote counting surviving copies."""
+    import jax.numpy as jnp
+
+    from repro.core import classify as C
+
+    k = task.y.shape[0]
+    surv = spec.survivors(k, seed=seed)
+    res = result.per_task(b, player_mask=surv)
+    f = C.make_classifier(task.cls, res)
+    xs = task.x[surv].reshape((-1,) + task.x.shape[2:])
+    ys = task.y[surv].reshape(-1)
+    errs = int(weak.empirical_errors(f(jnp.asarray(xs)),
+                                     jnp.asarray(ys)))
+    m_s = ys.shape[0]
+    w = jnp.ones((m_s,), jnp.float32) / m_s
+    _, opt_loss = task.cls.erm(jnp.asarray(xs), jnp.asarray(ys), w)
+    opt = int(round(float(opt_loss) * m_s))
+    return {
+        "infra": spec.name,
+        "survivors": int(surv.sum()),
+        "errors": errs,
+        "opt": opt,
+        "guarantee_ok": errs <= opt,
+        "attempts": res.attempts,
+        "disputed": int(res.dispute_count),
+        "bits": res.ledger.total_bits,
+    }
 
 
 # ---------------------------------------------------------------------------

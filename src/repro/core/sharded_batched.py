@@ -12,27 +12,39 @@ acting center's hypothesis back with a ``psum`` — so the bytes the
 communication ledger charges correspond to payloads that really cross
 device boundaries.
 
+Like the local engine, execution is **round-granular**
+(:func:`init_state_sharded` / :func:`run_rounds_sharded` /
+:func:`finalize_sharded`): one step is one BoostAttempt wire round,
+attempt transitions happen inside the step body, and the state is a
+plain dict of arrays — host-gatherable and msgpack-serializable, so a
+preempted run resumes bit-identically from a checkpoint.  A per-round
+``player_alive [k]`` schedule drives the infrastructure adversaries
+(dropout / flaky / rejoin): an absent player's weight sum leaves the
+mixture, its MW state freezes, its coreset rows are excluded from
+quarantine, and — because the wire counters below are masked at the
+collective sites — the ledger charges only payloads alive players
+actually sent.
+
 Two properties are load-bearing and tested (tests/test_sharded_batched):
 
-* **Bit-identical parity.**  Given the same per-task keys, every output
-  (hypotheses, quarantine masks, stuck/round/alive histories, ledger
-  bit counts) equals `core/batched.py`'s exactly.  This holds by
-  construction: the per-player steps (coreset selection, weight sums,
-  MW updates) touch only local rows, the pooled arrays entering the
-  center ERM are reassembled in player order by the all_gather, and
-  integer/float op order is unchanged — a player living on another
-  device computes the same row it computed as a vmap lane.
+* **Bit-identical parity.**  Given the same per-task keys and schedule,
+  every output (hypotheses, quarantine masks, stuck/round/alive
+  histories, ledger bit counts) equals `core/batched.py`'s exactly.
+  This holds by construction: the per-player steps (coreset selection,
+  weight sums, MW updates) touch only local rows, the pooled arrays
+  entering the center ERM are reassembled in player order by the
+  all_gather, and integer/float op order is unchanged — a player living
+  on another device computes the same row it computed as a vmap lane.
 
 * **Ledger ≡ payload.**  The engine counts, *at the collective sites*,
   how many coreset examples and weight-sum scalars each attempt
-  gathered (increments are taken from the gathered arrays' shapes, so
-  the counter moves iff the collective executes, by its payload size).
-  ``validate_ledger`` then checks the Theorem 4.1 accounting against
-  those measured counts: ledger coreset bits = gathered examples ×
-  ``example_bits(n)``, ledger weight-sum bits = per-attempt gathered
-  scalars × ``weight_sum_bits(m_alive, T)``, quarantine messages =
-  k·P per stuck attempt.  The accounting is validated by construction,
-  not by trust.
+  gathered from players alive that round.  ``validate_ledger`` then
+  checks the Theorem 4.1 accounting against those measured counts:
+  ledger coreset bits = gathered examples × ``example_bits(n)``, ledger
+  weight-sum bits = per-attempt gathered scalars ×
+  ``weight_sum_bits(m_alive, T)``, quarantine messages = k_alive·P per
+  stuck attempt.  The accounting is validated by construction, not by
+  trust — with or without a dropout mask.
 
 The mesh's ``players`` axis size p must divide k; each device then
 hosts kloc = k/p players (p = k is one player per device).  On a
@@ -86,26 +98,6 @@ class _RoundCarry(NamedTuple):
     wire_bytes: jax.Array   # int32 — machine bytes of those collectives
 
 
-class _TaskCarry(NamedTuple):
-    attempt: jax.Array
-    done: jax.Array
-    alive: jax.Array        # [kloc, mloc]
-    disputed: jax.Array     # [kloc, mloc]
-    key: jax.Array
-    h_params: jax.Array
-    rounds: jax.Array
-    min_loss: jax.Array
-    hist_stuck: jax.Array   # [A]
-    hist_rounds: jax.Array  # [A]
-    hist_alive: jax.Array   # [A]
-    hist_p: jax.Array       # [A]
-    hist_wire_core: jax.Array   # [A] per-attempt gathered coreset examples
-    hist_wire_ws: jax.Array     # [A] per-attempt gathered weight-sum scalars
-    wire_bytes: jax.Array       # total collective payload, machine bytes
-    wire_q_points: jax.Array    # quarantine point-set messages (k·P total)
-    wire_q_counts: jax.Array    # quarantine count reports (k·P total)
-
-
 def _slice_player_keys(keys_all: jax.Array, kloc: int) -> jax.Array:
     """This device's kloc keys out of the k per-player keys — sliced on
     the raw key data because dynamic_slice on typed keys is flaky on the
@@ -116,13 +108,19 @@ def _slice_player_keys(keys_all: jax.Array, kloc: int) -> jax.Array:
     return jax.random.wrap_key_data(loc)
 
 
+def _local_player_mask(player_alive: jax.Array, kloc: int) -> jax.Array:
+    """This device's kloc entries of the replicated [k] player mask."""
+    pid = jax.lax.axis_index(AXIS)
+    return jax.lax.dynamic_slice_in_dim(player_alive, pid * kloc, kloc)
+
+
 def _round_body(cfg: BoostConfig, cls, k: int, x, y, alive, x_orders,
                 y_sorted, alive_sorted, no_center: bool,
-                c: _RoundCarry) -> _RoundCarry:
+                c: _RoundCarry, *, player_alive=None) -> _RoundCarry:
     # LOCKSTEP: this is boost_attempt._round_body with the vmap-lane
-    # pooling replaced by collectives (and _attempt_body below mirrors
-    # batched._attempt_body the same way).  Any semantic change to the
-    # round/attempt bodies there must land here too — the exact-parity
+    # pooling replaced by collectives (and _one_step_sharded below
+    # mirrors batched._one_step the same way).  Any semantic change to
+    # the round/step bodies there must land here too — the exact-parity
     # tests (tests/test_sharded_batched.py) fail on any divergence.
     kloc = x.shape[0]
     key, kc = jax.random.split(c.key)
@@ -138,41 +136,64 @@ def _round_body(cfg: BoostConfig, cls, k: int, x, y, alive, x_orders,
     )(keys, x, y, c.hits, alive, x_orders, y_sorted, alive_sorted)
     cx, cy = _gather_coreset(x, y, idx)                   # [kloc, c(, F)]
     log_wsums = jax.vmap(W.log_weight_sum)(c.hits, alive)  # [kloc]
-    # --- the wire: every player's coreset + one scalar to the center ---
+    if player_alive is not None:
+        # an absent player sends nothing: its weight sum leaves the
+        # mixture before the gather (−inf ⇒ mixture weight 0)
+        log_wsums = jnp.where(_local_player_mask(player_alive, kloc),
+                              log_wsums, -jnp.inf)
+    # --- the wire: every alive player's coreset + one scalar each ------
     cx_all = jax.lax.all_gather(cx, AXIS)                 # [p, kloc, c(, F)]
     cy_all = jax.lax.all_gather(cy, AXIS)
     ws_all = jax.lax.all_gather(log_wsums, AXIS)          # [p, kloc]
-    # payload counters, taken from the gathered arrays themselves so
-    # they move iff the collective executed, by its actual size
-    n_examples = int(np.prod(cy_all.shape))               # k · c, exactly
-    n_scalars = int(np.prod(ws_all.shape))                # k
-    n_bytes = (cx_all.size * cx_all.dtype.itemsize
-               + cy_all.size * cy_all.dtype.itemsize
-               + ws_all.size * ws_all.dtype.itemsize)
+    # payload counters: what alive players actually sent.  Unmasked,
+    # they are taken from the gathered arrays themselves (move iff the
+    # collective executed, by its actual size); masked, they charge the
+    # per-player payload × the round's alive count.
+    if player_alive is None:
+        n_examples = int(np.prod(cy_all.shape))           # k · c, exactly
+        n_scalars = int(np.prod(ws_all.shape))            # k
+        n_bytes = (cx_all.size * cx_all.dtype.itemsize
+                   + cy_all.size * cy_all.dtype.itemsize
+                   + ws_all.size * ws_all.dtype.itemsize)
+    else:
+        k_alive = jnp.sum(player_alive.astype(jnp.int32))
+        per_player = ((cx_all.size // k) * cx_all.dtype.itemsize
+                      + (cy_all.size // k) * cy_all.dtype.itemsize
+                      + ws_all.dtype.itemsize)
+        n_examples = k_alive * cfg.coreset_size
+        n_scalars = k_alive
+        n_bytes = k_alive * per_player
     cx_all = cx_all.reshape((k,) + cx_all.shape[2:])      # player order
     cy_all = cy_all.reshape((k,) + cy_all.shape[2:])
     ws_all = ws_all.reshape(-1)
     mix = W.mixture_weights(ws_all)
     # --- center: step 2(c)+(d) pooled weighted ERM ----------------------
     if no_center:
-        # §2.2: the first device acts as center; only it runs the ERM and
-        # the result is psum-broadcast back (exact: all other summands
-        # are literal zeros).
+        # §2.2: the first ALIVE player acts as center; only its device
+        # runs the ERM and the result is psum-broadcast back (exact:
+        # all other summands are literal zeros).
         pid = jax.lax.axis_index(AXIS)
+        center = (jnp.int32(0) if player_alive is None
+                  else jnp.argmax(player_alive).astype(jnp.int32))
+        cdev = center // kloc
         h0, loss0 = jax.lax.cond(
-            pid == 0,
+            pid == cdev,
             lambda: _center_erm(cls, cx_all, cy_all, mix, cfg.coreset_size),
             lambda: (jnp.zeros((weak.PARAM_DIM,), jnp.float32),
                      jnp.float32(0)))
-        h = jax.lax.psum(jnp.where(pid == 0, h0, 0.0), AXIS)
-        loss = jax.lax.psum(jnp.where(pid == 0, loss0, 0.0), AXIS)
+        h = jax.lax.psum(jnp.where(pid == cdev, h0, 0.0), AXIS)
+        loss = jax.lax.psum(jnp.where(pid == cdev, loss0, 0.0), AXIS)
     else:
         h, loss = _center_erm(cls, cx_all, cy_all, mix, cfg.coreset_size)
     stuck_now = loss > cfg.weak_threshold
     # --- players: step 2(f) multiplicative-weights update (local) ------
     pred = cls.predict(h, x)
-    new_hits = jnp.where(stuck_now, c.hits,
-                         W.update_hits(c.hits, pred == y, alive))
+    upd = W.update_hits(c.hits, pred == y, alive)
+    if player_alive is not None:
+        # absent players never received h_t: their MW state freezes
+        upd = jnp.where(_local_player_mask(player_alive, kloc)[:, None],
+                        upd, c.hits)
+    new_hits = jnp.where(stuck_now, c.hits, upd)
     h_params = c.h_params.at[c.t].set(
         jnp.where(stuck_now, c.h_params[c.t], h))
     return _RoundCarry(
@@ -190,147 +211,222 @@ def _round_body(cfg: BoostConfig, cls, k: int, x, y, alive, x_orders,
     )
 
 
-def _attempt_body(cfg: BoostConfig, cls, k: int, x, y, x_orders,
-                  t_buf: int, no_center: bool,
-                  c: _TaskCarry) -> _TaskCarry:
-    kloc, mloc = x.shape[0], x.shape[1]
-    key, sub = jax.random.split(c.key)
-    m_alive = jax.lax.psum(jnp.sum(c.alive.astype(jnp.int32)), AXIS)
-    bound = batched.num_rounds_dynamic(cfg, m_alive)
-    # per-attempt sorted gathers (alive changes between attempts)
-    y_sorted = jnp.take_along_axis(y, x_orders, axis=1)
-    alive_sorted = jnp.take_along_axis(c.alive, x_orders, axis=1)
-    rc0 = _RoundCarry(
-        t=jnp.int32(0), it=jnp.int32(0), stuck=jnp.asarray(False),
-        hits=W.init_hits((kloc, mloc)), key=sub,
-        h_params=jnp.zeros((t_buf, weak.PARAM_DIM), jnp.float32),
-        core_x=jnp.zeros((k, cfg.coreset_size) + x.shape[2:], x.dtype),
-        core_y=jnp.zeros((k, cfg.coreset_size), y.dtype),
-        min_loss=jnp.float32(0),
-        wire_core=jnp.int32(0), wire_ws=jnp.int32(0),
-        wire_bytes=jnp.int32(0),
-    )
+# ---------------------------------------------------------------------------
+# Round-granular stepping over the mesh.  The per-task state is a plain
+# dict of arrays: {alive, disputed, hits} are player-sharded, the rest
+# replicated — host-gathered it checkpoints via ckpt/msgpack_ckpt.
+# ---------------------------------------------------------------------------
 
-    def cond(rc: _RoundCarry):
-        return (~rc.stuck) & (rc.t < bound)
-
-    out = jax.lax.while_loop(
-        cond,
-        functools.partial(_round_body, cfg, cls, k, x, y, c.alive,
-                          x_orders, y_sorted, alive_sorted, no_center),
-        rc0)
-    stuck = out.stuck
-    # ---- full-point quarantine: the pooled stuck coreset is replicated
-    # (it is the all_gather output), each device kills its local copies.
-    core_flat = out.core_x.reshape((-1,) + out.core_x.shape[2:])
-    dead_new = c.alive & classify.match_points(x, core_flat) & stuck
-    p_count = jnp.where(stuck, classify.distinct_count(core_flat), 0)
-    a = c.attempt
-    return _TaskCarry(
-        attempt=a + 1,
-        done=~stuck,
-        alive=c.alive & ~dead_new,
-        disputed=c.disputed | dead_new,
-        key=key,
-        h_params=jnp.where(stuck, c.h_params, out.h_params),
-        rounds=jnp.where(stuck, c.rounds, out.t),
-        min_loss=out.min_loss,
-        hist_stuck=c.hist_stuck.at[a].set(stuck),
-        hist_rounds=c.hist_rounds.at[a].set(out.t),
-        hist_alive=c.hist_alive.at[a].set(m_alive),
-        hist_p=c.hist_p.at[a].set(p_count),
-        hist_wire_core=c.hist_wire_core.at[a].set(out.wire_core),
-        hist_wire_ws=c.hist_wire_ws.at[a].set(out.wire_ws),
-        wire_bytes=c.wire_bytes + out.wire_bytes,
-        wire_q_points=c.wire_q_points + k * p_count,
-        wire_q_counts=c.wire_q_counts + k * p_count,
-    )
+_SHARDED_FIELDS = ("alive", "disputed", "hits")
 
 
-def _classify_one_sharded(x, y, alive0, key, cfg: BoostConfig, cls,
-                          k: int, t_buf: int,
-                          no_center: bool) -> _TaskCarry:
-    """One task's whole protocol on this device's [kloc, mloc] shard.
-    vmap-ed over the leading task axis inside shard_map."""
+def init_state_sharded(x, y, keys, cfg: BoostConfig, alive=None,
+                       t_buf: int | None = None) -> dict:
+    """Fresh sharded-engine state (global [B, …] arrays; the shard_map
+    call partitions the player-sharded fields per its in_specs).
+
+    The protocol fields ARE ``batched.init_state``'s — built by it, so
+    the two engines' state layouts (and checkpoint shape contracts) can
+    never drift; only the wire-payload counters are sharded-specific.
+    """
+    state = batched.init_state(jnp.asarray(x), jnp.asarray(y), keys,
+                               cfg, alive=alive, t_buf=t_buf)._asdict()
+    B = state["attempt"].shape[0]
     a_max = cfg.opt_budget + 1
-    x1d = x if x.ndim == 2 else x[:, :, 0]
-    x_orders = jax.vmap(jnp.argsort)(x1d)
-    carry = _TaskCarry(
-        attempt=jnp.int32(0), done=jnp.asarray(False),
-        alive=alive0, disputed=jnp.zeros_like(alive0),
-        key=key,
-        h_params=jnp.zeros((t_buf, weak.PARAM_DIM), jnp.float32),
-        rounds=jnp.int32(0), min_loss=jnp.float32(0),
-        hist_stuck=jnp.zeros((a_max,), bool),
-        hist_rounds=jnp.zeros((a_max,), jnp.int32),
-        hist_alive=jnp.zeros((a_max,), jnp.int32),
-        hist_p=jnp.zeros((a_max,), jnp.int32),
-        hist_wire_core=jnp.zeros((a_max,), jnp.int32),
-        hist_wire_ws=jnp.zeros((a_max,), jnp.int32),
-        wire_bytes=jnp.int32(0),
-        wire_q_points=jnp.int32(0), wire_q_counts=jnp.int32(0),
-    )
+    i32 = functools.partial(jnp.zeros, dtype=jnp.int32)
+    state.update(
+        awire_core=i32((B,)), awire_ws=i32((B,)),
+        hist_wire_core=i32((B, a_max)),
+        hist_wire_ws=i32((B, a_max)),
+        wire_bytes=i32((B,)),
+        wire_q_points=i32((B,)), wire_q_counts=i32((B,)))
+    return state
 
-    def cond(cy: _TaskCarry):
-        return (~cy.done) & (cy.attempt < a_max)
 
-    return jax.lax.while_loop(
-        cond,
-        functools.partial(_attempt_body, cfg, cls, k, x, y, x_orders,
-                          t_buf, no_center),
-        carry)
+def _one_step_sharded(cfg: BoostConfig, cls, k: int, no_center: bool,
+                      x, y, x_orders, sched, s: dict) -> dict:
+    """ONE wire round of ONE task on this device's [kloc, mloc] shard.
+    LOCKSTEP with batched._one_step (collectives replace lane pooling)."""
+    a_max = cfg.opt_budget + 1
+    kloc = x.shape[0]
+    active = (~s["done"]) & (s["attempt"] < a_max)
+    pa = sched[jnp.minimum(s["step"], sched.shape[0] - 1)]       # [k]
+    pa_loc = _local_player_mask(pa, kloc)
+    # ---- attempt start ------------------------------------------------
+    start = ~s["in_attempt"]
+    tkey = jax.random.wrap_key_data(s["key_data"])
+    nk, sub = jax.random.split(tkey)
+    key_data = jnp.where(start, jax.random.key_data(nk), s["key_data"])
+    akey_data = jnp.where(start, jax.random.key_data(sub),
+                          s["akey_data"])
+    m_alive = jax.lax.psum(
+        jnp.sum((s["alive"] & pa_loc[:, None]).astype(jnp.int32)), AXIS)
+    a = s["attempt"]
+    bound = jnp.where(start, batched.num_rounds_dynamic(cfg, m_alive),
+                      s["bound"])
+    hits = jnp.where(start, W.init_hits(x.shape[:2]), s["hits"])
+    cur_h = jnp.where(start, jnp.zeros_like(s["cur_h"]), s["cur_h"])
+    t = jnp.where(start, 0, s["t"])
+    awire_core = jnp.where(start, 0, s["awire_core"])
+    awire_ws = jnp.where(start, 0, s["awire_ws"])
+    hist_alive = jnp.where(start, s["hist_alive"].at[a].set(m_alive),
+                           s["hist_alive"])
+    # ---- one BoostAttempt round over the wire -------------------------
+    y_sorted = jnp.take_along_axis(y, x_orders, axis=1)
+    alive_sorted = jnp.take_along_axis(s["alive"], x_orders, axis=1)
+    rc = _RoundCarry(
+        t=t, it=jnp.int32(0), stuck=jnp.asarray(False),
+        hits=hits, key=jax.random.wrap_key_data(akey_data),
+        h_params=cur_h, core_x=s["core_x"], core_y=s["core_y"],
+        min_loss=s["min_loss"],
+        wire_core=jnp.int32(0), wire_ws=jnp.int32(0),
+        wire_bytes=jnp.int32(0))
+    out = _round_body(cfg, cls, k, x, y, s["alive"], x_orders, y_sorted,
+                      alive_sorted, no_center, rc, player_alive=pa)
+    stuck = out.stuck
+    success = (~stuck) & (out.t >= bound)
+    ended = stuck | success
+    k_alive = jnp.sum(pa.astype(jnp.int32))
+    # ---- full-point quarantine: the pooled stuck coreset is replicated
+    # (it is the all_gather output); dead players' rows are masked out
+    # and each device kills its local copies.
+    core_flat = out.core_x.reshape((-1,) + out.core_x.shape[2:])
+    valid_flat = jnp.repeat(pa, cfg.coreset_size)
+    masked_flat = classify.mask_invalid_points(core_flat, valid_flat)
+    dead_new = s["alive"] & classify.match_points(x, masked_flat) & stuck
+    p_count = jnp.where(
+        stuck, classify.distinct_count_masked(core_flat, valid_flat), 0)
+    awire_core = awire_core + out.wire_core
+    awire_ws = awire_ws + out.wire_ws
+    nxt = {
+        "attempt": jnp.where(ended, a + 1, a),
+        "done": s["done"] | success,
+        "alive": s["alive"] & ~dead_new,
+        "disputed": s["disputed"] | dead_new,
+        "key_data": key_data,
+        "h_params": jnp.where(success, out.h_params, s["h_params"]),
+        "rounds": jnp.where(success, out.t, s["rounds"]),
+        "min_loss": out.min_loss,
+        "hist_stuck": jnp.where(ended, s["hist_stuck"].at[a].set(stuck),
+                                s["hist_stuck"]),
+        "hist_rounds": jnp.where(ended,
+                                 s["hist_rounds"].at[a].set(out.t),
+                                 s["hist_rounds"]),
+        "hist_alive": hist_alive,
+        "hist_p": jnp.where(ended, s["hist_p"].at[a].set(p_count),
+                            s["hist_p"]),
+        "hist_players": s["hist_players"].at[a].add(k_alive),
+        "hist_players_h": s["hist_players_h"].at[a].add(
+            jnp.where(stuck, 0, k_alive)),
+        "hist_players_last": s["hist_players_last"].at[a].set(k_alive),
+        "in_attempt": ~ended,
+        "akey_data": jax.random.key_data(out.key),
+        "t": out.t,
+        "bound": bound,
+        "hits": out.hits,
+        "cur_h": out.h_params,
+        "core_x": out.core_x, "core_y": out.core_y,
+        "step": s["step"] + 1,
+        "awire_core": awire_core, "awire_ws": awire_ws,
+        "hist_wire_core": jnp.where(
+            ended, s["hist_wire_core"].at[a].set(awire_core),
+            s["hist_wire_core"]),
+        "hist_wire_ws": jnp.where(
+            ended, s["hist_wire_ws"].at[a].set(awire_ws),
+            s["hist_wire_ws"]),
+        "wire_bytes": s["wire_bytes"] + out.wire_bytes,
+        "wire_q_points": s["wire_q_points"] + k_alive * p_count,
+        "wire_q_counts": s["wire_q_counts"] + k_alive * p_count,
+    }
+    return jax.tree_util.tree_map(
+        lambda new, old: jnp.where(active, new, old), nxt, s)
+
+
+@functools.lru_cache(maxsize=None)
+def _build_sharded_step(mesh: Mesh, cfg: BoostConfig, cls,
+                        no_center: bool):
+    """jitted shard_map program (x, y, sched, state, n) → state."""
+    k = cfg.k
+    p = mesh.shape[AXIS]
+    if k % p != 0:
+        raise ValueError(f"players mesh size {p} must divide k={k}")
+    a_max = cfg.opt_budget + 1
+
+    def per_device(x, y, sched, state, n):
+        x1d = x if x.ndim == 3 else x[..., 0]
+        x_orders = jax.vmap(jax.vmap(jnp.argsort))(x1d)
+
+        def active(st):
+            return (~st["done"]) & (st["attempt"] < a_max)
+
+        def cond(carry):
+            st, i = carry
+            return jnp.any(active(st)) & (i < n)
+
+        def body(carry):
+            st, i = carry
+            st2 = jax.vmap(functools.partial(
+                _one_step_sharded, cfg, cls, k, no_center))(
+                x, y, x_orders, sched, st)
+            return st2, i + 1
+
+        out, _ = jax.lax.while_loop(cond, body, (state, jnp.int32(0)))
+        return out
+
+    sharded = P(None, AXIS)
+    state_specs = {f: (sharded if f in _SHARDED_FIELDS else P())
+                   for f in init_state_sharded(
+                       np.zeros((1, k, 2), np.int32),
+                       np.zeros((1, k, 2), np.int8),
+                       jax.random.split(jax.random.key(0), 1), cfg)}
+    in_specs = (sharded, sharded, P(), state_specs, P())
+    return jax.jit(_shard_map(per_device, mesh=mesh, in_specs=in_specs,
+                              out_specs=state_specs))
+
+
+def run_rounds_sharded(state: dict, x, y, cfg: BoostConfig, cls,
+                       mesh: Mesh | None = None, n: int | None = None,
+                       player_sched=None, no_center: bool = False) -> dict:
+    """Advance the sharded protocol by up to ``n`` wire rounds (None =
+    to completion); the mesh-collective twin of ``batched.run_rounds``."""
+    x = jnp.asarray(x)
+    y = jnp.asarray(y)
+    B, k = x.shape[0], x.shape[1]
+    sched = batched.canon_player_sched(player_sched, B, k)
+    if mesh is None:
+        mesh = make_players_mesh(k)
+    fn = _build_sharded_step(mesh, cfg, cls, no_center)
+    n_arr = batched._RUN_FOREVER if n is None else jnp.int32(n)
+    return fn(x, y, sched, state, n_arr)
 
 
 @functools.lru_cache(maxsize=None)
 def _build_sharded(mesh: Mesh, cfg: BoostConfig, cls, t_buf: int,
                    no_center: bool):
-    k = cfg.k
-    p = mesh.shape[AXIS]
-    if k % p != 0:
-        raise ValueError(f"players mesh size {p} must divide k={k}")
+    """Full-run program (x, y, alive, keys, sched) → final state dict."""
+    step = _build_sharded_step(mesh, cfg, cls, no_center)
 
-    def per_device(x, y, alive, keys):
-        one = functools.partial(_classify_one_sharded, cfg=cfg, cls=cls,
-                                k=k, t_buf=t_buf, no_center=no_center)
-        out = jax.vmap(one)(x, y, alive, keys)
-        return {
-            "attempt": out.attempt, "done": out.done,
-            "alive": out.alive, "disputed": out.disputed,
-            "h_params": out.h_params, "rounds": out.rounds,
-            "min_loss": out.min_loss,
-            "hist_stuck": out.hist_stuck, "hist_rounds": out.hist_rounds,
-            "hist_alive": out.hist_alive, "hist_p": out.hist_p,
-            "hist_wire_core": out.hist_wire_core,
-            "hist_wire_ws": out.hist_wire_ws,
-            "wire_bytes": out.wire_bytes,
-            "wire_q_points": out.wire_q_points,
-            "wire_q_counts": out.wire_q_counts,
-        }
+    def full(x, y, alive, keys, sched):
+        state = init_state_sharded(x, y, keys, cfg, alive=alive,
+                                   t_buf=t_buf)
+        return step(x, y, sched, state, batched._RUN_FOREVER)
 
-    sharded = P(None, AXIS)
-    in_specs = (sharded, sharded, sharded, P())
-    out_specs = {
-        "attempt": P(), "done": P(), "alive": sharded,
-        "disputed": sharded, "h_params": P(), "rounds": P(),
-        "min_loss": P(), "hist_stuck": P(), "hist_rounds": P(),
-        "hist_alive": P(), "hist_p": P(), "hist_wire_core": P(),
-        "hist_wire_ws": P(), "wire_bytes": P(), "wire_q_points": P(),
-        "wire_q_counts": P(),
-    }
-    return jax.jit(_shard_map(per_device, mesh=mesh, in_specs=in_specs,
-                              out_specs=out_specs))
+    return jax.jit(full)
 
 
 def lower_classify_sharded(x, y, alive, keys, cfg: BoostConfig, cls,
-                           mesh: Mesh, no_center: bool = False):
+                           mesh: Mesh, no_center: bool = False,
+                           player_sched=None):
     """AOT-compile the sharded engine for one input signature (the
     mesh-collective twin of ``batched.lower_classify``).  The returned
     executable is owned by the caller — a serving compile cache reuses
     it across admissions and dropping it really frees the program."""
     t_buf = cfg.num_rounds(x.shape[1] * x.shape[2])
+    sched = batched.canon_player_sched(player_sched, x.shape[0],
+                                       x.shape[1])
     fn = _build_sharded(mesh, cfg, cls, t_buf, no_center)
     return fn.lower(jnp.asarray(x), jnp.asarray(y), jnp.asarray(alive),
-                    keys).compile()
+                    keys, sched).compile()
 
 
 @dataclasses.dataclass
@@ -363,13 +459,14 @@ class ShardedClassifyResult(batched.BatchedClassifyResult):
         """Cross-check Theorem 4.1 accounting against measured payloads.
 
         Raises AssertionError on any mismatch; returns the comparison.
-        Checks, per task:
+        Checks, per task (all player-mask-aware — under a dropout
+        schedule only alive players' payloads are charged):
         * ledger coreset bits == gathered examples × example_bits(n);
         * ledger weight-sum bits == Σ_attempts gathered scalars ×
           weight_sum_bits(m_alive, T) with per-attempt m_alive;
-        * per attempt, gathered payload == wire_rounds · k · c examples
-          and wire_rounds · k scalars (the protocol's message pattern);
-        * quarantine messages == k · Σ P over stuck attempts.
+        * per attempt, gathered payload == Σ_rounds k_alive · c examples
+          and Σ_rounds k_alive scalars (the protocol's message pattern);
+        * quarantine messages == Σ_stuck k_alive(stuck round) · P.
         """
         cfg, cls = self.cfg, self.cls
         n = L.domain_size(cls)
@@ -378,24 +475,24 @@ class ShardedClassifyResult(batched.BatchedClassifyResult):
         got_core = int(self.hist_wire_core[b, :n_att].sum())
         got_ws = int(self.hist_wire_ws[b, :n_att].sum())
         exp_ws_bits = 0
+        exp_q = 0
         for a in range(n_att):
-            wire_rounds = int(self.hist_rounds[b, a]) \
-                + (1 if self.hist_stuck[b, a] else 0)
+            pl_rounds, _, pl_last = self._attempt_players(b, a)
             assert int(self.hist_wire_core[b, a]) == \
-                wire_rounds * cfg.k * cfg.coreset_size, (b, a)
-            assert int(self.hist_wire_ws[b, a]) == wire_rounds * cfg.k, \
-                (b, a)
+                pl_rounds * cfg.coreset_size, (b, a)
+            assert int(self.hist_wire_ws[b, a]) == pl_rounds, (b, a)
             m_a = max(int(self.hist_alive[b, a]), 2)
             exp_ws_bits += int(self.hist_wire_ws[b, a]) \
                 * L.weight_sum_bits(m_a, cfg.num_rounds(m_a))
+            if self.hist_stuck[b, a]:
+                exp_q += pl_last * int(self.hist_p[b, a])
         assert led.bits_coresets == got_core * L.example_bits(n), (
             led.bits_coresets, got_core)
         assert led.bits_weight_sums == exp_ws_bits, (
             led.bits_weight_sums, exp_ws_bits)
-        p_total = int(self.hist_p[b, :n_att][
-            np.asarray(self.hist_stuck[b, :n_att], bool)].sum())
-        assert int(self.wire_q_points[b]) == cfg.k * p_total
-        assert int(self.wire_q_counts[b]) == cfg.k * p_total
+        assert int(self.wire_q_points[b]) == exp_q, (
+            int(self.wire_q_points[b]), exp_q)
+        assert int(self.wire_q_counts[b]) == exp_q
         return {
             "bits_coresets": led.bits_coresets,
             "coreset_examples_gathered": got_core,
@@ -406,16 +503,43 @@ class ShardedClassifyResult(batched.BatchedClassifyResult):
         }
 
 
+def finalize_sharded(state: dict, x, y, alive0, cfg: BoostConfig, cls,
+                     m_true=None, mesh: Mesh | None = None,
+                     ) -> ShardedClassifyResult:
+    """Materialise a host result from stepped sharded state."""
+    out = jax.device_get(state)
+    return ShardedClassifyResult(
+        hypotheses=out["h_params"], rounds=out["rounds"],
+        ok=np.asarray(out["done"]), attempts=out["attempt"],
+        alive=out["alive"], disputed=out["disputed"],
+        min_loss=out["min_loss"],
+        hist_stuck=out["hist_stuck"], hist_rounds=out["hist_rounds"],
+        hist_alive=out["hist_alive"], hist_p=out["hist_p"],
+        x=np.asarray(x), y=np.asarray(y), alive0=np.asarray(alive0),
+        cfg=cfg, cls=cls,
+        m_true=None if m_true is None else np.asarray(m_true),
+        hist_players=out["hist_players"],
+        hist_players_h=out["hist_players_h"],
+        hist_players_last=out["hist_players_last"],
+        hist_wire_core=out["hist_wire_core"],
+        hist_wire_ws=out["hist_wire_ws"],
+        wire_bytes=out["wire_bytes"],
+        wire_q_points=out["wire_q_points"],
+        wire_q_counts=out["wire_q_counts"],
+        mesh_devices=1 if mesh is None else mesh.shape[AXIS])
+
+
 def run_accurately_classify_sharded(x, y, keys, cfg: BoostConfig, cls,
                                     mesh: Mesh | None = None, alive=None,
                                     no_center: bool = False,
                                     compiled=None, m_true=None,
+                                    player_sched=None,
                                     ) -> ShardedClassifyResult:
     """B-task AccuratelyClassify over a real ``players`` device mesh.
 
     Same contract as ``batched.run_accurately_classify_batched`` (and
-    bit-identical outputs on identical inputs); ``mesh`` defaults to
-    ``make_players_mesh(k)`` over the host's devices.
+    bit-identical outputs on identical inputs and schedules); ``mesh``
+    defaults to ``make_players_mesh(k)`` over the host's devices.
     """
     x = jnp.asarray(x)
     y = jnp.asarray(y)
@@ -431,27 +555,14 @@ def run_accurately_classify_sharded(x, y, keys, cfg: BoostConfig, cls,
         alive = jnp.ones((B, k, mloc), bool)
     else:
         alive = jnp.asarray(alive)
+    sched = batched.canon_player_sched(player_sched, B, k)
     if mesh is None:
         mesh = make_players_mesh(k)
     if compiled is not None:
-        out = jax.device_get(compiled(x, y, alive, keys))
+        out = compiled(x, y, alive, keys, sched)
     else:
         t_buf = cfg.num_rounds(k * mloc)
         fn = _build_sharded(mesh, cfg, cls, t_buf, no_center)
-        out = jax.device_get(fn(x, y, alive, keys))
-    return ShardedClassifyResult(
-        hypotheses=out["h_params"], rounds=out["rounds"],
-        ok=np.asarray(out["done"]), attempts=out["attempt"],
-        alive=out["alive"], disputed=out["disputed"],
-        min_loss=out["min_loss"],
-        hist_stuck=out["hist_stuck"], hist_rounds=out["hist_rounds"],
-        hist_alive=out["hist_alive"], hist_p=out["hist_p"],
-        x=np.asarray(x), y=np.asarray(y), alive0=np.asarray(alive),
-        cfg=cfg, cls=cls,
-        m_true=None if m_true is None else np.asarray(m_true),
-        hist_wire_core=out["hist_wire_core"],
-        hist_wire_ws=out["hist_wire_ws"],
-        wire_bytes=out["wire_bytes"],
-        wire_q_points=out["wire_q_points"],
-        wire_q_counts=out["wire_q_counts"],
-        mesh_devices=mesh.shape[AXIS])
+        out = fn(x, y, alive, keys, sched)
+    return finalize_sharded(out, x, y, alive, cfg, cls, m_true=m_true,
+                            mesh=mesh)

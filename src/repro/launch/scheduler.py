@@ -34,6 +34,18 @@ with none of that:
   admission until a full max-B batch is ready or ``fill_wait_s`` has
   passed for the oldest request.
 
+* **Preemption + checkpoint/resume.**  The engines execute round-
+  granularly (``init_state / run_rounds / finalize``), so a dispatch
+  can be cut off after N wire rounds, its whole protocol state
+  serialized to a msgpack checkpoint (``ckpt/msgpack_ckpt``), and the
+  batch **requeued**: the next scheduler step restores the state from
+  the file and runs the remaining rounds.  A preempted-and-resumed
+  request completes bit-identical to its uninterrupted ``one_shot``
+  run — the same parity bar PR 3 set for batching (the step body is
+  one program; the state round-trips exactly).  ``preempt={dispatch:
+  rounds}`` injects failures into ``run_stream`` deterministically;
+  ``stats.preemptions``/``stats.resumes`` count them.
+
 Every completion is bit-identical to the one-shot engine run of the
 same padded request (``BoostScheduler.one_shot`` is that baseline;
 tests pin it per request, plus host-reference parity on a sample), and
@@ -44,12 +56,14 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import os
 import time
 from typing import Callable
 
 import jax
 import numpy as np
 
+from repro.ckpt import msgpack_ckpt
 from repro.core import batched, scenarios, sharded_batched, tasks, weak
 from repro.core.types import BoostConfig
 
@@ -220,6 +234,7 @@ class Completion:
     queue_wait_s: float          # arrival → dispatch start (virtual)
     service_s: float             # dispatch wall time (shared by lanes)
     latency_s: float             # arrival → completion (virtual)
+    resumed: bool = False        # completed via checkpoint-resume
 
     @property
     def ok(self) -> bool:
@@ -244,6 +259,8 @@ class SchedulerStats:
     served: int = 0
     filler_lanes: int = 0
     padded_requests: int = 0
+    preemptions: int = 0
+    resumes: int = 0
     per_bucket: dict = dataclasses.field(default_factory=dict)
 
     def note(self, bucket: BucketKey, n_real: int, B: int):
@@ -252,6 +269,22 @@ class SchedulerStats:
         self.filler_lanes += B - n_real
         key = (bucket.B, bucket.mloc, bucket.compat.engine)
         self.per_bucket[key] = self.per_bucket.get(key, 0) + n_real
+
+
+@dataclasses.dataclass
+class _Suspended:
+    """A preempted in-flight batch, requeued for resume.
+
+    The protocol state lives in the msgpack checkpoint; the static
+    inputs (the stacked sample arrays and keys — regenerable from the
+    requests, kept here to avoid rebuilding) ride along."""
+
+    bucket: BucketKey
+    admitted: list               # the (req, task, data) tuples
+    payload: tuple               # stacked (x, y, alive, keys)
+    m_true: np.ndarray
+    ckpt_path: str
+    rounds_done: int
 
 
 def _percentile(xs, q):
@@ -300,7 +333,9 @@ class BoostScheduler:
     def __init__(self, lattice: BucketLattice | None = None,
                  policy: str = "pack", fill_wait_s: float = 0.05,
                  cache_capacity: int | None = None,
-                 cache: CompileCache | None = None):
+                 cache: CompileCache | None = None,
+                 ckpt_dir: str | None = None,
+                 preempt: dict | None = None):
         if policy not in ("pack", "fill"):
             raise ValueError(f"unknown policy {policy!r}")
         self.lattice = lattice or BucketLattice()
@@ -313,8 +348,18 @@ class BoostScheduler:
                 "pass either cache= (shared, already sized) or "
                 "cache_capacity=, not both")
         self.cache = cache or CompileCache(capacity=cache_capacity)
+        # fault injection: {dispatch_seq: wire_rounds} — the seq-th
+        # engine dispatch is preempted after that many rounds, its
+        # state checkpointed to ckpt_dir and the batch requeued
+        self.preempt = dict(preempt or {})
+        self.ckpt_dir = ckpt_dir
+        if self.preempt and not self.ckpt_dir:
+            raise ValueError("preempt= injection needs ckpt_dir= (the "
+                             "msgpack state has to land somewhere)")
         self.stats = SchedulerStats()
         self._queues: dict = collections.defaultdict(collections.deque)
+        self._suspended: collections.deque = collections.deque()
+        self._dispatch_seq = 0
         self._meshes: dict = {}
 
     # -- request intake ----------------------------------------------------
@@ -337,7 +382,8 @@ class BoostScheduler:
             (req, task, (x, y, alive, req.make_key())))
 
     def queued(self) -> int:
-        return sum(len(q) for q in self._queues.values())
+        return (sum(len(q) for q in self._queues.values())
+                + sum(len(s.admitted) for s in self._suspended))
 
     # -- one dispatch ------------------------------------------------------
 
@@ -378,13 +424,102 @@ class BoostScheduler:
                 compiled=compiled, m_true=m_true)
         return res, time.perf_counter() - t0
 
+    # -- round-granular engine access (preemption path) --------------------
+
+    def _engine_init(self, bucket: BucketKey, x, y, alive, keys):
+        compat = bucket.compat
+        if compat.engine == "sharded":
+            return sharded_batched.init_state_sharded(
+                x, y, keys, compat.cfg, alive=alive)
+        return batched.init_state(x, y, keys, compat.cfg, alive=alive)
+
+    def _engine_run(self, bucket: BucketKey, state, x, y, n):
+        compat = bucket.compat
+        if compat.engine == "sharded":
+            return sharded_batched.run_rounds_sharded(
+                state, x, y, compat.cfg, compat.cls,
+                mesh=self._mesh(compat.cfg.k), n=n)
+        return batched.run_rounds(state, x, y, compat.cfg, compat.cls,
+                                  n=n)
+
+    def _engine_finalize(self, bucket: BucketKey, state, x, y, alive,
+                         m_true):
+        compat = bucket.compat
+        if compat.engine == "sharded":
+            return sharded_batched.finalize_sharded(
+                state, x, y, alive, compat.cfg, compat.cls,
+                m_true=m_true, mesh=self._mesh(compat.cfg.k))
+        return batched.finalize(state, x, y, alive, compat.cfg,
+                                compat.cls, m_true=m_true)
+
+    def _preempt_dispatch(self, seq: int, bucket: BucketKey, admitted,
+                          payload, m_true, n_rounds: int):
+        """Run ``n_rounds`` wire rounds, checkpoint the protocol state
+        to msgpack, drop it, and requeue the batch for resume."""
+        x, y, alive, keys = payload
+        t0 = time.perf_counter()
+        state = self._engine_init(bucket, x, y, alive, keys)
+        state = self._engine_run(bucket, state, x, y, n=n_rounds)
+        os.makedirs(self.ckpt_dir, exist_ok=True)
+        path = os.path.join(self.ckpt_dir,
+                            f"preempt_{seq:04d}.msgpack")
+        msgpack_ckpt.save_pytree(
+            path, jax.device_get(state),
+            meta={"rounds_done": n_rounds, "engine": bucket.compat.engine,
+                  "rids": [a[0].rid for a in admitted]})
+        del state                              # the preemption: state dies
+        self._suspended.append(_Suspended(
+            bucket=bucket, admitted=admitted, payload=payload,
+            m_true=m_true, ckpt_path=path, rounds_done=n_rounds))
+        self.stats.preemptions += 1
+        return [], time.perf_counter() - t0
+
+    def _resume(self, sus: _Suspended, now: float):
+        """Restore a preempted batch from its checkpoint and finish it.
+
+        Unlike the one-shot path, the round-granular programs compile
+        through the implicit jit cache (per engine statics + slice
+        signature), so a shape's FIRST preempt/resume pays its compile
+        inside ``service_s`` — the same way a compile-cache miss is
+        charged to the dispatch that missed.  The checkpoint is deleted
+        once the batch completes.
+        """
+        x, y, alive, keys = sus.payload
+        t0 = time.perf_counter()
+        template = self._engine_init(sus.bucket, x, y, alive, keys)
+        state, _meta = msgpack_ckpt.load_pytree(sus.ckpt_path,
+                                                like=template)
+        state = self._engine_run(sus.bucket, state, x, y, n=None)
+        res = self._engine_finalize(sus.bucket, state, x, y, alive,
+                                    sus.m_true)
+        service_s = time.perf_counter() - t0
+        try:
+            os.remove(sus.ckpt_path)           # consumed — don't litter
+        except OSError:
+            pass
+        self.stats.resumes += 1
+        self.stats.note(sus.bucket, len(sus.admitted), sus.bucket.B)
+        completions = []
+        for lane, (req, task, _data) in enumerate(sus.admitted):
+            completions.append(Completion(
+                request=req, task=task, result=res, lane=lane,
+                bucket=sus.bucket,
+                queue_wait_s=max(now - req.arrival_s, 0.0),
+                service_s=service_s,
+                latency_s=max(now - req.arrival_s, 0.0) + service_s,
+                resumed=True))
+        return completions, service_s
+
     def step(self, now: float = 0.0):
         """Admit one batch from the fullest-eligible queue and dispatch.
 
         Returns (completions, service_s) — empty if nothing is queued.
         Admission pops up to bucket-B requests per compat group; the
         rest stay queued for the next step (the "slots free up" cycle).
+        Preempted (suspended) batches resume before fresh admissions.
         """
+        if self._suspended:
+            return self._resume(self._suspended.popleft(), now)
         qkey = self._pick_queue()
         if qkey is None:
             return [], 0.0
@@ -400,6 +535,13 @@ class BoostScheduler:
         bucket = BucketKey(compat=compat, B=B, mloc=mloc_b)
         m_true = np.array([a[0].m for a in admitted]
                           + [admitted[0][0].m] * (B - n_real))
+        seq = self._dispatch_seq
+        self._dispatch_seq += 1
+        n_pre = self.preempt.get(seq)
+        if n_pre is not None:
+            return self._preempt_dispatch(
+                seq, bucket, admitted, (x, y, alive, keys), m_true,
+                n_pre)
         res, service_s = self._dispatch(bucket, x, y, alive, keys,
                                         m_true)
         self.stats.note(bucket, n_real, B)
@@ -444,7 +586,8 @@ class BoostScheduler:
             if not self.queued():
                 clock = max(clock, pending[i].arrival_s)
                 continue
-            if self.policy == "fill" and i < len(pending):
+            if self.policy == "fill" and i < len(pending) \
+                    and self._queues and not self._suspended:
                 deadline = self._fill_deadline()
                 if deadline is not None and clock < deadline:
                     # hold admission for a fuller batch, but never past

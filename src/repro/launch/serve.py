@@ -13,14 +13,20 @@ Two workloads share this entry point:
   validated against the measured payloads.  ``--scenario`` picks the
   adversarial noise model (core/scenarios.py): uniform flips, targeted
   flips on the heaviest points, a byzantine player corrupting its whole
-  shard, boundary-hugging noise, or drifting noise waves.
+  shard, boundary-hugging noise, or drifting noise waves — or an
+  *infrastructure* adversary (``dropout``/``flaky``/``rejoin``): a
+  player-alive schedule silences ``--infra-player`` mid-protocol and
+  the engines proceed with k′ < k players, reporting E_S(f) ≤ OPT over
+  the surviving shards and the mask-aware communication ledger.
 * ``--workload serve-stream`` — continuous batching: a stream of
   heterogeneous requests (mixed m, noise, scenario) replayed from a
   Poisson or bursty arrival trace through
   :mod:`repro.launch.scheduler`'s shape-bucketed compile cache.
   Reports tasks/sec, p50/p99 latency per bucket, and the cache
   hit/miss/compile counters (steady state after ``--warmup`` must show
-  zero compiles).
+  zero compiles).  ``--preempt D:R`` injects a preemption: dispatch D
+  is cut off after R rounds, checkpointed to msgpack, requeued and
+  resumed bit-identically.
 
 Usage:
     python -m repro.launch.serve --arch qwen3-32b --smoke \
@@ -95,7 +101,16 @@ def run(args) -> dict:
 
 
 def run_classify(args) -> dict:
-    """Serve a batch of B boosting tasks in one jitted dispatch."""
+    """Serve a batch of B boosting tasks in one jitted dispatch.
+
+    ``--scenario dropout/flaky/rejoin`` picks an *infrastructure*
+    adversary (core/scenarios.InfraSpec): the tasks carry the usual
+    ``--noise`` uniform flips, and a player-alive schedule silences
+    ``--infra-player`` per the adversary — the engines proceed with
+    k′ < k players and the report pins E_S(f) ≤ OPT over the surviving
+    shards plus the masked ledger (sharded engine validates it against
+    the measured collective payloads).
+    """
     from repro.core import batched, scenarios, sharded_batched, tasks, weak
     from repro.core.types import BoostConfig
 
@@ -106,9 +121,21 @@ def run_classify(args) -> dict:
         opt_budget=args.opt_budget,
         deterministic_coreset=args.cls != "stumps")
     B = args.batch
+    infra = args.scenario if args.scenario in scenarios.INFRA else None
+    noise_scenario = None if infra else args.scenario
     x, y, ts = tasks.make_batch(cls, B, args.m, args.k, args.noise,
-                                seed0=args.seed, scenario=args.scenario)
+                                seed0=args.seed,
+                                scenario=noise_scenario)
     keys = jax.random.split(jax.random.key(args.seed), B)
+    player_sched = None
+    spec = None
+    if infra:
+        spec = scenarios.InfraSpec(
+            name=infra, player=args.infra_player,
+            drop_round=args.infra_round,
+            rejoin_round=args.infra_round + args.infra_gap,
+            miss_rate=args.infra_miss_rate)
+        player_sched = spec.schedule(args.k, seed=args.seed)
     if args.engine == "sharded":
         run = functools.partial(
             sharded_batched.run_accurately_classify_sharded,
@@ -116,9 +143,9 @@ def run_classify(args) -> dict:
     else:
         run = batched.run_accurately_classify_batched
     # compile once, then measure the steady-state dispatch
-    run(x, y, keys, cfg, cls)
+    run(x, y, keys, cfg, cls, player_sched=player_sched)
     t0 = time.time()
-    res = run(x, y, keys, cfg, cls)
+    res = run(x, y, keys, cfg, cls, player_sched=player_sched)
     wall = time.time() - t0
     result = {
         "workload": "classify", "engine": args.engine, "batch": B,
@@ -128,7 +155,16 @@ def run_classify(args) -> dict:
         "wall_s": round(wall, 4),
         "tasks_per_s": round(B / max(wall, 1e-9), 2),
     }
-    if args.scenario is not None:
+    if infra:
+        reports = [scenarios.infra_report(ts[b], res, b, spec,
+                                          seed=args.seed)
+                   for b in range(B) if res.ok[b]]
+        result["survivors"] = int(spec.survivors(
+            args.k, seed=args.seed).sum())
+        result["guarantee_ok_survivors"] = int(
+            sum(r["guarantee_ok"] for r in reports))
+        result["bits_max"] = max((r["bits"] for r in reports), default=0)
+    elif args.scenario is not None:
         # the adversary decides how much it corrupts (byzantine flips a
         # whole shard regardless of --noise): report what was planted
         result["noise"] = max(int(t.noise_count) for t in ts)
@@ -159,7 +195,14 @@ def _next_pow2(v: int) -> int:
 
 
 def run_serve_stream(args) -> dict:
-    """Replay a mixed-shape request stream through the scheduler."""
+    """Replay a mixed-shape request stream through the scheduler.
+
+    ``--preempt D:R`` (repeatable) injects an infrastructure failure:
+    the D-th dispatch is cut off after R wire rounds, its engine state
+    checkpointed to ``--ckpt-dir`` (msgpack), and the batch requeued —
+    the resumed completions are still bit-identical to ``one_shot``.
+    """
+    from repro.core import scenarios
     from repro.launch import scheduler as S
 
     if args.m % (2 * args.k):
@@ -167,6 +210,11 @@ def run_serve_stream(args) -> dict:
             f"--m {args.m} must be a multiple of 2*k={2 * args.k}: the "
             "serve-stream shape mix includes m/2, and every shape's k "
             "shards must be equal-sized")
+    if args.scenario in scenarios.INFRA:
+        raise SystemExit(
+            f"--scenario {args.scenario} is an infrastructure adversary "
+            "— use --workload classify for player schedules, or "
+            "--preempt for serve-stream fault injection")
     n = args.requests
     shapes = [
         {"m": args.m // 2, "noise": 0},
@@ -174,6 +222,10 @@ def run_serve_stream(args) -> dict:
         {"m": args.m * 2, "noise": args.noise,
          "scenario": args.scenario},
     ]
+    preempt = {}
+    for spec in args.preempt or []:
+        d, r = spec.split(":")
+        preempt[int(d)] = int(r)
     if args.trace == "bursty":
         arrivals = S.bursty_trace(n, rate_per_s=args.rate,
                                   burst=args.burst, seed=args.seed)
@@ -193,7 +245,9 @@ def run_serve_stream(args) -> dict:
         mloc_sizes=tuple(sorted({_next_pow2(s["m"] // args.k)
                                  for s in shapes})))
     sched = S.BoostScheduler(lattice=lattice, policy=args.policy,
-                             fill_wait_s=args.fill_wait)
+                             fill_wait_s=args.fill_wait,
+                             ckpt_dir=args.ckpt_dir if preempt else None,
+                             preempt=preempt)
     if args.warmup:
         sched.warm(reqs)                # compile every reachable bucket
     warm = dataclasses.replace(sched.cache.stats)
@@ -204,6 +258,8 @@ def run_serve_stream(args) -> dict:
         "requests": n, "dispatches": sched.stats.dispatches,
         "padded_requests": sched.stats.padded_requests,
         "filler_lanes": sched.stats.filler_lanes,
+        "preemptions": sched.stats.preemptions,
+        "resumes": sched.stats.resumes,
         "cache_hits": sched.cache.stats.hits,
         "cache_compiles": sched.cache.stats.compiles,
         "steady_compiles": sched.cache.stats.compiles - warm.compiles,
@@ -240,7 +296,17 @@ def main():
                     choices=["batched", "sharded"])
     ap.add_argument("--scenario", default=None,
                     choices=[None, "clean", "uniform", "targeted_heavy",
-                             "byzantine", "boundary", "drift"])
+                             "byzantine", "boundary", "drift",
+                             "dropout", "flaky", "rejoin"])
+    # infrastructure adversaries (--scenario dropout/flaky/rejoin)
+    ap.add_argument("--infra-player", type=int, default=1,
+                    help="player the infra adversary silences")
+    ap.add_argument("--infra-round", type=int, default=5,
+                    help="wire round the player first goes absent")
+    ap.add_argument("--infra-gap", type=int, default=8,
+                    help="rejoin: rounds absent before returning")
+    ap.add_argument("--infra-miss-rate", type=float, default=0.3,
+                    help="flaky: per-round absence probability")
     # serve-stream workload
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--trace", default="poisson",
@@ -252,6 +318,10 @@ def main():
     ap.add_argument("--fill-wait", type=float, default=0.05)
     ap.add_argument("--warmup", action=argparse.BooleanOptionalAction,
                     default=True)
+    ap.add_argument("--preempt", action="append", metavar="D:R",
+                    help="preempt dispatch D after R wire rounds "
+                         "(repeatable); state checkpoints to --ckpt-dir")
+    ap.add_argument("--ckpt-dir", default="experiments/preempt_ckpt")
     args = ap.parse_args()
     if args.workload == "serve-stream":
         run_serve_stream(args)

@@ -51,6 +51,61 @@ def test_clean_corpus_zero_quarantine():
     assert stats["alive"] == 1024
 
 
+def test_duplicate_ids_accumulate_every_increment():
+    """Regression (ISSUE 4): sampling WITH replacement repeats ids in a
+    batch.  ``hits[ids] += …`` dropped all but one increment per
+    duplicated id and ``nll_ema[ids] = …`` was last-write-wins; the fix
+    (np.add.at + sequential EMA fold) must count every occurrence."""
+    cfg = resilient.ResilientConfig(num_examples=8, coreset_size=2,
+                                    check_every=1000)
+    state = resilient.init_state(cfg)
+    ids = np.array([3, 3, 3, 5])
+    nll = np.array([0.1, 0.2, 0.3, 9.0], np.float32)
+    state = resilient.update(state, ids, nll, cfg, step=1)
+    # batch median is 0.25: occurrences 0.1 and 0.2 of id 3 are hits
+    assert int(state.hits[3]) == 2, state.hits[3]
+    assert int(state.hits[5]) == 0
+    assert int(state.seen[3]) == 3 and int(state.seen[5]) == 1
+    # EMA folds the three id-3 observations sequentially:
+    # 0.1 → 0.7·0.1+0.3·0.2 = 0.13 → 0.7·0.13+0.3·0.3 = 0.181
+    np.testing.assert_allclose(state.nll_ema[3], 0.181, rtol=1e-5)
+    np.testing.assert_allclose(state.nll_ema[5], 9.0, rtol=1e-6)
+    # a duplicate-free batch still takes the vectorized path, bitwise
+    # equal to the sequential fold
+    s1 = resilient.init_state(cfg)
+    s2 = resilient.init_state(cfg)
+    ids_u = np.array([0, 1, 2])
+    nll_u = np.array([0.5, 1.5, 2.5], np.float32)
+    resilient.update(s1, ids_u, nll_u, cfg, step=1)
+    for j in range(3):
+        resilient.update(s2, ids_u[j:j + 1], nll_u[j:j + 1], cfg, step=1)
+    np.testing.assert_array_equal(s1.nll_ema, s2.nll_ema)
+    np.testing.assert_array_equal(s1.seen, s2.seen)
+
+
+def test_batch_weights_smoothboost_cap_semantics():
+    """batch_weights returns cap-clipped relative weights — max exactly
+    1 at the lightest-hit example, min ≥ 2^−cap, NOT normalized (the
+    docstring satellite of ISSUE 4 pins the actual semantics)."""
+    cfg = resilient.ResilientConfig(num_examples=16, mw_enabled=True,
+                                    mw_loss_weighting=True, mw_cap_bits=3)
+    state = resilient.init_state(cfg)
+    state.hits[:] = np.arange(16)
+    state.alive[10] = False
+    ids = np.array([0, 1, 2, 3, 9, 10, 15])
+    w, alive = (np.asarray(a) for a in
+                resilient.batch_weights(state, ids, cfg))
+    assert w.max() == 1.0                      # lightest-hit example
+    assert w.min() >= 2.0 ** -cfg.mw_cap_bits  # SmoothBoost cap
+    np.testing.assert_allclose(w[:4], [1.0, 0.5, 0.25, 0.125])
+    assert not np.isclose(w.sum(), 1.0)        # NOT normalized
+    np.testing.assert_array_equal(alive, [1, 1, 1, 1, 1, 0, 1])
+    # weighting off ⇒ all-ones
+    cfg_off = resilient.ResilientConfig(num_examples=16)
+    w0, _ = resilient.batch_weights(state, ids, cfg_off)
+    np.testing.assert_array_equal(np.asarray(w0), np.ones(7))
+
+
 def test_quarantine_is_deterministic():
     """Same stream seed ⇒ identical quarantine sets (no hidden state)."""
     cfg = resilient.ResilientConfig(num_examples=512, coreset_size=32,

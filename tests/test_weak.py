@@ -103,6 +103,63 @@ def test_ensemble_majority():
     np.testing.assert_array_equal(np.asarray(out), [-1, 1, 1])
 
 
+def test_ensemble_predict_tie_break_and_rounds_masking():
+    """Direct unit coverage of weak.ensemble_predict (previously only
+    exercised through engine parity): sign(0) := +1 deterministically,
+    and hypotheses at t ≥ rounds never vote."""
+    cls = weak.Thresholds(n=N)
+    up = np.array([2.0, 4, 4, 1.0], np.float32)     # +1 for x ≥ 4
+    dn = np.array([2.0, 4, 4, -1.0], np.float32)    # −1 for x ≥ 4
+    x = jnp.asarray([0, 4, 9], jnp.int32)
+    # two exactly opposed hypotheses ⇒ vote sum 0 everywhere ⇒ +1
+    hs = jnp.asarray(np.stack([up, dn]))
+    np.testing.assert_array_equal(
+        np.asarray(weak.ensemble_predict(cls, hs, 2, x)), [1, 1, 1])
+    # rounds masking: garbage rows beyond `rounds` must not vote —
+    # with rounds=1 only `up` speaks, whatever lives at t ≥ 1
+    garbage = np.full((3, 4), 7.0, np.float32)
+    hs_pad = jnp.asarray(np.concatenate([up[None], garbage]))
+    out1 = weak.ensemble_predict(cls, hs_pad, 1, x)
+    np.testing.assert_array_equal(np.asarray(out1), [-1, 1, 1])
+    # rounds=0: empty ensemble votes 0 ⇒ the +1 tie-break everywhere
+    np.testing.assert_array_equal(
+        np.asarray(weak.ensemble_predict(cls, hs_pad, 0, x)), [1, 1, 1])
+    # a traced rounds value behaves identically (the engines pass one)
+    np.testing.assert_array_equal(
+        np.asarray(weak.ensemble_predict(cls, hs_pad, jnp.int32(1), x)),
+        np.asarray(out1))
+
+
+def test_singletons_erm_full_domain_coverage_fallback():
+    """Singletons.erm's off-coreset candidate (constant −1 via a free
+    point) must NOT be taken when the coreset covers ALL of [0, n) —
+    there is no free point to name, even if the constant would win."""
+    cls = weak.Singletons(n=3)
+    # every point carries more − than + weight ⇒ every singleton is
+    # worse than constant −1 (err_in = Wp + 1/9 > Wp) — yet all 3
+    # domain points are present, so the fallback is unavailable
+    xs = jnp.asarray([0, 0, 1, 1, 2, 2], jnp.int32)
+    ys = jnp.asarray([1, -1, 1, -1, 1, -1], jnp.int8)
+    w = jnp.asarray([1, 2, 1, 2, 1, 2], jnp.float32) / 9.0
+    params, loss = cls.erm(xs, ys, w)
+    a = float(params[1])
+    assert a in (0.0, 1.0, 2.0), a          # an in-coreset candidate
+    # reported loss equals the actual loss of the returned hypothesis
+    pred = cls.predict(params, xs)
+    actual = float(jnp.sum((pred != ys) * w))
+    np.testing.assert_allclose(actual, float(loss), atol=1e-6)
+    np.testing.assert_allclose(float(loss), 3 / 9 + 1 / 9, atol=1e-6)
+    # same weights on a larger domain: the free point IS available and
+    # the constant −1 (loss Wp) wins
+    cls10 = weak.Singletons(n=10)
+    params2, loss2 = cls10.erm(xs, ys, w)
+    np.testing.assert_allclose(float(loss2), 3 / 9, atol=1e-6)
+    assert float(params2[1]) not in (0.0, 1.0, 2.0)
+    pred2 = cls10.predict(params2, xs)
+    np.testing.assert_allclose(
+        float(jnp.sum((pred2 != ys) * w)), float(loss2), atol=1e-6)
+
+
 def test_erm_batch_matches_per_row_and_is_pad_safe():
     """erm_batch == row-by-row erm, and zero-weight (padded) examples
     leave every candidate's error untouched."""
