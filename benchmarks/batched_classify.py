@@ -27,6 +27,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from benchmarks import common
 from repro.core import batched, classify, tasks, weak
 from repro.core.types import BoostConfig
 
@@ -63,12 +64,14 @@ def bench_once(B=32, m=256, k=4, noise=2, coreset=100, seed0=7):
     t_bat = time.time() - t0
 
     # parity gate: the two paths must agree on the protocol outcome
-    # (run.py turns the raised AssertionError into a FAILED row + exit 1)
+    # (run.py turns the raised AssertionError into a FAILED row + exit 1
+    # AND checks the registry recorded this gate as executed)
     agree = all(
         host_out[b].attempts == int(bat_out.attempts[b])
         and host_out[b].rounds == int(bat_out.rounds[b])
         for b in range(B))
-    assert agree, "batched engine diverged from the host loop"
+    common.gate("batched_host_parity", agree,
+                "batched engine diverged from the host loop")
     return {
         "B": B, "m": m, "k": k, "noise": noise, "coreset": coreset,
         "host_tasks_per_s": round(B / max(t_host, 1e-9), 2),

@@ -22,11 +22,13 @@ N_DEFAULT = 1 << 12
 
 def learn_once(clsname: str, m: int, k: int, noise: int, seed: int,
                n: int = N_DEFAULT, coreset: int = 400,
-               num_features: int = 8):
-    cls = weak.make_class(clsname, n=n, num_features=num_features)
+               num_features: int = 8, tree_depth: int = 2,
+               tree_bins: int = 32):
+    cls = weak.make_class(clsname, n=n, num_features=num_features,
+                          tree_depth=tree_depth, tree_bins=tree_bins)
     cfg = BoostConfig(
         k=k, coreset_size=coreset, domain_size=n, opt_budget=96,
-        deterministic_coreset=clsname != "stumps")
+        deterministic_coreset=not weak.needs_features(cls))
     task = tasks.make_task(cls, m=m, k=k, noise=noise, seed=seed)
     opt = tasks.true_opt(task)
     t0 = time.time()
@@ -50,3 +52,33 @@ def timeit(fn, *args, iters: int = 3, **kw):
         out = fn(*args, **kw)
     jax.block_until_ready(out)
     return (time.time() - t0) / iters * 1e6   # µs
+
+
+# ---------------------------------------------------------------------------
+# Gate registry.  A "gate" is a hard correctness assertion inside a
+# benchmark (parity, guarantee, ledger≡payload).  Asserting inline is
+# necessary but not sufficient: a gate that silently stops RUNNING
+# (suite renamed, registration dropped) passes by absence.  Benches
+# therefore record every gate here, and benchmarks/run.py checks the
+# executed set against its per-suite EXPECTED_GATES declaration — a
+# registered-but-not-executed gate fails the run, and the executed
+# list lands in GITHUB_STEP_SUMMARY for the CI record.
+# ---------------------------------------------------------------------------
+
+GATES_RUN: dict = {}
+
+
+def reset_gates() -> None:
+    GATES_RUN.clear()
+
+
+def gate(name: str, ok, detail: str = ""):
+    """Record + enforce a named correctness gate.
+
+    Recording accumulates with AND: gates re-checked in loops (one
+    call per shape/adversary/class) stay failed once any iteration
+    fails — run.py's registry check must hold even under ``python -O``
+    where the assert below is stripped.
+    """
+    GATES_RUN[name] = GATES_RUN.get(name, True) and bool(ok)
+    assert ok, f"gate {name} failed: {detail}"

@@ -32,6 +32,7 @@ import time
 import jax
 import numpy as np
 
+from benchmarks import common
 from repro.core import batched, scenarios, sharded_batched, tasks, weak
 from repro.core.types import BoostConfig
 from repro.launch import scheduler as S
@@ -78,6 +79,7 @@ def bench_adversary(name: str) -> dict:
     got = sharded_batched.run_accurately_classify_sharded(
         x, y, keys, cfg, cls, mesh=mesh, player_sched=sched)
     _assert_engine_parity(res, got)                    # gate 1
+    common.gate("fault_engine_parity", True)
     bits_masked = bits_full = 0
     for b in range(B):
         got.validate_ledger(b)                         # gate 2
@@ -85,7 +87,8 @@ def bench_adversary(name: str) -> dict:
         bits_full += baseline.ledger(b).total_bits
         rep = scenarios.infra_report(ts[b], res, b, spec)
         assert rep["guarantee_ok"], (name, b, rep)
-    assert bits_masked < bits_full, (name, bits_masked, bits_full)
+    common.gate("fault_masked_ledger", bits_masked < bits_full,
+                f"{name}: masked {bits_masked} ≥ all-alive {bits_full}")
     return {
         "bench": f"fault_{name}",
         "us_per_call": round(1e6 * wall / B, 1),
@@ -103,10 +106,10 @@ def bench_preempt_resume() -> dict:
     shapes = [{"m": 64, "k": 2, "noise": 1},
               {"m": 128, "k": 2, "noise": 2}]
     lattice = S.BucketLattice(b_sizes=(2, 4), mloc_sizes=(32, 64))
-    common = dict(coreset_size=48, opt_budget=6)
+    req_common = dict(coreset_size=48, opt_budget=6)
     arrivals = S.poisson_trace(N_REQUESTS, rate_per_s=500.0, seed=5)
     reqs = S.make_request_stream(N_REQUESTS, arrivals, shapes,
-                                 seed0=11, **common)
+                                 seed0=11, **req_common)
     with tempfile.TemporaryDirectory() as ck:
         sched = S.BoostScheduler(lattice=lattice, ckpt_dir=ck,
                                  preempt={0: 3, 1: 4})
@@ -119,6 +122,7 @@ def bench_preempt_resume() -> dict:
         assert sched.stats.resumes == 2
         idx = np.linspace(0, len(done) - 1,
                           min(8, len(done)), dtype=int)
+        ledgers_compared = 0
         for i in idx:                                  # gate 3
             c = done[int(i)]
             one = sched.one_shot(c.request)
@@ -129,6 +133,11 @@ def bench_preempt_resume() -> dict:
             if c.ok:
                 assert (c.per_task().ledger.total_bits
                         == one.per_task(0).ledger.total_bits)
+                ledgers_compared += 1
+        # the ledger leg must have compared SOMETHING — all-failed
+        # lanes would otherwise record a vacuous pass
+        common.gate("fault_preempt_resume_parity", ledgers_compared > 0,
+                    "no ok completion reached the ledger comparison")
         resumed = [c for c in done if c.resumed]
     return {
         "bench": "fault_preempt_resume",

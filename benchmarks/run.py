@@ -38,14 +38,33 @@ def _ensure_src_importable() -> None:
         sys.path.append(os.path.join(repo_root, "src"))
 
 
+# Correctness gates each suite must EXECUTE (benchmarks/common.gate
+# records them).  A gate that stops running — renamed, skipped, its
+# suite no longer reaching it — fails the run even though nothing
+# asserted: silently-not-run is indistinguishable from passing
+# otherwise.  The executed list is printed (and written to
+# GITHUB_STEP_SUMMARY in CI) for the record.
+EXPECTED_GATES = {
+    "batched_classify": ("batched_host_parity",),
+    "serving": ("serving_zero_steady_compiles", "serving_one_shot_parity",
+                "serving_sharded_ledger_payload"),
+    "fault_injection": ("fault_engine_parity", "fault_masked_ledger",
+                        "fault_preempt_resume_parity"),
+    "trees": ("tree_hist_kernel_parity", "tree_xor_guarantee",
+              "tree_stump_separation", "tree_matched_accuracy",
+              "tree_matched_wire"),
+}
+
+
 def _suite():
     from benchmarks import (baselines, batched_classify, fault_injection,
                             finite_class, kernel_micro, paper_claims,
-                            roofline, serving, sharded_scenarios)
+                            roofline, serving, sharded_scenarios, trees)
     return {
         "batched_classify": batched_classify.run_all,
         "serving": serving.run_all,
         "fault_injection": fault_injection.run_all,
+        "trees": trees.run_all,
         "sharded_scenarios": sharded_scenarios.run_all,
         "comm_vs_opt": paper_claims.comm_vs_opt,
         "comm_vs_k": paper_claims.comm_vs_k,
@@ -90,6 +109,29 @@ def write_trajectory_snapshot(all_rows: dict, failures: int,
     return path
 
 
+def _write_gate_summary(suite: dict, gates_executed: dict) -> None:
+    """Print the executed-gate table; append it to GITHUB_STEP_SUMMARY
+    when CI provides one, so every run records WHICH correctness gates
+    actually ran (not just that nothing asserted)."""
+    lines = ["| suite | gate | executed | passed |",
+             "|---|---|---|---|"]
+    for name in suite:
+        ran = gates_executed.get(name, {})
+        for g in EXPECTED_GATES.get(name, ()):
+            lines.append(
+                f"| {name} | {g} | {'yes' if g in ran else 'NO'} "
+                f"| {'yes' if ran.get(g) else 'NO'} |")
+        for g in sorted(set(ran) - set(EXPECTED_GATES.get(name, ()))):
+            lines.append(f"| {name} | {g} (unregistered) | yes "
+                         f"| {'yes' if ran[g] else 'NO'} |")
+    table = "\n".join(lines)
+    print(f"# executed gates:\n{table}", file=sys.stderr)
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as f:
+            f.write("## Benchmark correctness gates\n\n" + table + "\n")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
@@ -112,12 +154,24 @@ def main() -> None:
     print("name,us_per_call,derived")
     all_rows = {}
     failures = 0
+    gates_executed = {}
+    from benchmarks import common as _common
     for name, fn in suite.items():
         t0 = time.time()
+        _common.reset_gates()
         try:
             rows = fn()
             us = (time.time() - t0) * 1e6
             all_rows[name] = rows
+            gates_executed[name] = dict(_common.GATES_RUN)
+            # a gate is a regression when it didn't run OR recorded a
+            # failure without raising (gate()'s assert is stripped
+            # under python -O; the registry must not depend on it)
+            missing = [g for g in EXPECTED_GATES.get(name, ())
+                       if not _common.GATES_RUN.get(g)]
+            if missing:
+                failures += 1
+                print(f"{name},-1,\"GATES NOT PASSED: {missing}\"")
             for row in rows:
                 derived = row.get("derived", "")
                 extra = ";".join(f"{k}={v}" for k, v in row.items()
@@ -130,7 +184,9 @@ def main() -> None:
                       f"\"{derived};{extra}\"")
         except Exception as e:  # noqa: BLE001
             failures += 1
+            gates_executed[name] = dict(_common.GATES_RUN)
             print(f"{name},-1,\"FAILED: {type(e).__name__}: {e}\"")
+    _write_gate_summary(suite, gates_executed)
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     if args.only and os.path.exists(args.out):
         # --only refreshes just its suite's rows; keep the others, but

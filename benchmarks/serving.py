@@ -32,6 +32,7 @@ import os
 
 import numpy as np
 
+from benchmarks import common
 from repro.launch import scheduler as S
 
 SMOKE = os.environ.get("REPRO_BENCH_SMOKE") == "1"
@@ -82,16 +83,19 @@ def bench_stream(policy: str, trace: str, engine: str = "batched",
     compiles_warm = sched.cache.stats.compiles
     done = sched.run_stream(reqs)
     steady_compiles = sched.cache.stats.compiles - compiles_warm
-    assert steady_compiles == 0, (
-        f"steady state recompiled {steady_compiles}×")
+    common.gate("serving_zero_steady_compiles", steady_compiles == 0,
+                f"steady state recompiled {steady_compiles}×")
     assert len(done) == len(reqs)
     _assert_parity(sched, done)
+    common.gate("serving_one_shot_parity", True)
     validated = 0
     if engine == "sharded":
         for c in done:
             if c.ok:
                 c.validate_ledger()
                 validated += 1
+        common.gate("serving_sharded_ledger_payload", validated > 0,
+                    "no sharded completion was ledger-validated")
     summary = S.latency_summary(done)
     return {
         "policy": policy, "trace": trace, "engine": engine,

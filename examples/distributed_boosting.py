@@ -29,10 +29,16 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="smaller sizes for CI")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes: seconds, not minutes (the "
+                         "examples smoke test runs this)")
     args = ap.parse_args()
-    m = 8192 if args.fast else 65536
-    n = 1 << 16 if args.fast else 1 << 20
-    k = 8 if args.fast else 16
+    if args.smoke:
+        m, n, k = 512, 1 << 10, 4
+    elif args.fast:
+        m, n, k = 8192, 1 << 16, 8
+    else:
+        m, n, k = 65536, 1 << 20, 16
 
     print("=== AccuratelyClassify across hypothesis classes ===")
     for clsname in ("thresholds", "intervals", "singletons"):
@@ -58,7 +64,7 @@ def main():
 
     print("\n=== Theorem 2.3 hard instances (set disjointness) ===")
     rng = np.random.default_rng(0)
-    for r in (4, 16):
+    for r in ((4,) if args.smoke else (4, 16)):
         cfg = BoostConfig(k=2, coreset_size=400, domain_size=n,
                           opt_budget=3 * r + 8)
         for disjoint in (True, False):

@@ -5,7 +5,12 @@ communication counted in bits, and verify the Theorem 4.1 guarantee
 E_S(f) ≤ OPT.
 
     PYTHONPATH=src python examples/quickstart.py
+
+(QUICKSTART_M / QUICKSTART_NOISE env vars shrink the sample — how the
+examples smoke test runs this file in seconds; defaults unchanged.)
 """
+
+import os
 
 import jax
 import jax.numpy as jnp
@@ -19,7 +24,9 @@ cls = weak.Thresholds(n=n)
 
 # 8192 examples labelled by a hidden threshold, 10 labels flipped
 # (OPT ≤ 10), adversarially split among k=4 players by domain region.
-task = tasks.make_task(cls, m=8192, k=4, noise=10, seed=0)
+m = int(os.environ.get("QUICKSTART_M", "8192"))
+noise = int(os.environ.get("QUICKSTART_NOISE", "10"))
+task = tasks.make_task(cls, m=m, k=4, noise=noise, seed=0)
 opt = tasks.true_opt(task)
 
 cfg = BoostConfig(k=4, coreset_size=400, domain_size=n, opt_budget=32)
@@ -28,7 +35,7 @@ f, result = classify.learn(jnp.asarray(task.x), jnp.asarray(task.y),
 
 errors = int(weak.empirical_errors(f(jnp.asarray(task.flat_x)),
                                    jnp.asarray(task.flat_y)))
-naive = ledger.naive_baseline_bits(8192, n)
+naive = ledger.naive_baseline_bits(m, n)
 
 print(f"OPT                  = {opt}")
 print(f"E_S(f)               = {errors}   (guarantee: ≤ OPT)")

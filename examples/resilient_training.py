@@ -21,9 +21,14 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="minimal model + steps (the examples smoke "
+                         "test runs this)")
     a = ap.parse_args()
     if a.full:
         d_model, steps, batch, seq = 768, 300, 32, 128   # ≈110M params
+    elif a.smoke:
+        d_model, steps, batch, seq = 64, 6, 8, 16
     else:
         d_model, steps, batch, seq = 384, 150, 32, 48    # ≈26M params
     steps = a.steps or steps

@@ -1,0 +1,67 @@
+"""Histogram-tree weak learners on concepts stumps cannot fit.
+
+Plants an off-centre XOR (and alternating bands) over [0,1)^F, shows
+the best axis stump is pinned near chance while the depth-2 histogram
+tree class drives the full resilient protocol to E_S(f) ≈ OPT, and
+prints the wire cost: tree hypotheses are
+``nodes·(⌈log2 F⌉+bin_bits)+leaves`` bits per round — the Theorem 4.1
+communication scales with that encoding, never with m.
+
+    PYTHONPATH=src python examples/tree_boosting.py
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import batched, scenarios, weak
+from repro.core.types import BoostConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--m", type=int, default=256)
+    ap.add_argument("--k", type=int, default=4)
+    ap.add_argument("--noise", type=int, default=4)
+    ap.add_argument("--features", type=int, default=4)
+    ap.add_argument("--bins", type=int, default=32)
+    a = ap.parse_args()
+
+    stumps = weak.AxisStumps(num_features=a.features)
+    for name, depth, kw in (("xor", 2, {}),
+                            ("bands", 3, {"n_bands": 4})):
+        cls = weak.make_class("tree", num_features=a.features,
+                              tree_depth=depth, tree_bins=a.bins)
+        cfg = BoostConfig(k=a.k, coreset_size=64,
+                          domain_size=1 << cls.value_bits,
+                          opt_budget=16, deterministic_coreset=False)
+        spec = scenarios.ScenarioSpec(name=name, noise=a.noise, **kw)
+        ts = [scenarios.make_feature_task(cls, m=a.m, k=a.k, spec=spec,
+                                          seed=s)
+              for s in range(a.batch)]
+        x = np.stack([t.x for t in ts])
+        y = np.stack([t.y for t in ts])
+        keys = jax.random.split(jax.random.key(0), a.batch)
+        res = batched.run_accurately_classify_batched(x, y, keys, cfg,
+                                                      cls)
+        print(f"=== {name} (depth-{depth} trees, "
+              f"{cls.hypothesis_bits()}-bit hypotheses) ===")
+        for b in range(a.batch):
+            f = res.classifier(b)
+            errs = int(weak.empirical_errors(
+                f(jnp.asarray(ts[b].flat_x)),
+                jnp.asarray(ts[b].flat_y)))
+            planted = scenarios.planted_errors(ts[b])
+            floor = scenarios.class_floor(ts[b], stumps)
+            status = "OK " if errs <= planted + 0.05 * a.m else "BAD"
+            print(f"  task {b}: E_S(f)={errs:3d}  OPT≤{planted:3d}  "
+                  f"best-stump={floor:3d}  [{status}]  "
+                  f"attempts={int(res.attempts[b])}  "
+                  f"bits={res.ledger(b).total_bits:,}")
+
+
+if __name__ == "__main__":
+    main()

@@ -76,7 +76,7 @@ class StepState(NamedTuple):
     alive: jax.Array          # [k, mloc] current alive-example mask
     disputed: jax.Array       # [k, mloc] quarantined-example mask
     key_data: jax.Array       # task key (raw words)
-    h_params: jax.Array       # [t_buf, 4] ensemble of the winning attempt
+    h_params: jax.Array       # [t_buf, P] winning ensemble, P=param_dim(cls)
     rounds: jax.Array         # int32 rounds of the winning attempt
     min_loss: jax.Array       # last center ERM loss (diagnostic)
     hist_stuck: jax.Array     # [A] bool   per-attempt stuck flag
@@ -92,7 +92,7 @@ class StepState(NamedTuple):
     t: jax.Array              # int32 hypotheses produced this attempt
     bound: jax.Array          # int32 this attempt's round bound
     hits: jax.Array           # [k, mloc] MW state
-    cur_h: jax.Array          # [t_buf, 4] growing ensemble
+    cur_h: jax.Array          # [t_buf, P] growing ensemble
     core_x: jax.Array         # [k, c(, F)] last round's pooled coreset
     core_y: jax.Array         # [k, c]
     step: jax.Array           # int32 global wire-round counter
@@ -128,11 +128,17 @@ def canon_player_sched(player_sched, B: int, k: int) -> jax.Array:
 
 
 def init_state(x, y, keys, cfg: BoostConfig, alive=None,
-               t_buf: int | None = None) -> StepState:
-    """Fresh protocol state for a [B, k, mloc(, F)] batch."""
+               t_buf: int | None = None, cls=None) -> StepState:
+    """Fresh protocol state for a [B, k, mloc(, F)] batch.
+
+    ``cls`` sizes the ensemble buffers (``weak.param_dim`` — classes
+    with wider hypothesis vectors than the 4-wide default, e.g. the
+    histogram trees, need it); None keeps the legacy 4-wide layout.
+    """
     x = jnp.asarray(x)
     y = jnp.asarray(y)
     B, k, mloc = x.shape[0], x.shape[1], x.shape[2]
+    p_dim = weak.param_dim(cls)
     if alive is None:
         alive = jnp.ones((B, k, mloc), bool)
     else:
@@ -147,7 +153,7 @@ def init_state(x, y, keys, cfg: BoostConfig, alive=None,
         attempt=i32((B,)), done=jnp.zeros((B,), bool),
         alive=alive, disputed=jnp.zeros_like(alive),
         key_data=kd,
-        h_params=jnp.zeros((B, t_buf, weak.PARAM_DIM), jnp.float32),
+        h_params=jnp.zeros((B, t_buf, p_dim), jnp.float32),
         rounds=i32((B,)), min_loss=jnp.zeros((B,), jnp.float32),
         hist_stuck=jnp.zeros((B, a_max), bool),
         hist_rounds=i32((B, a_max)), hist_alive=i32((B, a_max)),
@@ -158,7 +164,7 @@ def init_state(x, y, keys, cfg: BoostConfig, alive=None,
         akey_data=jnp.zeros_like(kd),
         t=i32((B,)), bound=i32((B,)),
         hits=W.init_hits((B, k, mloc)),
-        cur_h=jnp.zeros((B, t_buf, weak.PARAM_DIM), jnp.float32),
+        cur_h=jnp.zeros((B, t_buf, p_dim), jnp.float32),
         core_x=jnp.zeros((B, k, c) + x.shape[3:], x.dtype),
         core_y=jnp.zeros((B, k, c), y.dtype),
         step=i32((B,)))
@@ -292,7 +298,8 @@ def run_rounds(state: StepState, x, y, cfg: BoostConfig, cls,
 
 @functools.partial(jax.jit, static_argnames=("cfg", "cls", "t_buf"))
 def _classify_batched_jit(x, y, alive0, keys, sched, cfg, cls, t_buf):
-    state = init_state(x, y, keys, cfg, alive=alive0, t_buf=t_buf)
+    state = init_state(x, y, keys, cfg, alive=alive0, t_buf=t_buf,
+                       cls=cls)
     return _run_steps(x, y, sched, state, _RUN_FOREVER, cfg, cls)
 
 
@@ -348,7 +355,7 @@ class BatchedClassifyResult:
     counts; see classify.dispute_table).
     """
 
-    hypotheses: np.ndarray   # [B, T_buf, 4]
+    hypotheses: np.ndarray   # [B, T_buf, P], P = weak.param_dim(cls)
     rounds: np.ndarray       # [B]
     ok: np.ndarray           # [B] bool
     attempts: np.ndarray     # [B]

@@ -146,7 +146,8 @@ def boost_attempt_arrays(x, y, alive, hits0, key, cfg: BoostConfig, cls,
     carry = _Carry(
         t=jnp.int32(0), it=jnp.int32(0), stuck=jnp.asarray(False),
         hits=hits0, key=key,
-        h_params=jnp.zeros((num_rounds, weak.PARAM_DIM), jnp.float32),
+        h_params=jnp.zeros((num_rounds, weak.param_dim(cls)),
+                           jnp.float32),
         core_idx=jnp.zeros((k, c), jnp.int32),
         core_x=jnp.zeros((k, c) + x.shape[2:], x.dtype),
         core_y=jnp.zeros((k, c), y.dtype),
@@ -260,7 +261,8 @@ def boost_attempt_sharded(mesh, cfg: BoostConfig, cls, num_rounds: int,
                     pid == 0,
                     lambda: _center_erm(cls, cx_all, cy_all, mix,
                                         cfg.coreset_size),
-                    lambda: (jnp.zeros((weak.PARAM_DIM,), jnp.float32),
+                    lambda: (jnp.zeros((weak.param_dim(cls),),
+                                       jnp.float32),
                              jnp.float32(0)))
                 h = jax.lax.psum(jnp.where(pid == 0, h0, 0.0), axes)
                 loss = jax.lax.psum(jnp.where(pid == 0, loss0, 0.0),
@@ -283,7 +285,8 @@ def boost_attempt_sharded(mesh, cfg: BoostConfig, cls, num_rounds: int,
             return (~stuck) & (t < num_rounds)
 
         carry0 = (jnp.int32(0), jnp.int32(0), jnp.asarray(False), hl, key,
-                  jnp.zeros((num_rounds, weak.PARAM_DIM), jnp.float32),
+                  jnp.zeros((num_rounds, weak.param_dim(cls)),
+                            jnp.float32),
                   jnp.float32(0))
         t, it, stuck, hitsl, _, h_params, loss = jax.lax.while_loop(
             cond, round_body, carry0)

@@ -93,14 +93,25 @@ def boost_attempt_ledger_masked(cfg: BoostConfig, cls, m: int, rounds: int,
 
 def theorem_41_bound(cfg: BoostConfig, cls, m: int, opt: int,
                      constant: float = 1.0) -> float:
-    """O(OPT · k·log|S|·(d·log n + log|S|)) with an explicit constant and
-    the coreset size standing in for O(d/ε²)."""
+    """O(OPT · k·log|S|·(d·log n + hyp + log|S|)) with an explicit
+    constant and the coreset size standing in for O(d/ε²).
+
+    The explicit ``hypothesis_bits`` term makes the bound scale with
+    the hypothesis description length — for the small 1-D classes it is
+    dominated by the coreset term (the asymptotic form hides it in
+    d·log n), but tree classes broadcast O(2^depth·log(F·Q))-bit
+    hypotheses per round and the accounting must grow with them, never
+    with m.  Monotone in ``hypothesis_bits`` by construction (tested in
+    tests/test_ledger.py); adding the term only loosens the ≤-bound
+    checks the property suite pins.
+    """
     n = domain_size(cls)
     logm = math.log2(max(m, 2))
     logn = math.log2(max(n, 2))
     d = cls.vc_dim
     per_attempt = cfg.k * (6 * logm + 1) * (
-        cfg.coreset_size * (logn + 1) / max(d, 1) * d + logm)
+        cfg.coreset_size * (logn + 1) / max(d, 1) * d
+        + cls.hypothesis_bits() + logm)
     return constant * max(opt + 1, 1) * per_attempt
 
 

@@ -36,6 +36,18 @@ arrays, deterministic in their rng, and return an explicit flip mask so
 tests can compute recall/precision of the quarantine against the
 planted ground truth.
 
+Multi-feature concept families (:data:`FEATURE_SCENARIOS` — ``xor``,
+``checkerboard``, ``bands``) are a different kind of adversary: they
+pick the *concept*, not the noise.  The sample is grid-snapped uniform
+over [0, 1)^F labelled by a planted histogram tree
+(:func:`make_feature_task`) that single-feature classes provably
+cannot fit — the workload class the tree weak learner
+(``weak_tree/``) exists for — and any corruptor above composes on top
+(``ScenarioSpec.noise_kind``).  Ground-truth helpers:
+:func:`planted_errors` (an in-class OPT witness) and
+:func:`class_floor` (best full-sample loss of ANY class on the task,
+e.g. the pinned ≥ 0.25·m stump floor on planted XOR).
+
 Infrastructure adversaries (:class:`InfraSpec`) attack the *protocol*
 rather than the labels: they emit a per-round ``player_alive [R, k]``
 schedule the fault-tolerant engines consume (``player_sched=``):
@@ -69,6 +81,13 @@ from repro.core import tasks, weak
 SCENARIOS = ("clean", "uniform", "targeted_heavy", "byzantine",
              "boundary", "drift")
 INFRA = ("none", "dropout", "flaky", "rejoin")
+
+# Multi-feature concept families (planted ground truth, not a
+# corruptor): the sample is labelled by a tree-expressible concept that
+# single-feature classes provably cannot fit — XOR of two off-centre
+# half-planes, a cells×cells checkerboard, alternating axis-aligned
+# bands.  Any noise adversary above composes on top (``noise_kind``).
+FEATURE_SCENARIOS = ("xor", "checkerboard", "bands")
 
 
 def _x1d(x: np.ndarray) -> np.ndarray:
@@ -124,6 +143,15 @@ def _corrupt_boundary(rng, x, y, noise, params, cls):
     elif t == 4.0:                             # stump: feature a, theta b
         feat = x.reshape((-1,) + x.shape[2:])[:, int(a)].astype(np.float64)
         dist = np.abs(feat - b)
+    elif t == 5.0:                             # tree: nearest node cut
+        flat = x.reshape((-1,) + x.shape[2:]).astype(np.float64)
+        ni, Q = cls.nodes, cls.bins
+        feats = params[1:1 + ni].astype(int)
+        qbins = params[1 + ni:1 + 2 * ni]
+        dist = np.full(flat.shape[0], np.inf)
+        for f, q in zip(feats, qbins):
+            if q > 0:                          # skip degenerate splits
+                dist = np.minimum(dist, np.abs(flat[:, f] - q / Q))
     else:                                      # threshold / singleton: a
         dist = np.abs(xf - a)
     flip = np.zeros(y.size, bool)
@@ -159,17 +187,55 @@ _CORRUPTORS = {
 @dataclasses.dataclass(frozen=True)
 class ScenarioSpec:
     """A named adversary with its knobs (hashable, so batch builders can
-    key jit caches on it)."""
+    key jit caches on it).
+
+    ``name`` is either a noise adversary (:data:`SCENARIOS`) applied to
+    a class-labelled task, or a planted multi-feature concept
+    (:data:`FEATURE_SCENARIOS`); for the latter ``noise_kind`` picks
+    which noise adversary corrupts the planted sample on top (the
+    feature families and the corruptors compose, they don't compete).
+    """
 
     name: str
     noise: int = 0
     byzantine_player: int = 0
     waves: int = 4
+    # feature-family knobs
+    noise_kind: str = "uniform"  # corruptor composed over a planted task
+    cells: int = 4               # checkerboard strips per axis (2^j)
+    n_bands: int = 4             # bands count (2^j)
 
     def __post_init__(self):
-        if self.name not in SCENARIOS:
+        if self.name not in SCENARIOS + FEATURE_SCENARIOS:
             raise ValueError(
-                f"unknown scenario {self.name!r}; pick from {SCENARIOS}")
+                f"unknown scenario {self.name!r}; pick from "
+                f"{SCENARIOS + FEATURE_SCENARIOS}")
+        if self.name in FEATURE_SCENARIOS:
+            if self.noise_kind not in _CORRUPTORS:
+                raise ValueError(
+                    f"noise_kind {self.noise_kind!r} must be one of "
+                    f"{tuple(_CORRUPTORS)}")
+            for v, what in ((self.cells, "cells"),
+                            (self.n_bands, "n_bands")):
+                if v < 2 or v & (v - 1):
+                    raise ValueError(
+                        f"{what} must be a power of two ≥ 2, got {v}")
+
+    def min_tree_depth(self) -> int:
+        """Tree depth this scenario is DESIGNED for (FEATURE_SCENARIOS
+        only) — CLI entry points validate against it up front instead
+        of failing (or silently plateauing) deep inside a run.  For
+        ``bands`` this is the greedy peel-chain depth n_bands−1, not
+        the balanced representability depth log2(n_bands): greedy
+        grows the chain, and a shallower class predictably leaves an
+        impure leaf (see the bands builder's comment)."""
+        if self.name == "xor":
+            return 2
+        if self.name == "checkerboard":
+            return 2 * (self.cells.bit_length() - 1)
+        if self.name == "bands":
+            return max(self.n_bands - 1, 1)
+        raise ValueError(f"{self.name!r} plants no tree concept")
 
 
 def corrupt_task(task: tasks.Task, spec: ScenarioSpec,
@@ -199,11 +265,210 @@ def corrupt_task(task: tasks.Task, spec: ScenarioSpec,
         scenario=spec.name)
 
 
+# ---------------------------------------------------------------------------
+# Multi-feature concept families (planted trees — the workloads stumps
+# provably cannot fit).
+# ---------------------------------------------------------------------------
+
+def _bst_cut_levels(cuts) -> list:
+    """Sorted interior cuts [2^j − 1] → per-level cut lists of the
+    balanced BST over them (level i holds 2^i cuts).  A leaf's path
+    bits, read as a binary number (right = 1), are its strip index —
+    the in-order property the leaf labelling below relies on."""
+    cuts = list(cuts)
+    j = (len(cuts) + 1).bit_length() - 1
+    assert (1 << j) == len(cuts) + 1, "cuts must number 2^j − 1"
+    return [[cuts[(2 * t + 1) * (1 << (j - 1 - i)) - 1]
+             for t in range(1 << i)] for i in range(j)]
+
+
+def _require_distinct_cuts(cuts: np.ndarray, what: str,
+                           Q: int) -> np.ndarray:
+    """Planted cuts must be strictly increasing interior bins — a
+    collision means a strip/band vanished and the concept is silently
+    NOT what was requested.  Refuse loudly: the fix is more bins (or
+    fewer cells/bands), not a degenerate plant."""
+    if not (np.all(np.diff(cuts) > 0) and cuts[0] >= 1
+            and cuts[-1] <= Q - 1):
+        raise ValueError(
+            f"{what}: cannot plant {len(cuts) + 1} distinct strips on "
+            f"a {Q}-bin grid (cuts {cuts.tolist()} collide) — raise "
+            "tree_bins or lower cells/n_bands")
+    return cuts
+
+
+def _uneven_cuts(rng, Q: int, parts: int) -> np.ndarray:
+    """parts−1 interior cut bins, deliberately OFF the even grid.
+
+    Greedy split finding needs gain at the true boundaries: a perfectly
+    even partition makes interior cuts gain-free at the root (mass
+    balances) and greedy degenerates.  Even spacing plus a nonzero
+    jitter of ≤ ¼ strip keeps every strip alive while making each cut's
+    two sides unbalanced.
+    """
+    step = Q // parts
+    base = np.arange(1, parts) * step
+    mag = max(step // 4, 1)
+    jit = rng.integers(1, mag + 1, size=parts - 1) \
+        * rng.choice([-1, 1], size=parts - 1)
+    return _require_distinct_cuts(
+        np.clip(base + jit, 1, Q - 1), f"checkerboard×{parts}", Q)
+
+
+def _plant_tree(cls, levels: list, leaf_of_path) -> np.ndarray:
+    """Encode a concept as params of ``cls`` (HistogramTrees).
+
+    ``levels[i]`` is the list of (feature, qbin) of level i's 2^i
+    nodes; depths below ``len(levels)`` pad with degenerate qbin = 0
+    splits (everything routes right), and every leaf takes the value of
+    its first len(levels) path bits — so the padded tree computes the
+    same function at any ``cls.depth ≥ len(levels)``.
+    """
+    d0, D = len(levels), cls.depth
+    if D < d0:
+        raise ValueError(
+            f"concept needs depth ≥ {d0}, class has {D}")
+    feats = np.zeros(cls.nodes, np.int64)
+    qbins = np.zeros(cls.nodes, np.int64)
+    for lv in range(d0):
+        for i, (f, q) in enumerate(levels[lv]):
+            feats[(1 << lv) - 1 + i] = f
+            qbins[(1 << lv) - 1 + i] = q
+    signs = np.array([leaf_of_path(leaf >> (D - d0))
+                      for leaf in range(cls.leaves)], np.float32)
+    return cls.pack_params(feats, qbins, signs)
+
+
+def _plant_feature_concept(cls, spec: ScenarioSpec, rng) -> np.ndarray:
+    """The planted tree of a FEATURE_SCENARIOS member, over cls's grid."""
+    Q, F = cls.bins, cls.num_features
+    s0 = float(rng.choice([-1.0, 1.0]))
+    if spec.name == "xor":
+        # two half-plane cuts, off-centre on opposite sides by
+        # [Q/8, 3Q/16]: greedy's root gain is proportional to the
+        # offset (a centred XOR has a flat gain surface and greedy
+        # degenerates), while the best-stump error is ≈ the smaller cut
+        # mass — capping the offset at 3Q/16 keeps it ≥ 5/16 > 0.25,
+        # the separation the trees-vs-stumps tests pin
+        f1, f2 = rng.choice(F, size=2, replace=False)
+        qa = int(rng.integers(5 * Q // 16, 3 * Q // 8 + 1))
+        qb = int(rng.integers(5 * Q // 8, 11 * Q // 16 + 1))
+        levels = [[(f1, qa)], [(f2, qb), (f2, qb)]]
+        return _plant_tree(
+            cls, levels,
+            lambda p: s0 * (1.0 if (p >> 1) != (p & 1) else -1.0))
+    if spec.name == "checkerboard":
+        c = spec.cells
+        j = c.bit_length() - 1
+        f1, f2 = rng.choice(F, size=2, replace=False)
+        lv1 = _bst_cut_levels(_uneven_cuts(rng, Q, c))
+        lv2 = _bst_cut_levels(_uneven_cuts(rng, Q, c))
+        levels = [[(f1, q) for q in lv1[i]] for i in range(j)]
+        levels += [[(f2, lv2[i][idx % (1 << i)])
+                    for idx in range(1 << (j + i))] for i in range(j)]
+        return _plant_tree(
+            cls, levels,
+            lambda p: s0 * (1.0 if ((p >> j) + (p & ((1 << j) - 1)))
+                            % 2 == 0 else -1.0))
+    # bands: alternating-sign intervals of one feature, widths strictly
+    # DECREASING.  Alternation defeats stumps (min-side error stays a
+    # band mass) and, with equal widths, also defeats 1-step greedy
+    # (every cut of a −+− region scores the middle band — a flat gain
+    # surface).  Decreasing masses restore a strict greedy gradient:
+    # peeling the widest end band wins at every level, so a depth ≥
+    # n_bands−1 tree grows the exact peel chain (the planted tree
+    # itself is the balanced depth-log2(n_bands) form).
+    b = spec.n_bands
+    j = b.bit_length() - 1
+    f1 = int(rng.integers(F))
+    widths = np.power(0.62, np.arange(b))
+    cuts = np.round(np.cumsum(widths / widths.sum())[:-1] * Q)
+    cuts = np.clip(cuts.astype(int)
+                   + rng.integers(-1, 2, size=b - 1), 1, Q - 1)
+    cuts = _require_distinct_cuts(cuts, f"bands×{b}", Q)
+    lv = _bst_cut_levels(cuts)
+    levels = [[(f1, lv[i][idx % (1 << i)]) for idx in range(1 << i)]
+              for i in range(j)]
+    return _plant_tree(
+        cls, levels, lambda p: s0 * (1.0 if p % 2 == 0 else -1.0))
+
+
+def make_feature_task(cls, m: int, k: int, spec: ScenarioSpec,
+                      seed: int = 0,
+                      adversarial_split: bool = True) -> tasks.Task:
+    """A planted multi-feature task: grid-snapped uniform points of
+    [0, 1)^F labelled by the scenario's tree concept, adversarially
+    split, then corrupted by ``spec.noise_kind`` (``spec.noise`` flips
+    — the planted tree labels all of them wrong, so OPT ≤ noise with
+    the concept itself as witness; see :func:`planted_errors`)."""
+    if not hasattr(cls, "pack_params"):
+        raise ValueError(
+            f"{spec.name!r} plants a tree concept and needs a "
+            f"HistogramTrees class, got {type(cls).__name__} (run other "
+            "classes on these tasks via class_floor for comparison)")
+    import jax.numpy as jnp
+    rng = np.random.default_rng(np.random.SeedSequence([seed, 0xFEA7]))
+    x = cls.sample_points(rng, m)
+    params = _plant_feature_concept(cls, spec, rng)
+    y = np.asarray(cls.predict(jnp.asarray(params),
+                               jnp.asarray(x))).astype(np.int8)
+    xs, ys = tasks._split(rng, x, y, k, adversarial_split)
+    task = tasks.Task(x=xs, y=ys, target_params=params, noise_count=0,
+                      cls=cls, flipped=np.zeros((k, m // k), bool),
+                      scenario=spec.name)
+    if spec.noise > 0:
+        # every corruptor knob rides along (byzantine_player is inert
+        # today — noise_kind can't name byzantine — but forgetting it
+        # here would silently target player 0 if that ever changes)
+        task = corrupt_task(
+            task, ScenarioSpec(name=spec.noise_kind, noise=spec.noise,
+                               waves=spec.waves,
+                               byzantine_player=spec.byzantine_player),
+            seed=seed)
+        task = dataclasses.replace(
+            task, target_params=params,
+            scenario=f"{spec.name}+{spec.noise_kind}")
+    return task
+
+
+def planted_errors(task: tasks.Task) -> int:
+    """Errors of the PLANTED concept on the (corrupted) sample — an
+    in-class witness, so true OPT ≤ this (= noise_count when every flip
+    lands on a distinct point).  The greedy tree ERM floor
+    (:func:`class_floor`) can sit above true OPT; this cannot."""
+    import jax.numpy as jnp
+    pred = task.cls.predict(jnp.asarray(task.target_params),
+                            jnp.asarray(task.flat_x))
+    return int(weak.empirical_errors(pred, jnp.asarray(task.flat_y)))
+
+
+def class_floor(task: tasks.Task, cls=None) -> int:
+    """Best full-sample uniform-weight error count ``cls`` reaches on
+    the task (default: the task's own class) — exact OPT for the
+    closed-form 1-D classes and stumps, the greedy floor for trees.
+    The trees-vs-stumps separation tests pin
+    ``class_floor(xor_task, stumps) ≥ 0.25·m`` while the tree protocol
+    reaches ≤ planted_errors + ε·m."""
+    import jax.numpy as jnp
+    cls = task.cls if cls is None else cls
+    x = jnp.asarray(task.flat_x)
+    y = jnp.asarray(task.flat_y)
+    m = int(y.shape[0])
+    w = jnp.ones((m,), jnp.float32) / m
+    _, loss = cls.erm(x, y, w)
+    return int(round(float(loss) * m))
+
+
 def make_scenario_task(cls, m: int, k: int, spec: ScenarioSpec,
                        seed: int = 0,
                        adversarial_split: bool = True) -> tasks.Task:
     """Clean task from ``tasks.make_task`` (identical x/target streams),
-    then scenario corruption on the split arrays."""
+    then scenario corruption on the split arrays; FEATURE_SCENARIOS
+    route to :func:`make_feature_task` (planted concept + composed
+    noise) instead."""
+    if spec.name in FEATURE_SCENARIOS:
+        return make_feature_task(cls, m=m, k=k, spec=spec, seed=seed,
+                                 adversarial_split=adversarial_split)
     base = tasks.make_task(cls, m=m, k=k, noise=0, seed=seed,
                            adversarial_split=adversarial_split)
     return corrupt_task(base, spec, seed=seed)

@@ -87,7 +87,8 @@ def _agnostic_boost_jit(x, y, alive, key, cfg: BoostConfig, cls,
         return _Carry(carry.t + 1, hits, key, h_params), loss
 
     carry0 = _Carry(jnp.int32(0), W.init_hits(x.shape[:2]), key,
-                    jnp.zeros((num_rounds, weak.PARAM_DIM), jnp.float32))
+                    jnp.zeros((num_rounds, weak.param_dim(cls)),
+                              jnp.float32))
     carry, losses = jax.lax.scan(body, carry0, None, length=num_rounds)
     return carry.h_params, losses
 

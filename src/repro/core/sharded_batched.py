@@ -179,7 +179,7 @@ def _round_body(cfg: BoostConfig, cls, k: int, x, y, alive, x_orders,
         h0, loss0 = jax.lax.cond(
             pid == cdev,
             lambda: _center_erm(cls, cx_all, cy_all, mix, cfg.coreset_size),
-            lambda: (jnp.zeros((weak.PARAM_DIM,), jnp.float32),
+            lambda: (jnp.zeros((weak.param_dim(cls),), jnp.float32),
                      jnp.float32(0)))
         h = jax.lax.psum(jnp.where(pid == cdev, h0, 0.0), AXIS)
         loss = jax.lax.psum(jnp.where(pid == cdev, loss0, 0.0), AXIS)
@@ -221,16 +221,18 @@ _SHARDED_FIELDS = ("alive", "disputed", "hits")
 
 
 def init_state_sharded(x, y, keys, cfg: BoostConfig, alive=None,
-                       t_buf: int | None = None) -> dict:
+                       t_buf: int | None = None, cls=None) -> dict:
     """Fresh sharded-engine state (global [B, …] arrays; the shard_map
     call partitions the player-sharded fields per its in_specs).
 
     The protocol fields ARE ``batched.init_state``'s — built by it, so
     the two engines' state layouts (and checkpoint shape contracts) can
     never drift; only the wire-payload counters are sharded-specific.
+    ``cls`` sizes the ensemble buffers, exactly as there.
     """
     state = batched.init_state(jnp.asarray(x), jnp.asarray(y), keys,
-                               cfg, alive=alive, t_buf=t_buf)._asdict()
+                               cfg, alive=alive, t_buf=t_buf,
+                               cls=cls)._asdict()
     B = state["attempt"].shape[0]
     a_max = cfg.opt_budget + 1
     i32 = functools.partial(jnp.zeros, dtype=jnp.int32)
@@ -378,7 +380,8 @@ def _build_sharded_step(mesh: Mesh, cfg: BoostConfig, cls,
                    for f in init_state_sharded(
                        np.zeros((1, k, 2), np.int32),
                        np.zeros((1, k, 2), np.int8),
-                       jax.random.split(jax.random.key(0), 1), cfg)}
+                       jax.random.split(jax.random.key(0), 1), cfg,
+                       cls=cls)}
     in_specs = (sharded, sharded, P(), state_specs, P())
     return jax.jit(_shard_map(per_device, mesh=mesh, in_specs=in_specs,
                               out_specs=state_specs))
@@ -408,7 +411,7 @@ def _build_sharded(mesh: Mesh, cfg: BoostConfig, cls, t_buf: int,
 
     def full(x, y, alive, keys, sched):
         state = init_state_sharded(x, y, keys, cfg, alive=alive,
-                                   t_buf=t_buf)
+                                   t_buf=t_buf, cls=cls)
         return step(x, y, sched, state, batched._RUN_FOREVER)
 
     return jax.jit(full)

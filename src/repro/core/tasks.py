@@ -51,30 +51,21 @@ def _split(rng, x, y, k, adversarial=True):
 def make_task(cls, m: int, k: int, noise: int, seed: int = 0,
               adversarial_split: bool = True) -> Task:
     """Sample m points, label by a random target in ``cls``, flip
-    ``noise`` distinct labels."""
+    ``noise`` distinct labels.
+
+    Class-agnostic via the capability protocol (core/weak.py): every
+    hypothesis class supplies ``sample_points(rng, m)`` and
+    ``sample_target(rng, x)``, so new classes plug in without editing
+    this module.  (The per-class bodies moved verbatim from the old
+    ``isinstance`` chain here — same rng call order, same streams.)
+    """
     rng = np.random.default_rng(seed)
-    if isinstance(cls, weak.AxisStumps):
-        F = cls.num_features
-        x = rng.standard_normal((m, F)).astype(np.float32) * 100.0
-        f = int(rng.integers(F))
-        theta = float(np.quantile(x[:, f], rng.uniform(0.2, 0.8)))
-        s = float(rng.choice([-1.0, 1.0]))
-        params = np.array([4.0, f, theta, s], np.float32)
-    else:
-        n = cls.n
-        x = rng.integers(0, n, size=m).astype(np.int32)
-        if isinstance(cls, weak.Singletons):
-            a = int(x[rng.integers(m)])
-            params = np.array([1.0, a, a, 1.0], np.float32)
-        elif isinstance(cls, weak.Thresholds):
-            a = float(np.quantile(x, rng.uniform(0.2, 0.8)))
-            s = float(rng.choice([-1.0, 1.0]))
-            params = np.array([2.0, np.floor(a), np.floor(a), s], np.float32)
-        elif isinstance(cls, weak.Intervals):
-            a, b = np.sort(rng.choice(x, size=2, replace=False))
-            params = np.array([3.0, a, b, 1.0], np.float32)
-        else:
-            raise ValueError(f"unsupported class {cls}")
+    if not (hasattr(cls, "sample_points") and hasattr(cls, "sample_target")):
+        raise ValueError(
+            f"{type(cls).__name__} lacks the sample_points/sample_target "
+            "task-generation capability (see core/weak.py)")
+    x = np.asarray(cls.sample_points(rng, m))
+    params = np.asarray(cls.sample_target(rng, x), np.float32)
     import jax.numpy as jnp
     y = np.asarray(cls.predict(jnp.asarray(params), jnp.asarray(x)))
     y = y.astype(np.int8)

@@ -9,7 +9,10 @@ reduction in closed, jittable form (prefix sums / Kadane / segment sums),
 so the certificate "no hypothesis is 1/100-good" is exact, which is what
 Observation 4.3 (non-realizability of S') requires.
 
-Hypothesis encoding — a flat float32[4] vector ``(type, a, b, s)``:
+Hypothesis encoding — a flat float32 vector, ``(type, a, b, s)`` for
+the 4-wide classes below (``cls.param_dim``, default :data:`PARAM_DIM`,
+is the class's width — the engines size their ensemble buffers from it
+via :func:`param_dim`):
 
 =====  ==========================  =======================================
 type   class                       prediction
@@ -18,10 +21,21 @@ type   class                       prediction
 2      threshold over [n)          s if x ≥ a else −s  (a = n ⇒ constant −s)
 3      interval over [n)           +1 iff a ≤ x ≤ b
 4      axis-aligned stump          s if X[..., f=a] ≥ b else −s
+5      histogram tree (weak_tree)  leaf sign after depth-d bin routing
 =====  ==========================  =======================================
 
-All ``predict`` methods broadcast ``params [..., 4]`` against point
+All ``predict`` methods broadcast ``params [..., P]`` against point
 arrays and return int8 ±1.
+
+Capability protocol (how core/tasks.py, launch/ and benchmarks/ stay
+class-agnostic — new classes plug in without editing them):
+
+* ``needs_features``  — True iff the class consumes feature rows
+  ``[.., F]`` (⇒ randomized coreset; 1-D integer classes keep the
+  deterministic quantile coreset);
+* ``param_dim``       — hypothesis vector width (absent ⇒ PARAM_DIM);
+* ``sample_points(rng, m)`` / ``sample_target(rng, x)`` — how
+  ``tasks.make_task`` draws a sample and a ground-truth hypothesis.
 """
 
 from __future__ import annotations
@@ -30,8 +44,22 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 PARAM_DIM = 4
+
+
+def param_dim(cls) -> int:
+    """Hypothesis-vector width of a class (PARAM_DIM when unstated) —
+    what the engines size ensemble buffers with."""
+    return PARAM_DIM if cls is None else getattr(cls, "param_dim",
+                                                 PARAM_DIM)
+
+
+def needs_features(cls) -> bool:
+    """True iff the class consumes feature rows [.., F] (the capability
+    that used to be an ``isinstance(cls, AxisStumps)`` special-case)."""
+    return bool(getattr(cls, "needs_features", False))
 
 
 def _pm(b: jax.Array) -> jax.Array:
@@ -86,9 +114,17 @@ class Singletons:
     n: int
 
     vc_dim: int = 1
+    needs_features = False
 
     def hypothesis_bits(self) -> int:
         return int(jnp.ceil(jnp.log2(self.n))) + 2  # point id + type/sign
+
+    def sample_points(self, rng, m: int):
+        return rng.integers(0, self.n, size=m).astype("int32")
+
+    def sample_target(self, rng, x):
+        a = int(x[rng.integers(x.shape[0])])
+        return np.array([1.0, a, a, 1.0], np.float32)
 
     def predict(self, params: jax.Array, x: jax.Array) -> jax.Array:
         a = _field(params, 1, x.ndim)
@@ -133,9 +169,18 @@ class Thresholds:
     n: int
 
     vc_dim: int = 1
+    needs_features = False
 
     def hypothesis_bits(self) -> int:
         return int(jnp.ceil(jnp.log2(self.n + 1))) + 3
+
+    def sample_points(self, rng, m: int):
+        return rng.integers(0, self.n, size=m).astype("int32")
+
+    def sample_target(self, rng, x):
+        a = float(np.quantile(x, rng.uniform(0.2, 0.8)))
+        s = float(rng.choice([-1.0, 1.0]))
+        return np.array([2.0, np.floor(a), np.floor(a), s], np.float32)
 
     def predict(self, params: jax.Array, x: jax.Array) -> jax.Array:
         a = _field(params, 1, x.ndim)
@@ -173,9 +218,17 @@ class Intervals:
     n: int
 
     vc_dim: int = 2
+    needs_features = False
 
     def hypothesis_bits(self) -> int:
         return 2 * int(jnp.ceil(jnp.log2(self.n))) + 2
+
+    def sample_points(self, rng, m: int):
+        return rng.integers(0, self.n, size=m).astype("int32")
+
+    def sample_target(self, rng, x):
+        a, b = np.sort(rng.choice(x, size=2, replace=False))
+        return np.array([3.0, a, b, 1.0], np.float32)
 
     def predict(self, params: jax.Array, x: jax.Array) -> jax.Array:
         a = _field(params, 1, x.ndim)
@@ -220,6 +273,12 @@ class AxisStumps:
     num_features: int
     value_bits: int = 32
 
+    needs_features = True
+
+    @property
+    def feature_dim(self) -> int:
+        return self.num_features
+
     @property
     def vc_dim(self) -> int:
         return max(1, int(jnp.ceil(jnp.log2(self.num_features))) + 1)
@@ -227,6 +286,16 @@ class AxisStumps:
     def hypothesis_bits(self) -> int:
         return (int(jnp.ceil(jnp.log2(self.num_features)))
                 + self.value_bits + 3)
+
+    def sample_points(self, rng, m: int):
+        return (rng.standard_normal((m, self.num_features))
+                .astype(np.float32) * 100.0)
+
+    def sample_target(self, rng, x):
+        f = int(rng.integers(self.num_features))
+        theta = float(np.quantile(x[:, f], rng.uniform(0.2, 0.8)))
+        s = float(rng.choice([-1.0, 1.0]))
+        return np.array([4.0, f, theta, s], np.float32)
 
     def predict(self, params: jax.Array, x: jax.Array) -> jax.Array:
         """params [..., 4], x [*pts, F] → [*param_batch, *pts]."""
@@ -269,7 +338,8 @@ def erm_batch(cls, xs: jax.Array, ys: jax.Array, w: jax.Array):
     return jax.vmap(cls.erm)(xs, ys, w)
 
 
-def make_class(name: str, *, n: int = 0, num_features: int = 0):
+def make_class(name: str, *, n: int = 0, num_features: int = 0,
+               tree_depth: int = 2, tree_bins: int = 32):
     if name == "singletons":
         return Singletons(n=n)
     if name == "thresholds":
@@ -278,6 +348,10 @@ def make_class(name: str, *, n: int = 0, num_features: int = 0):
         return Intervals(n=n)
     if name == "stumps":
         return AxisStumps(num_features=num_features)
+    if name == "tree":
+        from repro.weak_tree import HistogramTrees
+        return HistogramTrees(num_features=num_features,
+                              depth=tree_depth, bins=tree_bins)
     raise ValueError(f"unknown hypothesis class {name!r}")
 
 

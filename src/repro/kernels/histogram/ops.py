@@ -1,0 +1,64 @@
+"""Public wrapper: pad to block multiples, dispatch, reduce to splits.
+
+Both entry points accept an optional leading batch (task) axis:
+``x [c, F]`` uses the 4-D grid; ``x [B, c, F]`` lowers to the batched
+kernel whose outermost grid axis folds (task, node) — one launch for
+one tree level of the center ERM of all B tasks.
+
+Routing policy (mirrors how the stump kernel is deployed): the Pallas
+program is the TPU fast path; on CPU the pure-jnp ref IS the production
+implementation (XLA:CPU lowers the one-hot einsum well, while
+interpret-mode Pallas is a debugging tool, not a fast path — see
+TESTING.md for forcing it).  :func:`node_histograms` therefore
+dispatches ref-vs-Pallas on the backend unless ``interpret=True``
+explicitly requests the interpreted kernel (the parity tests do).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.histogram import kernel as K
+from repro.kernels.histogram.ref import (  # noqa: F401  (re-export oracle)
+    best_splits_ref, bin_index, node_histograms_ref)
+
+
+def _pallas_histograms(x, w, wy, bins: int, interpret: bool):
+    batched = x.ndim == 3
+    c, F = x.shape[-2], x.shape[-1]
+    pc, pf = (-c) % K.BC, (-F) % K.BF
+    lead = ((0, 0),) if batched else ()
+    xp = jnp.pad(x, lead + ((0, pc), (0, pf)))      # pad rows: zero weight
+    wp = jnp.pad(w, lead + ((0, 0), (0, pc)))       # ⇒ no-op in every bin
+    wyp = jnp.pad(wy, lead + ((0, 0), (0, pc)))
+    if batched:
+        hw, hwy = K.hist_batched_pallas(xp, wp, wyp, bins=bins,
+                                        interpret=interpret)
+        return hw[:, :, :F, :bins], hwy[:, :, :F, :bins]
+    hw, hwy = K.hist_pallas(xp, wp, wyp, bins=bins, interpret=interpret)
+    return hw[:, :F, :bins], hwy[:, :F, :bins]
+
+
+def node_histograms(x, w, wy, bins: int, interpret: bool | None = None):
+    """(hist_w, hist_wy) [(B,) N, F, Q] — see ref.node_histograms_ref.
+
+    ``interpret=None`` (default): Pallas on TPU, jnp ref elsewhere.
+    ``interpret=True``: force the interpreted Pallas kernel (parity
+    testing).  ``interpret=False``: force the compiled kernel.
+    """
+    if interpret is None:
+        if jax.default_backend() != "tpu":
+            return node_histograms_ref(x, w, wy, bins)
+        interpret = False
+    return _pallas_histograms(x, w, wy, bins, interpret)
+
+
+def best_node_splits(x, w, wy, bins: int, interpret: bool | None = None):
+    """Histogram + reduce: the best (feature, bin) split per node.
+
+    Returns (feat, q, err) each [(B,) N] — the full split-finding step
+    of one tree level in one call (kernel contraction + jnp reduction).
+    """
+    hw, hwy = node_histograms(x, w, wy, bins, interpret=interpret)
+    return best_splits_ref(hw, hwy)

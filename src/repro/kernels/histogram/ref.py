@@ -1,0 +1,65 @@
+"""Pure-jnp oracle for the weighted tree-histogram contraction.
+
+Binning convention (shared with weak_tree — defined ONCE, here):
+features live in [0, 1) and ``bin(x) = clip(floor(x·Q), 0, Q−1)`` with
+``Q = bins``.  A split "x ≥ q/Q" is therefore exactly "bin(x) ≥ q",
+which is how both the ERM routing and tree ``predict`` evaluate it —
+so growing on histograms and predicting on raw features can never
+disagree, even for x outside [0, 1) (the clip is part of the split).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def bin_index(x, bins: int):
+    """[.., F] f32 in [0,1) → int32 bin ids in [0, bins)."""
+    b = jnp.floor(x * bins).astype(jnp.int32)
+    return jnp.clip(b, 0, bins - 1)
+
+
+def node_histograms_ref(x, w, wy, bins: int):
+    """Per-node weighted feature histograms.
+
+    x  [c, F]    f32 features (or [B, c, F] with a leading task axis);
+    w  [N, c]    per-node routed weights (0 off-node; [B, N, c] batched);
+    wy [N, c]    per-node routed signed weights w·y;
+    →  (hist_w, hist_wy) [N, F, Q] f32 ([B, N, F, Q] batched):
+       hist[n, f, q] = Σ_i w[n, i] · 1[bin(x[i, f]) == q].
+    """
+    b = bin_index(x, bins)
+    onehot = (b[..., None] == jnp.arange(bins)).astype(jnp.float32)
+    if x.ndim == 3:
+        return (jnp.einsum("bnc,bcfq->bnfq", w, onehot),
+                jnp.einsum("bnc,bcfq->bnfq", wy, onehot))
+    return (jnp.einsum("nc,cfq->nfq", w, onehot),
+            jnp.einsum("nc,cfq->nfq", wy, onehot))
+
+
+def best_splits_ref(hist_w, hist_wy):
+    """Reduce histograms to the best (feature, bin) split per node.
+
+    hist_* [..., N, F, Q] → (feat [..., N] i32, q [..., N] i32,
+    err [..., N] f32): the split minimising the two-leaf weighted error
+    with optimally-signed constant leaves,
+        err(f, q) = ½(W_L − |WY_L|) + ½(W_R − |WY_R|),
+    where L = bins < q, R = bins ≥ q.  q = 0 is the degenerate
+    everything-right split (its error is the no-split optimum), kept as
+    a candidate so an unsplittable node degrades deterministically.
+    Ties break to the first flat (f, q) index — bit-stable everywhere.
+    """
+    Q = hist_w.shape[-1]
+    F = hist_w.shape[-2]
+    cw = jnp.cumsum(hist_w, axis=-1)
+    cwy = jnp.cumsum(hist_wy, axis=-1)
+    left_w = cw - hist_w                    # exclusive prefix: bins < q
+    left_wy = cwy - hist_wy
+    tot_w = cw[..., -1:]
+    tot_wy = cwy[..., -1:]
+    err = (0.5 * (left_w - jnp.abs(left_wy))
+           + 0.5 * ((tot_w - left_w) - jnp.abs(tot_wy - left_wy)))
+    flat = err.reshape(err.shape[:-2] + (F * Q,))
+    j = jnp.argmin(flat, axis=-1)
+    errmin = jnp.take_along_axis(flat, j[..., None], axis=-1)[..., 0]
+    return (j // Q).astype(jnp.int32), (j % Q).astype(jnp.int32), errmin

@@ -83,6 +83,8 @@ class Request:
     clsname: str = "thresholds"
     domain: int = 1 << 12
     num_features: int = 8
+    tree_depth: int = 2          # clsname == "tree": depth / bin grid
+    tree_bins: int = 32
     coreset_size: int = 100
     opt_budget: int = 16
     scenario: str | None = None  # core/scenarios.py adversary, or uniform
@@ -92,13 +94,18 @@ class Request:
 
     def make_cls(self):
         return weak.make_class(self.clsname, n=self.domain,
-                               num_features=self.num_features)
+                               num_features=self.num_features,
+                               tree_depth=self.tree_depth,
+                               tree_bins=self.tree_bins)
 
     def make_cfg(self) -> BoostConfig:
+        # feature-row classes (stumps, trees) use the randomized
+        # coreset — a capability of the class, not a name special-case
         return BoostConfig(
             k=self.k, coreset_size=self.coreset_size,
             domain_size=self.domain, opt_budget=self.opt_budget,
-            deterministic_coreset=self.clsname != "stumps")
+            deterministic_coreset=not weak.needs_features(
+                self.make_cls()))
 
     def make_task(self) -> tasks.Task:
         if self.scenario is not None:
@@ -430,8 +437,9 @@ class BoostScheduler:
         compat = bucket.compat
         if compat.engine == "sharded":
             return sharded_batched.init_state_sharded(
-                x, y, keys, compat.cfg, alive=alive)
-        return batched.init_state(x, y, keys, compat.cfg, alive=alive)
+                x, y, keys, compat.cfg, alive=alive, cls=compat.cls)
+        return batched.init_state(x, y, keys, compat.cfg, alive=alive,
+                                  cls=compat.cls)
 
     def _engine_run(self, bucket: BucketKey, state, x, y, n):
         compat = bucket.compat

@@ -115,14 +115,18 @@ def run_classify(args) -> dict:
     from repro.core.types import BoostConfig
 
     cls = weak.make_class(args.cls, n=args.domain,
-                          num_features=args.features)
+                          num_features=args.features,
+                          tree_depth=args.tree_depth,
+                          tree_bins=args.tree_bins)
     cfg = BoostConfig(
         k=args.k, coreset_size=args.coreset, domain_size=args.domain,
         opt_budget=args.opt_budget,
-        deterministic_coreset=args.cls != "stumps")
+        deterministic_coreset=not weak.needs_features(cls))
     B = args.batch
     infra = args.scenario if args.scenario in scenarios.INFRA else None
     noise_scenario = None if infra else args.scenario
+    if noise_scenario in scenarios.FEATURE_SCENARIOS:
+        _check_feature_scenario(noise_scenario, args)
     x, y, ts = tasks.make_batch(cls, B, args.m, args.k, args.noise,
                                 seed0=args.seed,
                                 scenario=noise_scenario)
@@ -190,6 +194,27 @@ def run_classify(args) -> dict:
     return result
 
 
+def _check_feature_scenario(name: str, args) -> None:
+    """Up-front validation of a planted-concept scenario: needs the
+    tree class at sufficient depth — fail at argument time, not deep
+    inside task construction (or after a serve-stream cache warm)."""
+    from repro.core import scenarios
+
+    if args.cls != "tree":
+        raise SystemExit(
+            f"--scenario {name} plants a tree concept: run it "
+            "with --cls tree (--tree-depth/--tree-bins)")
+    need = scenarios.ScenarioSpec(name=name).min_tree_depth()
+    if args.tree_depth < need:
+        raise SystemExit(
+            f"--scenario {name} needs --tree-depth ≥ {need} "
+            f"(got {args.tree_depth})")
+    if name in ("xor", "checkerboard") and args.features < 2:
+        raise SystemExit(
+            f"--scenario {name} crosses two features: needs "
+            f"--features ≥ 2 (got {args.features})")
+
+
 def _next_pow2(v: int) -> int:
     return 1 << max(v - 1, 1).bit_length()
 
@@ -232,10 +257,13 @@ def run_serve_stream(args) -> dict:
     else:
         arrivals = S.poisson_trace(n, rate_per_s=args.rate,
                                    seed=args.seed)
+    if args.scenario in scenarios.FEATURE_SCENARIOS:
+        _check_feature_scenario(args.scenario, args)
     reqs = S.make_request_stream(
         n, arrivals, shapes, seed0=args.seed, k=args.k,
         clsname=args.cls, domain=args.domain,
         num_features=args.features,
+        tree_depth=args.tree_depth, tree_bins=args.tree_bins,
         coreset_size=args.coreset, opt_budget=args.opt_budget,
         engine=args.engine)
     # one lattice point per distinct shape: the next power of two over
@@ -287,16 +315,23 @@ def main():
     ap.add_argument("--m", type=int, default=512)
     ap.add_argument("--k", type=int, default=4)
     ap.add_argument("--noise", type=int, default=2)
-    ap.add_argument("--cls", default="thresholds")
+    ap.add_argument("--cls", default="thresholds",
+                    choices=["singletons", "thresholds", "intervals",
+                             "stumps", "tree"])
     ap.add_argument("--domain", type=int, default=1 << 12)
     ap.add_argument("--coreset", type=int, default=100)
     ap.add_argument("--features", type=int, default=8)
+    ap.add_argument("--tree-depth", type=int, default=2,
+                    help="--cls tree: tree depth D (2^D leaves)")
+    ap.add_argument("--tree-bins", type=int, default=32,
+                    help="--cls tree: histogram bins Q (power of two)")
     ap.add_argument("--opt-budget", type=int, default=16)
     ap.add_argument("--engine", default="batched",
                     choices=["batched", "sharded"])
     ap.add_argument("--scenario", default=None,
                     choices=[None, "clean", "uniform", "targeted_heavy",
                              "byzantine", "boundary", "drift",
+                             "xor", "checkerboard", "bands",
                              "dropout", "flaky", "rejoin"])
     # infrastructure adversaries (--scenario dropout/flaky/rejoin)
     ap.add_argument("--infra-player", type=int, default=1,

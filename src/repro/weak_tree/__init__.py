@@ -1,0 +1,5 @@
+"""Histogram-grown decision-tree weak learners (see trees.py)."""
+
+from repro.weak_tree.trees import TYPE_TREE, HistogramTrees
+
+__all__ = ["HistogramTrees", "TYPE_TREE"]

@@ -1,0 +1,229 @@
+"""Depth-d axis-aligned decision trees grown by weighted histograms.
+
+The protocol is agnostic to the hypothesis class — players ship
+coresets, the center ships back ANY weighted-ERM hypothesis and the
+wire pays ``hypothesis_bits`` per round (Theorem 4.1's bits scale with
+the hypothesis description length, never with m).  Every class the repo
+had so far is single-feature, so each scenario was axis-separable; this
+class opens the multi-feature regime (XOR / checkerboard / bands —
+concepts stumps provably cannot fit) with the LightGBM-style fast path:
+per-node weighted feature histograms (``kernels/histogram``) reduced to
+best (feature, bin) splits, level by level.
+
+**Fixed-shape, array-encoded.**  A depth-d tree is a complete binary
+tree: ``nodes = 2^d − 1`` internal nodes in level order, ``leaves =
+2^d``.  Hypothesis encoding — a flat float32 vector (rides the
+``erm/erm_batch/ensemble_predict`` contract and the engines' ensemble
+buffers unchanged, like the 4-wide classes):
+
+    params = [type=5 | feat_0..feat_{NI−1} | qbin_0..qbin_{NI−1}
+              | sign_0..sign_{NL−1}]           (param_dim = 1+2·NI+NL)
+
+Node j at level l (0-indexed flat id ``2^l − 1 + i``) routes a point
+right iff ``bin(x[feat_j]) ≥ qbin_j`` where ``bin`` is the fixed
+[0, 1)-grid map of kernels/histogram/ref.py — predict evaluates the
+SAME comparison the grower optimised, so they can never disagree.  A
+``qbin = 0`` split is degenerate (everything right): how an
+unsplittable node (empty, pure, or tie) pads out the fixed shape.
+
+**Greedy, not exact.**  Unlike the closed-form 1-D classes, tree ERM is
+greedy level-wise split finding — the standard histogram-boosting trade
+(exact depth-d ERM is NP-hard).  The stuck certificate is therefore
+approximate: a stuck round means GREEDY found no 1/100-good tree.
+Quarantine soundness is unaffected (disputed points get the pointwise-
+optimal majority vote regardless of why the attempt stuck); only the
+communication bound inherits the greedy slack.  Scenario note: greedy
+needs the planted boundaries OFF-centre (a perfectly symmetric XOR has
+a zero-gain root and greedy degenerates) — core/scenarios.py plants
+asymmetric cuts for exactly this reason.
+
+ERM weights follow the repo contract: w ≥ 0 sums to ~1 (mixture/c), a
+zero-weight row contributes to no histogram, and an all-zero-weight
+call degenerates to loss 0 with the deterministic first-candidate tree.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.histogram import ops as H
+
+TYPE_TREE = 5.0
+
+
+@dataclasses.dataclass(frozen=True)
+class HistogramTrees:
+    """H = depth-``depth`` axis trees over [0,1)^F on a ``bins``-bin
+    grid.  Hashable (a jit static / scheduler CompatKey component)."""
+
+    num_features: int
+    depth: int = 2
+    bins: int = 32               # power of two: q/Q thresholds are exact
+
+    # capability protocol (core/tasks.py, serve/scheduler): this class
+    # consumes feature rows [.., F] and needs the randomized coreset
+    needs_features: bool = dataclasses.field(default=True, init=False,
+                                             repr=False)
+
+    def __post_init__(self):
+        if self.depth < 1:
+            raise ValueError(f"depth must be ≥ 1, got {self.depth}")
+        if self.bins < 2 or self.bins & (self.bins - 1):
+            raise ValueError(
+                f"bins must be a power of two ≥ 2, got {self.bins}")
+
+    # -- shape/bit accounting ---------------------------------------------
+
+    @property
+    def feature_dim(self) -> int:
+        return self.num_features
+
+    @property
+    def nodes(self) -> int:
+        return (1 << self.depth) - 1
+
+    @property
+    def leaves(self) -> int:
+        return 1 << self.depth
+
+    @property
+    def param_dim(self) -> int:
+        return 1 + 2 * self.nodes + self.leaves
+
+    @property
+    def bin_bits(self) -> int:
+        return int(math.log2(self.bins))
+
+    @property
+    def feat_bits(self) -> int:
+        return max(1, math.ceil(math.log2(max(self.num_features, 2))))
+
+    @property
+    def value_bits(self) -> int:
+        """A grid point is F bin ids — what a coreset example costs on
+        the wire (ledger.domain_size reads this)."""
+        return self.num_features * self.bin_bits
+
+    @property
+    def vc_dim(self) -> int:
+        """log2|H| = hypothesis_bits bounds the VC dimension of this
+        finite class (|H| ≤ (F·Q)^nodes · 2^leaves)."""
+        return self.hypothesis_bits()
+
+    def hypothesis_bits(self) -> int:
+        """nodes·(⌈log2 F⌉ + bin_bits) + leaves — each internal node
+        names a feature and a bin edge, each leaf a sign."""
+        return (self.nodes * (self.feat_bits + self.bin_bits)
+                + self.leaves)
+
+    # -- prediction --------------------------------------------------------
+
+    def _unpack(self, p: jax.Array):
+        ni = self.nodes
+        feat = p[1:1 + ni].astype(jnp.int32)
+        qbin = p[1 + ni:1 + 2 * ni].astype(jnp.int32)
+        sign = p[1 + 2 * ni:1 + 2 * ni + self.leaves]
+        return feat, qbin, sign
+
+    def _route(self, feat, qbin, b):
+        """b [M, F] bin ids → leaf index [M] (level-order descent)."""
+        node = jnp.zeros(b.shape[:-1], jnp.int32)
+        for level in range(self.depth):
+            flat = node + ((1 << level) - 1)
+            f = feat[flat]
+            q = qbin[flat]
+            xv = jnp.take_along_axis(b, f[..., None], axis=-1)[..., 0]
+            node = node * 2 + (xv >= q).astype(jnp.int32)
+        return node
+
+    def _predict_one(self, p: jax.Array, x: jax.Array) -> jax.Array:
+        feat, qbin, sign = self._unpack(p)
+        b = H.bin_index(x, self.bins)
+        leaf = self._route(feat, qbin, b)
+        return jnp.where(jnp.take(sign, leaf) > 0,
+                         jnp.int8(1), jnp.int8(-1))
+
+    def predict(self, params: jax.Array, x: jax.Array) -> jax.Array:
+        """params [..., P], x [*pts, F] → int8 ±1 [*param_batch, *pts]."""
+        params = jnp.asarray(params)
+        if params.ndim == 1:
+            return self._predict_one(params, x)
+        flat = params.reshape((-1, params.shape[-1]))
+        out = jax.vmap(lambda p: self._predict_one(p, x))(flat)
+        return out.reshape(params.shape[:-1] + x.shape[:-1])
+
+    # -- the weak learner --------------------------------------------------
+
+    def erm(self, xs: jax.Array, ys: jax.Array, w: jax.Array):
+        """Greedy level-wise histogram tree on (xs [c, F], ys, w).
+
+        One ``node_histograms`` launch per level (2^l nodes fold into
+        the kernel's node axis; under the engines' task-vmap the whole
+        level of all B tasks is one batched contraction).  Returns
+        (params [param_dim], loss) with loss = the returned tree's
+        weighted error — closed-form from the leaf sums, same float
+        values every engine computes (bitwise parity relies on it).
+        """
+        c = xs.shape[0]
+        wy = w * ys.astype(w.dtype)
+        b = H.bin_index(xs, self.bins)
+        route = jnp.zeros((c,), jnp.int32)
+        feats, qbins = [], []
+        for level in range(self.depth):
+            N = 1 << level
+            onnode = (route[:, None] == jnp.arange(N)[None])      # [c, N]
+            wn = jnp.where(onnode, w[:, None], 0.0).T             # [N, c]
+            wyn = jnp.where(onnode, wy[:, None], 0.0).T
+            f_n, q_n, _ = H.best_node_splits(xs, wn, wyn, self.bins)
+            feats.append(f_n)
+            qbins.append(q_n)
+            f_pt = f_n[route]
+            q_pt = q_n[route]
+            xv = jnp.take_along_axis(b, f_pt[:, None], axis=1)[:, 0]
+            route = route * 2 + (xv >= q_pt).astype(jnp.int32)
+        NL = self.leaves
+        onleaf = (route[:, None] == jnp.arange(NL)[None])
+        w_leaf = jnp.sum(jnp.where(onleaf, w[:, None], 0.0), axis=0)
+        wy_leaf = jnp.sum(jnp.where(onleaf, wy[:, None], 0.0), axis=0)
+        sign = jnp.where(wy_leaf >= 0, 1.0, -1.0)    # sign(0) := +1
+        loss = jnp.sum(0.5 * (w_leaf - jnp.abs(wy_leaf)))
+        params = jnp.concatenate(
+            [jnp.array([TYPE_TREE], jnp.float32),
+             jnp.concatenate(feats).astype(jnp.float32),
+             jnp.concatenate(qbins).astype(jnp.float32),
+             sign.astype(jnp.float32)])
+        return params, loss
+
+    # -- task-generation capability (core/tasks.py) ------------------------
+
+    def sample_points(self, rng: np.random.Generator, m: int):
+        """m grid-snapped uniform points of [0, 1)^F (bin centres, so
+        every q/Q threshold separates them exactly)."""
+        u = rng.random((m, self.num_features))
+        return ((np.floor(u * self.bins) + 0.5)
+                / self.bins).astype(np.float32)
+
+    def sample_target(self, rng: np.random.Generator, x: np.ndarray):
+        """A random tree of this class: uniform node features, interior
+        bin cuts and leaf signs (both label classes forced non-empty
+        when possible, so targets aren't trivially constant)."""
+        feat = rng.integers(0, self.num_features, size=self.nodes)
+        qbin = rng.integers(1, self.bins, size=self.nodes)
+        sign = rng.choice([-1.0, 1.0], size=self.leaves)
+        if np.all(sign == sign[0]):
+            sign[rng.integers(self.leaves)] = -sign[0]
+        return np.concatenate(
+            [[TYPE_TREE], feat, qbin, sign]).astype(np.float32)
+
+    def pack_params(self, feat, qbin, sign) -> np.ndarray:
+        """Host-side encoder for planted trees (core/scenarios.py)."""
+        feat = np.asarray(feat).reshape(self.nodes)
+        qbin = np.asarray(qbin).reshape(self.nodes)
+        sign = np.asarray(sign).reshape(self.leaves)
+        return np.concatenate(
+            [[TYPE_TREE], feat, qbin, sign]).astype(np.float32)

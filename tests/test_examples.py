@@ -1,0 +1,61 @@
+"""Smoke-run every ``examples/*.py`` in-process at tiny scale.
+
+The seed-era examples (quickstart, distributed_boosting,
+resilient_training, serve_batch) were never executed by CI and could
+rot silently; this runs each one through ``runpy`` with shrunken
+arguments (or env knobs, for the arg-less quickstart) so an API drift
+in any example fails tier-1.  Every example must also appear in
+``CASES`` — adding an example without a smoke entry fails the
+completeness check.
+"""
+
+import os
+import runpy
+import sys
+
+import pytest
+
+EXAMPLES = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "examples")
+
+# name → (argv, env overrides)
+CASES = {
+    "quickstart": ([], {"QUICKSTART_M": "512", "QUICKSTART_NOISE": "3"}),
+    "distributed_boosting": (["--smoke"], {}),
+    "resilient_training": (["--smoke"], {}),
+    "serve_batch": (["--archs", "qwen3-32b", "--batch", "1",
+                     "--gen", "2"], {}),
+    "batched_classify": (["--batch", "2", "--m", "64", "--k", "2",
+                          "--noise", "1"], {}),
+    "sharded_scenarios": (["--batch", "1", "--m", "64", "--k", "2",
+                           "--noise", "1", "--coreset", "16"], {}),
+    "serving": (["--requests", "6", "--rate", "500"], {}),
+    "fault_tolerance": (["--batch", "1", "--m", "128", "--k", "4",
+                         "--noise", "1"], {}),
+    "tree_boosting": (["--batch", "1", "--m", "128", "--noise", "2"],
+                      {}),
+}
+
+
+def _example_names():
+    return sorted(
+        f[:-3] for f in os.listdir(EXAMPLES)
+        if f.endswith(".py") and not f.startswith("_"))
+
+
+def test_every_example_has_a_smoke_case():
+    assert set(_example_names()) == set(CASES), (
+        "examples/ and CASES drifted — give every example a tiny-scale "
+        "smoke entry")
+
+
+@pytest.mark.parametrize("name", sorted(CASES))
+def test_example_runs(name, monkeypatch, capsys):
+    argv, env = CASES[name]
+    path = os.path.join(EXAMPLES, f"{name}.py")
+    monkeypatch.setattr(sys, "argv", [path] + argv)
+    for k, v in env.items():
+        monkeypatch.setenv(k, v)
+    runpy.run_path(path, run_name="__main__")
+    # every example narrates what it did; silence means it didn't run
+    assert capsys.readouterr().out.strip()

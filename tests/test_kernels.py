@@ -7,6 +7,8 @@ import pytest
 
 from repro.kernels.flash_attention import ops as flash_ops
 from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.histogram import ops as hist_ops
+from repro.kernels.histogram.ref import best_splits_ref, node_histograms_ref
 from repro.kernels.mw_update import ops as mw_ops
 from repro.kernels.mw_update.ref import mw_update_ref
 from repro.kernels.stump import ops as stump_ops
@@ -152,6 +154,86 @@ def test_stump_batched_all_negative_and_duplicates():
                                rtol=3e-5, atol=3e-6)
 
 
+# Histogram (tree split-finding) kernel: the parity bar is BITWISE.
+# Inputs use dyadic-rational weights (multiples of 1/256), whose
+# partial sums are all exactly representable in f32, so the sum is
+# independent of accumulation order and kernel-vs-ref equality is
+# assertable bit for bit — including on padded/ragged shapes where the
+# kernel's block partition differs most from the ref einsum.
+def _dyadic_hist_inputs(rng, c, F, N, bins):
+    x = ((rng.integers(0, bins, (c, F)) + 0.5) / bins).astype(np.float32)
+    w = (rng.integers(0, 256, (N, c)) / 256.0).astype(np.float32)
+    wy = w * rng.choice([-1.0, 1.0], (N, c)).astype(np.float32)
+    return jnp.asarray(x), jnp.asarray(w), jnp.asarray(wy)
+
+
+@pytest.mark.parametrize("c,F,N,bins", [
+    (128, 8, 1, 64), (130, 9, 3, 32), (1, 1, 1, 4),
+    (257, 5, 4, 32), (127, 7, 2, 128),
+])
+def test_histogram_kernel_bitwise_parity(c, F, N, bins):
+    rng = np.random.default_rng(c * 13 + F + N + bins)
+    x, w, wy = _dyadic_hist_inputs(rng, c, F, N, bins)
+    ref = node_histograms_ref(x, w, wy, bins)
+    got = hist_ops.node_histograms(x, w, wy, bins, interpret=True)
+    for g, r in zip(got, ref):
+        assert g.shape == (N, F, bins)
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(r))
+
+
+@pytest.mark.parametrize("B,c,F,N,bins", [
+    (1, 127, 7, 2, 32), (3, 129, 5, 4, 32), (2, 128, 8, 1, 64),
+    (4, 33, 3, 2, 16),
+])
+def test_histogram_kernel_batched_bitwise_parity(B, c, F, N, bins):
+    """The task-batched grid (outermost axis folds task × node) against
+    the batched oracle AND each lane's own unbatched launch."""
+    rng = np.random.default_rng(B * 97 + c + F + N)
+    xs, ws, wys = zip(*[_dyadic_hist_inputs(rng, c, F, N, bins)
+                        for _ in range(B)])
+    x, w, wy = jnp.stack(xs), jnp.stack(ws), jnp.stack(wys)
+    ref = node_histograms_ref(x, w, wy, bins)
+    got = hist_ops.node_histograms(x, w, wy, bins, interpret=True)
+    for g, r in zip(got, ref):
+        assert g.shape == (B, N, F, bins)
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(r))
+    for b in range(B):
+        one = hist_ops.node_histograms(x[b], w[b], wy[b], bins,
+                                       interpret=True)
+        for g, o in zip(got, one):
+            np.testing.assert_array_equal(np.asarray(g[b]),
+                                          np.asarray(o))
+
+
+def test_histogram_zero_weight_rows_and_out_of_range():
+    """Zero-weight rows land nowhere; x outside [0, 1) clips to the
+    edge bins (the same clip predict applies, so grower and predictor
+    agree even on out-of-range points)."""
+    bins = 16
+    x = jnp.asarray([[-0.5], [0.0], [0.999], [1.5]], jnp.float32)
+    w = jnp.asarray([[1.0, 0.0, 0.5, 0.25]], jnp.float32)
+    wy = w
+    hw, _ = hist_ops.node_histograms(x, w, wy, bins, interpret=True)
+    assert float(hw[0, 0, 0]) == 1.0               # clipped low + w=0 row
+    assert float(hw[0, 0, bins - 1]) == 0.75       # 0.999 and clipped 1.5
+
+
+def test_best_splits_reduction():
+    """best_splits_ref finds the provably optimal (feature, bin) on a
+    hand-built histogram, ties to the first flat index."""
+    hw = jnp.zeros((1, 2, 4), jnp.float32)
+    hwy = jnp.zeros((1, 2, 4), jnp.float32)
+    # feature 1: bins [+2, +2, -3, -3] → split at q=2 is perfect
+    hw = hw.at[0, 1].set(jnp.asarray([2.0, 2.0, 3.0, 3.0]))
+    hwy = hwy.at[0, 1].set(jnp.asarray([2.0, 2.0, -3.0, -3.0]))
+    # feature 0: all weight in one bin, pure → any split scores 0 err
+    hw = hw.at[0, 0, 1].set(10.0)
+    hwy = hwy.at[0, 0, 1].set(10.0)
+    f, q, err = best_splits_ref(hw, hwy)
+    assert float(err[0]) == 0.0
+    assert int(f[0]) == 0 and int(q[0]) == 0       # first flat tie
+
+
 @pytest.mark.parametrize("B,S,H,KV,hd", [
     (1, 64, 4, 2, 32), (2, 128, 8, 8, 64), (1, 200, 4, 1, 16),
     (1, 256, 2, 2, 128),
@@ -195,6 +277,7 @@ def test_flash_matches_model_attention_path():
 def test_vmem_budget_static():
     """BlockSpec working sets fit v5e VMEM (static check)."""
     from repro.kernels.flash_attention import kernel as FK
+    from repro.kernels.histogram import kernel as HK
     from repro.kernels.mw_update import kernel as MK
     from repro.kernels.stump import kernel as SK
     vmem = 16 * 2 ** 20
@@ -204,3 +287,7 @@ def test_vmem_budget_static():
     assert MK.BLOCK * 4 * 4 < vmem // 4
     bc, bf, bqq = SK.BC, SK.BF, SK.BQ
     assert (bc * bf + bf * bqq + bc * bf * bqq) * 4 < vmem // 4
+    hc, hf, hq = HK.BC, HK.BF, HK.BQ
+    # x tile + 2 weight chunks + compare tile + 2 accumulated outputs
+    assert (hc * hf + 2 * hc + hc * hf * hq + 2 * hf * hq) * 4 \
+        < vmem // 4

@@ -1,0 +1,154 @@
+"""Direct unit tests for core/ledger.py bit-accounting primitives.
+
+The property suite (test_property.py) covers these only through
+generated protocol runs — and only when ``hypothesis`` is installed.
+These pin the edge cases (n = 1, m = 1, T = 0) and the explicit
+``hypothesis_bits`` scaling of the Theorem 4.1 bound directly.
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.core import ledger, weak
+from repro.core.types import BoostConfig
+from repro.weak_tree import HistogramTrees
+
+N = 1 << 10
+
+
+def _cfg(k=4, coreset=64):
+    return BoostConfig(k=k, coreset_size=coreset, domain_size=N)
+
+
+# ---------------------------------------------------------------------------
+# example_bits / weight_sum_bits edge cases
+# ---------------------------------------------------------------------------
+
+def test_point_bits_degenerate_domain():
+    """n = 1 (and even n = 0): a point id still costs ≥ 1 bit — the
+    message must exist on the wire."""
+    assert ledger.point_bits(1) == 1
+    assert ledger.point_bits(0) == 1
+    assert ledger.point_bits(2) == 1
+    assert ledger.point_bits(3) == 2
+    assert ledger.example_bits(1) == 2             # id + label
+
+
+def test_point_bits_powers_of_two_exact():
+    for b in (1, 2, 8, 16, 31):
+        assert ledger.point_bits(1 << b) == b
+        assert ledger.point_bits((1 << b) + 1) == b + 1
+
+
+def test_weight_sum_bits_edge_cases():
+    """m = 1 and T = 0: the fixed-point encoding never degenerates to
+    zero bits, and both arguments are monotone knobs."""
+    assert ledger.weight_sum_bits(1, 0) == 2       # clamps m→2, T→log2 2
+    assert ledger.weight_sum_bits(2, 0) == 2
+    for m, T in ((1, 0), (1, 5), (256, 0), (256, 48), (1 << 20, 120)):
+        assert ledger.weight_sum_bits(m, T) >= 2
+        assert ledger.weight_sum_bits(m * 2, T) \
+            >= ledger.weight_sum_bits(m, T)
+        assert ledger.weight_sum_bits(m, T + 64) \
+            >= ledger.weight_sum_bits(m, T)
+
+
+def test_boost_attempt_ledger_zero_rounds():
+    """rounds = 0, not stuck: no wire rounds, no hypotheses — only the
+    halt control bits; stuck still charges the extra 2(a,b) round."""
+    cfg = _cfg()
+    cls = weak.Thresholds(n=N)
+    led = ledger.boost_attempt_ledger(cfg, cls, m=256, rounds=0,
+                                      stuck=False)
+    assert led.bits_coresets == 0
+    assert led.bits_weight_sums == 0
+    assert led.bits_hypotheses == 0
+    assert led.bits_control == cfg.k
+    stuck = ledger.boost_attempt_ledger(cfg, cls, m=256, rounds=0,
+                                        stuck=True)
+    assert stuck.bits_coresets \
+        == cfg.k * cfg.coreset_size * ledger.example_bits(N)
+    assert stuck.bits_hypotheses == 0
+    assert stuck.bits_control == 2 * cfg.k
+
+
+def test_masked_ledger_all_alive_reduces_to_unmasked():
+    cfg = _cfg()
+    cls = weak.Thresholds(n=N)
+    for rounds, stuck in ((0, False), (3, False), (3, True)):
+        wire = rounds + (1 if stuck else 0)
+        a = ledger.boost_attempt_ledger(cfg, cls, 256, rounds, stuck)
+        b = ledger.boost_attempt_ledger_masked(
+            cfg, cls, 256, rounds, stuck,
+            player_rounds=wire * cfg.k,
+            player_h_rounds=rounds * cfg.k, players_last=cfg.k)
+        assert a == b
+
+
+# ---------------------------------------------------------------------------
+# theorem_41_bound: explicit hypothesis_bits scaling
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class _StubClass:
+    """A class whose ONLY varying knob is hypothesis_bits — isolates
+    the bound's monotonicity in the hypothesis encoding."""
+
+    n: int = N
+    vc_dim: int = 1
+    hyp_bits: int = 8
+
+    def hypothesis_bits(self) -> int:
+        return self.hyp_bits
+
+
+def test_theorem_41_bound_monotone_in_hypothesis_bits():
+    cfg = _cfg()
+    prev = 0.0
+    for hb in (1, 8, 64, 512, 4096):
+        cur = ledger.theorem_41_bound(cfg, _StubClass(hyp_bits=hb),
+                                      m=4096, opt=3)
+        assert cur > prev
+        prev = cur
+    # strictly increasing at fixed everything-else, and linear-ish in
+    # the added term: doubling hyp_bits can at most double the bound
+    lo = ledger.theorem_41_bound(cfg, _StubClass(hyp_bits=64), 4096, 3)
+    hi = ledger.theorem_41_bound(cfg, _StubClass(hyp_bits=128), 4096, 3)
+    assert lo < hi <= 2 * lo
+
+
+def test_theorem_41_bound_covers_tree_hypotheses():
+    """The bound grows with the tree encoding: a depth-3 class bounds
+    strictly above depth-2 at equal (m, opt), both above thresholds."""
+    cfg = _cfg()
+    thr = weak.Thresholds(n=N)
+    t2 = HistogramTrees(num_features=8, depth=2, bins=32)
+    t3 = HistogramTrees(num_features=8, depth=3, bins=32)
+    assert t3.hypothesis_bits() > t2.hypothesis_bits()
+    b2 = ledger.theorem_41_bound(cfg, t2, 4096, 3)
+    b3 = ledger.theorem_41_bound(cfg, t3, 4096, 3)
+    assert b2 < b3
+    # the attempt ledger itself charges the per-class hypothesis bits
+    led2 = ledger.boost_attempt_ledger(cfg, t2, 4096, 5, stuck=False)
+    led3 = ledger.boost_attempt_ledger(cfg, t3, 4096, 5, stuck=False)
+    assert led3.bits_hypotheses - led2.bits_hypotheses \
+        == 5 * cfg.k * (t3.hypothesis_bits() - t2.hypothesis_bits())
+    assert led2.total_bits <= ledger.theorem_41_bound(
+        cfg, t2, 4096, 0, constant=1.5)
+
+
+def test_tree_hypothesis_bits_formula():
+    """nodes·(⌈log2 F⌉ + bin_bits) + leaves, across shapes."""
+    for (f, d, q), want in (
+            ((4, 2, 32), 3 * (2 + 5) + 4),
+            ((8, 3, 64), 7 * (3 + 6) + 8),
+            ((2, 1, 16), 1 * (1 + 4) + 2),
+    ):
+        cls = HistogramTrees(num_features=f, depth=d, bins=q)
+        assert cls.hypothesis_bits() == want
+        assert cls.param_dim == 1 + 2 * cls.nodes + cls.leaves
+    with pytest.raises(ValueError):
+        HistogramTrees(num_features=4, depth=2, bins=33)
+    with pytest.raises(ValueError):
+        HistogramTrees(num_features=4, depth=0)

@@ -1,0 +1,312 @@
+"""Histogram-tree weak learner: ERM semantics, the XOR separation
+acceptance bar, three-way engine bit-parity, ledger accounting, and
+scheduler integration.
+
+The acceptance criterion this file pins (ISSUE 5): on the planted XOR
+scenario the depth-2 tree class reaches ``E_S(f) ≤ OPT + 0.05·m``
+while AxisStumps is pinned ≥ 0.25·m error — both sides asserted.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import batched, classify, ledger, scenarios, sharded_batched, \
+    tasks, weak
+from repro.core.types import BoostConfig
+from repro.weak_tree import HistogramTrees
+
+F, BINS, M, K = 4, 32, 256, 4
+
+
+def _tree(depth=2):
+    return HistogramTrees(num_features=F, depth=depth, bins=BINS)
+
+
+def _cfg(cls, opt_budget=16, coreset=64):
+    return BoostConfig(k=K, coreset_size=coreset,
+                       domain_size=1 << min(cls.value_bits, 30),
+                       opt_budget=opt_budget,
+                       deterministic_coreset=False)
+
+
+def _xor_task(seed=0, noise=4, cls=None):
+    cls = cls or _tree()
+    spec = scenarios.ScenarioSpec(name="xor", noise=noise)
+    return scenarios.make_feature_task(cls, m=M, k=K, spec=spec,
+                                       seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# ERM / predict semantics
+# ---------------------------------------------------------------------------
+
+def test_erm_loss_equals_predicted_error():
+    """The returned loss IS the returned tree's weighted error (the
+    stuck check depends on it) — exact with dyadic weights."""
+    cls = _tree()
+    rng = np.random.default_rng(3)
+    m = 256
+    xs = cls.sample_points(rng, m)
+    tgt = cls.sample_target(rng, xs)
+    ys = np.asarray(cls.predict(jnp.asarray(tgt),
+                                jnp.asarray(xs))).astype(np.int8)
+    flip = rng.choice(m, 6, replace=False)
+    ys[flip] = -ys[flip]
+    w = np.full(m, 1.0 / 256, np.float32)          # dyadic: sums exact
+    p, loss = jax.jit(cls.erm)(jnp.asarray(xs), jnp.asarray(ys),
+                               jnp.asarray(w))
+    pred = cls.predict(p, jnp.asarray(xs))
+    err = float(jnp.sum(jnp.where(pred != jnp.asarray(ys),
+                                  jnp.asarray(w), 0.0)))
+    assert float(loss) == err
+    assert float(p[0]) == 5.0                      # type code
+    assert p.shape == (cls.param_dim,)
+
+
+def test_erm_recovers_planted_tree_and_batch_matches():
+    cls = _tree()
+    task = _xor_task(seed=1, noise=0)
+    x = jnp.asarray(task.flat_x)
+    y = jnp.asarray(task.flat_y)
+    w = jnp.ones((M,), jnp.float32) / M
+    p, loss = cls.erm(x, y, w)
+    assert float(loss) == 0.0                      # exact XOR fit
+    # erm_batch is vmap(erm): identical rows bit-for-bit
+    pb, lb = weak.erm_batch(cls, jnp.stack([x, x]), jnp.stack([y, y]),
+                            jnp.stack([w, w]))
+    np.testing.assert_array_equal(np.asarray(pb[0]), np.asarray(p))
+    np.testing.assert_array_equal(np.asarray(pb[1]), np.asarray(p))
+
+
+def test_predict_param_batch_and_ensemble():
+    cls = _tree()
+    rng = np.random.default_rng(0)
+    xs = jnp.asarray(cls.sample_points(rng, 64))
+    ps = jnp.stack([jnp.asarray(cls.sample_target(rng, np.asarray(xs)))
+                    for _ in range(3)])
+    out = cls.predict(ps, xs)                      # [3, 64]
+    assert out.shape == (3, 64)
+    for t in range(3):
+        np.testing.assert_array_equal(np.asarray(out[t]),
+                                      np.asarray(cls.predict(ps[t], xs)))
+    ens = weak.ensemble_predict(cls, ps, jnp.int32(3), xs)
+    votes = np.sum(np.asarray(out, np.int32), axis=0)
+    np.testing.assert_array_equal(np.asarray(ens),
+                                  np.where(votes >= 0, 1, -1))
+
+
+def test_zero_weight_rows_are_inert():
+    """Padding contract of erm_batch: w = 0 rows change nothing."""
+    cls = _tree()
+    rng = np.random.default_rng(7)
+    xs = cls.sample_points(rng, 128)
+    tgt = cls.sample_target(rng, xs)
+    ys = np.asarray(cls.predict(jnp.asarray(tgt), jnp.asarray(xs)))
+    w = rng.integers(1, 64, 128).astype(np.float32) / 64
+    w2 = np.concatenate([w, np.zeros(32, np.float32)])
+    xs2 = np.concatenate([xs, cls.sample_points(rng, 32)])
+    ys2 = np.concatenate([ys, -np.ones(32, np.int8)])
+    p1, l1 = cls.erm(jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(w))
+    p2, l2 = cls.erm(jnp.asarray(xs2), jnp.asarray(ys2),
+                     jnp.asarray(w2))
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+    assert float(l1) == float(l2)
+
+
+# ---------------------------------------------------------------------------
+# The acceptance bar: XOR separation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_xor_trees_reach_opt_stumps_pinned(seed):
+    """Depth-2 trees: E_S(f) ≤ OPT + 0.05·m on planted XOR; AxisStumps
+    ≥ 0.25·m on the same sample.  Both sides asserted."""
+    cls = _tree()
+    task = _xor_task(seed=seed, noise=4)
+    # OPT ≤ planted (in-class witness misclassifies exactly the flips)
+    planted = scenarios.planted_errors(task)
+    assert planted <= 4
+    f, res = classify.learn(jnp.asarray(task.x), jnp.asarray(task.y),
+                            jax.random.key(seed), _cfg(cls), cls)
+    errs = int(weak.empirical_errors(f(jnp.asarray(task.flat_x)),
+                                     jnp.asarray(task.flat_y)))
+    assert errs <= planted + 0.05 * M
+    stump_floor = scenarios.class_floor(
+        task, weak.AxisStumps(num_features=F))
+    assert stump_floor >= 0.25 * M
+
+
+def test_bands_trees_solve_where_stumps_plateau():
+    cls = _tree(depth=3)
+    spec = scenarios.ScenarioSpec(name="bands", noise=4, n_bands=4)
+    task = scenarios.make_feature_task(cls, m=M, k=K, spec=spec, seed=2)
+    planted = scenarios.planted_errors(task)
+    f, res = classify.learn(jnp.asarray(task.x), jnp.asarray(task.y),
+                            jax.random.key(2), _cfg(cls), cls)
+    errs = int(weak.empirical_errors(f(jnp.asarray(task.flat_x)),
+                                     jnp.asarray(task.flat_y)))
+    assert errs <= planted + 0.05 * M
+    # alternating bands: the best stump still eats a full band
+    assert scenarios.class_floor(
+        task, weak.AxisStumps(num_features=F)) >= 0.1 * M
+
+
+def test_checkerboard_floor_separation():
+    """4×4 checkerboard: even the greedy depth-4 floor beats the best
+    stump decisively (the protocol-level run is exercised on xor/bands;
+    checkerboard pins the representational gap)."""
+    cls = _tree(depth=4)
+    spec = scenarios.ScenarioSpec(name="checkerboard", noise=0, cells=4)
+    task = scenarios.make_feature_task(cls, m=M, k=K, spec=spec, seed=0)
+    tree_floor = scenarios.class_floor(task)
+    stump_floor = scenarios.class_floor(
+        task, weak.AxisStumps(num_features=F))
+    assert stump_floor >= 0.25 * M
+    assert tree_floor < stump_floor
+
+
+def test_feature_scenario_noise_composition():
+    """Noise adversaries compose over planted concepts: the flip mask
+    is exact and planted_errors counts exactly the flips."""
+    cls = _tree()
+    for kind in ("uniform", "boundary", "drift"):
+        spec = scenarios.ScenarioSpec(name="xor", noise=6,
+                                      noise_kind=kind)
+        task = scenarios.make_feature_task(cls, m=M, k=K, spec=spec,
+                                           seed=3)
+        assert task.flipped.sum() == 6
+        assert task.scenario == f"xor+{kind}"
+        assert scenarios.planted_errors(task) == 6
+
+
+# ---------------------------------------------------------------------------
+# Engine parity + ledger
+# ---------------------------------------------------------------------------
+
+def _parity_inputs(seed0=5, B=2, noise=3):
+    cls = _tree()
+    spec = scenarios.ScenarioSpec(name="xor", noise=noise)
+    ts = [scenarios.make_feature_task(cls, m=M, k=K, spec=spec,
+                                      seed=seed0 + b) for b in range(B)]
+    x = np.stack([t.x for t in ts])
+    y = np.stack([t.y for t in ts])
+    keys = jax.random.split(jax.random.key(seed0), B)
+    return cls, ts, x, y, keys
+
+
+def test_tree_host_batched_sharded_bit_parity():
+    """The tentpole parity bar: all three engines produce bit-identical
+    protocol outputs for the tree class, and the sharded wire counters
+    validate against the Theorem 4.1 ledger."""
+    cls, ts, x, y, keys = _parity_inputs()
+    cfg = _cfg(cls)
+    bres = batched.run_accurately_classify_batched(x, y, keys, cfg, cls)
+    sres = sharded_batched.run_accurately_classify_sharded(
+        x, y, keys, cfg, cls)
+    # batched ≡ sharded: every field, bit for bit
+    np.testing.assert_array_equal(bres.hypotheses, sres.hypotheses)
+    np.testing.assert_array_equal(bres.attempts, sres.attempts)
+    np.testing.assert_array_equal(bres.disputed, sres.disputed)
+    np.testing.assert_array_equal(bres.min_loss, sres.min_loss)
+    for b in range(x.shape[0]):
+        # host ≡ batched: winning ensemble prefix, disputes, ledger
+        href = classify.run_accurately_classify(
+            jnp.asarray(x[b]), jnp.asarray(y[b]), keys[b], cfg, cls)
+        got = bres.per_task(b)
+        assert href.attempts == got.attempts
+        assert href.rounds == got.rounds
+        np.testing.assert_array_equal(
+            np.asarray(href.hypotheses)[:href.rounds],
+            np.asarray(got.hypotheses)[:got.rounds])
+        # dispute tables: same point set (host lists per-attempt groups,
+        # the batched table is globally sorted) and same classifier
+        def _rowsort(a):
+            a = np.asarray(a)
+            return a[np.lexsort(a.T[::-1])]
+        np.testing.assert_array_equal(_rowsort(href.dispute_x),
+                                      _rowsort(got.dispute_x))
+        fh = classify.make_classifier(cls, href)
+        fb = classify.make_classifier(cls, got)
+        xs = jnp.asarray(ts[b].flat_x)
+        np.testing.assert_array_equal(np.asarray(fh(xs)),
+                                      np.asarray(fb(xs)))
+        assert href.ledger == got.ledger
+        sres.validate_ledger(b)                    # ledger ≡ payload
+
+
+def test_tree_ledger_charges_tree_hypothesis_bits():
+    """bits_hypotheses = Σ_attempts rounds·k·hypothesis_bits with the
+    tree encoding nodes·(⌈log2 F⌉+bin_bits)+leaves."""
+    cls, ts, x, y, keys = _parity_inputs(B=1)
+    assert cls.hypothesis_bits() == 3 * (2 + 5) + 4   # d=2, F=4, Q=32
+    cfg = _cfg(cls)
+    res = batched.run_accurately_classify_batched(x, y, keys, cfg, cls)
+    led = res.ledger(0)
+    expect = sum(int(res.hist_rounds[0, a]) * K * cls.hypothesis_bits()
+                 for a in range(int(res.attempts[0])))
+    assert led.bits_hypotheses == expect
+    # and the Theorem 4.1 form covers the measured total
+    bound = ledger.theorem_41_bound(cfg, cls, M, opt=4, constant=1.5)
+    assert led.total_bits <= bound
+
+
+def test_tree_round_granular_stepping_bit_identical():
+    """run_rounds in 3-round slices == monolithic, for the wide-param
+    tree state (checkpointable pytree contract)."""
+    cls, ts, x, y, keys = _parity_inputs(B=1)
+    cfg = _cfg(cls)
+    mono = batched.run_accurately_classify_batched(x, y, keys, cfg, cls)
+    state = batched.init_state(x, y, keys, cfg, cls=cls)
+    a_max = cfg.opt_budget + 1
+    while bool(np.any(~np.asarray(state.done)
+                      & (np.asarray(state.attempt) < a_max))):
+        state = batched.run_rounds(state, x, y, cfg, cls, n=3)
+    sliced = batched.finalize(state, x, y,
+                              np.ones(x.shape[:3], bool), cfg, cls)
+    np.testing.assert_array_equal(mono.hypotheses, sliced.hypotheses)
+    np.testing.assert_array_equal(mono.disputed, sliced.disputed)
+    np.testing.assert_array_equal(mono.attempts, sliced.attempts)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler integration (CompatKey coverage for tree requests)
+# ---------------------------------------------------------------------------
+
+def test_scheduler_buckets_trees_alongside_stumps():
+    from repro.launch import scheduler as S
+    reqs = S.make_request_stream(
+        8, np.linspace(0, 0.05, 8),
+        shapes=[{"clsname": "tree", "scenario": "xor", "noise": 2,
+                 "m": 128, "num_features": F, "tree_depth": 2,
+                 "tree_bins": BINS, "coreset_size": 48},
+                {"clsname": "stumps", "noise": 1, "m": 128,
+                 "num_features": F, "coreset_size": 48}],
+        k=K, opt_budget=16)
+    sched = S.BoostScheduler(policy="pack")
+    sched.warm(reqs)
+    warm = sched.cache.stats.compiles
+    done = sched.run_stream(reqs)
+    assert len(done) == 8 and all(c.ok for c in done)
+    # trees and stumps land in distinct compat groups (CompatKey
+    # hashes the class), and steady state never recompiles
+    assert sched.cache.stats.compiles == warm
+    kinds = {type(c.bucket.compat.cls).__name__ for c in done}
+    assert kinds == {"HistogramTrees", "AxisStumps"}
+    # depth/bins are part of the key: a different tree shape is a
+    # different bucket (fresh compile), same shape hits the cache
+    r = done[0].request
+    deeper = dataclasses.replace(r, rid=99, tree_depth=3)
+    assert S.CompatKey.of(deeper) != S.CompatKey.of(r)
+    assert S.CompatKey.of(dataclasses.replace(r, rid=98)) \
+        == S.CompatKey.of(r)
+    # tree completions reproduce their one-shot baseline bit for bit
+    c = next(c for c in done if c.request.clsname == "tree")
+    one = sched.one_shot(c.request)
+    np.testing.assert_array_equal(c.result.hypotheses[c.lane],
+                                  one.hypotheses[0])
+    assert c.per_task().ledger.total_bits \
+        == one.per_task(0).ledger.total_bits
