@@ -1,0 +1,255 @@
+"""Checkpointing benchmark: save/restore latency, incremental bytes,
+preempt/resume throughput.
+
+BENCH_1.json recorded the preempt/resume path at 5.9 tasks/sec while
+the dropout/flaky fault paths ran at ~200 — a ~30x stall concentrated
+in synchronous full-state serialization and a resume that re-ran
+engine init just to build a restore template.  This suite pins the
+rebuilt path (ckpt/msgpack_ckpt + launch/scheduler):
+
+* **save latency** — synchronous full save vs the async writer's
+  caller-visible cost (device→host copy + flatten + enqueue), per
+  state size;
+* **restore latency** — template-free restore (checkpoint manifest
+  only) vs the legacy template path (engine init + ``like=`` load),
+  gated bit-identical (``ckpt_template_free_parity``);
+* **incremental bytes** — a round-sliced checkpoint chain vs full
+  resaves of the same states, gated strictly smaller
+  (``ckpt_incremental_bytes``) and chain-restore ≡ full-restore;
+* **preempt/resume throughput** — the fault_injection preempt config
+  replayed per engine on a warmed scheduler, with EVERY completion
+  gated bit-identical to its uninterrupted ``one_shot`` run
+  (``ckpt_resume_parity``) — the correctness bar the speedup must not
+  move.
+
+``REPRO_BENCH_SMOKE=1`` (the CI bench-smoke job) shrinks the scales;
+the gates are identical at both scales.
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro.ckpt import msgpack_ckpt
+from repro.core import batched, tasks, weak
+from repro.core.types import BoostConfig
+from repro.launch import scheduler as S
+
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+N_REQUESTS = 12 if SMOKE else 48
+MLOCS = (64,) if SMOKE else (64, 256)
+CHAIN_SLICES = 4 if SMOKE else 8
+
+
+def _engine_state(mloc: int, B: int = 4, k: int = 4, rounds: int = 3):
+    """A mid-protocol batched engine state of the given shard size."""
+    cls = weak.Thresholds(n=1 << 12)
+    cfg = BoostConfig(k=k, coreset_size=64, domain_size=1 << 12,
+                      opt_budget=8)
+    x, y, _ = tasks.make_batch(cls, B, k * mloc, k, 2, seed0=3)
+    keys = jax.random.split(jax.random.key(1), B)
+    state = batched.init_state(x, y, keys, cfg)
+    state = batched.run_rounds(state, x, y, cfg, cls, n=rounds)
+    return jax.block_until_ready(state), (x, y, keys, cfg, cls)
+
+
+def _tree_bytes(tree) -> int:
+    return sum(np.asarray(leaf).nbytes
+               for leaf in jax.tree_util.tree_leaves(tree))
+
+
+def bench_save_latency() -> list:
+    rows = []
+    for mloc in MLOCS:
+        state, _ = _engine_state(mloc)
+        nbytes = _tree_bytes(state)
+        with tempfile.TemporaryDirectory() as d:
+            sync_path = os.path.join(d, "sync.msgpack")
+            t0 = time.perf_counter()
+            iters = 5
+            for _ in range(iters):
+                msgpack_ckpt.save_pytree(sync_path, jax.device_get(state))
+            sync_s = (time.perf_counter() - t0) / iters
+            writer = msgpack_ckpt.AsyncCheckpointer(max_pending=2)
+            writer.save(os.path.join(d, "w.msgpack"), state)  # warm thread
+            writer.wait()
+            t0 = time.perf_counter()
+            for i in range(iters):
+                writer.save(os.path.join(d, f"a{i}.msgpack"), state)
+            async_caller_s = (time.perf_counter() - t0) / iters
+            writer.wait()
+            writer.close()
+        rows.append({
+            "bench": f"ckpt_save_mloc{mloc}",
+            "us_per_call": round(1e6 * async_caller_s, 1),
+            "derived": (f"sync_us={round(1e6 * sync_s, 1)};"
+                        f"async_caller_us={round(1e6 * async_caller_s, 1)};"
+                        f"state_kib={round(nbytes / 1024, 1)}"),
+            "sync_us": round(1e6 * sync_s, 1),
+            "state_bytes": nbytes,
+        })
+    return rows
+
+
+def bench_restore_latency() -> list:
+    rows = []
+    for mloc in MLOCS:
+        state, (x, y, keys, cfg, cls) = _engine_state(mloc)
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "state.msgpack")
+            msgpack_ckpt.save_pytree(path, jax.device_get(state),
+                                     treedef=batched.STATE_TREEDEF)
+            iters = 5
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                free, _meta = msgpack_ckpt.restore_pytree(path)
+            free_s = (time.perf_counter() - t0) / iters
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                template = batched.init_state(x, y, keys, cfg)
+                legacy, _meta = msgpack_ckpt.load_pytree(path,
+                                                         like=template)
+            legacy_s = (time.perf_counter() - t0) / iters
+        assert isinstance(free, batched.StepState)
+        same = all(
+            np.array_equal(np.asarray(a), np.asarray(b))
+            for a, b in zip(jax.tree_util.tree_leaves(free),
+                            jax.tree_util.tree_leaves(legacy)))
+        common.gate("ckpt_template_free_parity", same,
+                    f"mloc={mloc}: template-free restore diverged from "
+                    f"the template path")
+        rows.append({
+            "bench": f"ckpt_restore_mloc{mloc}",
+            "us_per_call": round(1e6 * free_s, 1),
+            "derived": (f"template_free_us={round(1e6 * free_s, 1)};"
+                        f"template_us={round(1e6 * legacy_s, 1)};"
+                        f"speedup={round(legacy_s / max(free_s, 1e-9), 1)}x"),
+            "template_us": round(1e6 * legacy_s, 1),
+        })
+    return rows
+
+
+def bench_incremental() -> dict:
+    """A round-sliced checkpoint chain: every slice saves only the
+    leaves that changed (MW weights, counters, coreset buffers churn;
+    quarantine masks and ensemble buffers mostly don't) — total bytes
+    must be strictly below full resaves of the same states."""
+    state, (x, y, keys, cfg, cls) = _engine_state(MLOCS[-1], rounds=1)
+    with tempfile.TemporaryDirectory() as d:
+        full_path = os.path.join(d, "chain_000.msgpack")
+        hashes = msgpack_ckpt.save_pytree(
+            full_path, jax.device_get(state),
+            treedef=batched.STATE_TREEDEF)
+        inc_bytes = os.path.getsize(full_path)
+        full_bytes = inc_bytes
+        prev = full_path
+        tip = full_path
+        for i in range(1, CHAIN_SLICES):
+            state = batched.run_rounds(state, x, y, cfg, cls, n=2)
+            host = jax.device_get(state)
+            tip = os.path.join(d, f"chain_{i:03d}.msgpack")
+            hashes = msgpack_ckpt.save_pytree(
+                tip, host, treedef=batched.STATE_TREEDEF,
+                base=prev, base_hashes=hashes)
+            inc_bytes += os.path.getsize(tip)
+            ref = os.path.join(d, "full.msgpack")
+            msgpack_ckpt.save_pytree(ref, host,
+                                     treedef=batched.STATE_TREEDEF)
+            full_bytes += os.path.getsize(ref)
+            prev = tip
+        restored, _ = msgpack_ckpt.restore_pytree(tip)
+        same = all(
+            np.array_equal(np.asarray(a), np.asarray(b))
+            for a, b in zip(jax.tree_util.tree_leaves(restored),
+                            jax.tree_util.tree_leaves(state)))
+    common.gate(
+        "ckpt_incremental_bytes", same and inc_bytes < full_bytes,
+        f"chain {inc_bytes}B vs full {full_bytes}B, restore_ok={same}")
+    return {
+        "bench": "ckpt_incremental",
+        "us_per_call": 0.0,
+        "derived": (f"chain_kib={round(inc_bytes / 1024, 1)};"
+                    f"full_kib={round(full_bytes / 1024, 1)};"
+                    f"saved_pct="
+                    f"{round(100 * (1 - inc_bytes / full_bytes), 1)};"
+                    f"slices={CHAIN_SLICES}"),
+        "chain_bytes": inc_bytes,
+        "full_bytes": full_bytes,
+    }
+
+
+def bench_preempt_resume(engine: str) -> dict:
+    """The fault_injection preempt config on a warmed scheduler.
+
+    ``preempt={0: 3, 1: 4}``: dispatch 0 is cut off after 3 rounds and
+    its RESUME (dispatch 1) after 4 more — exercising a full snapshot,
+    an incremental chained snapshot, and two template-free restores.
+    Every completion is compared bit-identically to its ``one_shot``
+    run (the resume-parity gate).
+    """
+    shapes = [{"m": 64, "k": 2, "noise": 1},
+              {"m": 128, "k": 2, "noise": 2}]
+    lattice = S.BucketLattice(b_sizes=(2, 4), mloc_sizes=(32, 64))
+    n = N_REQUESTS if engine == "batched" else max(N_REQUESTS // 2, 6)
+    arrivals = S.poisson_trace(n, rate_per_s=500.0, seed=5)
+    reqs = S.make_request_stream(n, arrivals, shapes, seed0=11,
+                                 engine=engine, coreset_size=48,
+                                 opt_budget=6)
+    with tempfile.TemporaryDirectory() as ck:
+        sched = S.BoostScheduler(lattice=lattice, ckpt_dir=ck,
+                                 preempt={0: 3, 1: 4})
+        sched.warm(reqs, b_sizes=lattice.b_sizes + (1,))
+        t0 = time.perf_counter()
+        done = sched.run_stream(reqs)
+        wall = time.perf_counter() - t0
+        assert len(done) == n
+        assert sched.stats.preemptions == 2
+        assert sched.stats.resumes == 2
+        ok = True
+        for c in done:
+            one = sched.one_shot(c.request)
+            ok = ok and np.array_equal(c.result.hypotheses[c.lane],
+                                       one.hypotheses[0])
+            ok = ok and np.array_equal(c.result.disputed[c.lane],
+                                       one.disputed[0])
+            if c.ok:
+                ok = ok and (c.per_task().ledger.total_bits
+                             == one.per_task(0).ledger.total_bits)
+        common.gate("ckpt_resume_parity", ok,
+                    f"{engine}: a resumed completion diverged from "
+                    f"one_shot")
+        resumed = [c for c in done if c.resumed]
+    return {
+        "bench": f"ckpt_preempt_resume_{engine}",
+        "us_per_call": round(1e6 * wall / n, 1),
+        "derived": (f"tps={round(n / max(wall, 1e-9), 1)};"
+                    f"preemptions={sched.stats.preemptions};"
+                    f"resumed_requests={len(resumed)};"
+                    f"parity_checked={len(done)}"),
+        "tasks_per_s": round(n / max(wall, 1e-9), 2),
+        "preemptions": sched.stats.preemptions,
+        "resumes": sched.stats.resumes,
+    }
+
+
+def run_all():
+    rows = []
+    rows += bench_save_latency()
+    rows += bench_restore_latency()
+    rows.append(bench_incremental())
+    rows.append(bench_preempt_resume("batched"))
+    rows.append(bench_preempt_resume("sharded"))
+    return rows
+
+
+if __name__ == "__main__":
+    import json
+
+    for row in run_all():
+        print(row["bench"], json.dumps(row))

@@ -15,9 +15,11 @@ exits non-zero if any trips):
   bit-identical to its ``one_shot`` run.
 
 Reported: tasks/sec per adversary and the communication saved by the
-mask, plus the preempted stream's end-to-end rate (NOTE: the stepping
-programs compile through the implicit jit cache, so this number
-includes their one-time compiles — it gates parity, not latency).
+mask, plus the preempted stream's end-to-end rate.  ``warm()`` now
+pre-compiles the stepping programs whenever a checkpoint dir is set,
+so the preempted stream's rate no longer swallows their one-time
+compiles (benchmarks/checkpointing.py tracks the resume path's
+latency in detail; this suite gates parity).
 
 ``REPRO_BENCH_SMOKE=1`` (the CI bench-smoke job) shrinks the batch;
 the gates are identical at both scales.

@@ -50,6 +50,8 @@ EXPECTED_GATES = {
                 "serving_sharded_ledger_payload"),
     "fault_injection": ("fault_engine_parity", "fault_masked_ledger",
                         "fault_preempt_resume_parity"),
+    "checkpointing": ("ckpt_resume_parity", "ckpt_incremental_bytes",
+                      "ckpt_template_free_parity"),
     "trees": ("tree_hist_kernel_parity", "tree_xor_guarantee",
               "tree_stump_separation", "tree_matched_accuracy",
               "tree_matched_wire"),
@@ -57,13 +59,15 @@ EXPECTED_GATES = {
 
 
 def _suite():
-    from benchmarks import (baselines, batched_classify, fault_injection,
-                            finite_class, kernel_micro, paper_claims,
-                            roofline, serving, sharded_scenarios, trees)
+    from benchmarks import (baselines, batched_classify, checkpointing,
+                            fault_injection, finite_class, kernel_micro,
+                            paper_claims, roofline, serving,
+                            sharded_scenarios, trees)
     return {
         "batched_classify": batched_classify.run_all,
         "serving": serving.run_all,
         "fault_injection": fault_injection.run_all,
+        "checkpointing": checkpointing.run_all,
         "trees": trees.run_all,
         "sharded_scenarios": sharded_scenarios.run_all,
         "comm_vs_opt": paper_claims.comm_vs_opt,

@@ -1,5 +1,10 @@
 """Checkpointing (msgpack-based; orbax is not available offline)."""
 
-from repro.ckpt.msgpack_ckpt import save_pytree, load_pytree, CheckpointManager
+from repro.ckpt.msgpack_ckpt import (AsyncCheckpointer, CheckpointManager,
+                                     load_pytree, register_treedef,
+                                     restore_pytree, save_pytree,
+                                     save_pytree_async)
 
-__all__ = ["save_pytree", "load_pytree", "CheckpointManager"]
+__all__ = ["AsyncCheckpointer", "CheckpointManager", "load_pytree",
+           "register_treedef", "restore_pytree", "save_pytree",
+           "save_pytree_async"]

@@ -57,6 +57,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.ckpt import msgpack_ckpt
 from repro.core import boost_attempt, classify, ledger as L, weak
 from repro.core import weights as W
 from repro.core.types import BoostConfig, ClassifyResult, Ledger
@@ -96,6 +97,51 @@ class StepState(NamedTuple):
     core_x: jax.Array         # [k, c(, F)] last round's pooled coreset
     core_y: jax.Array         # [k, c]
     step: jax.Array           # int32 global wire-round counter
+
+
+# -- checkpoint identity of the stepping state ------------------------------
+# Leaf names in a checkpoint are the StepState field names (stable
+# across releases — renames are format breaks); fixed dtypes are
+# validated on template-free restore.  core_x/core_y follow the task
+# data's dtype (int32 shards or float32 feature rows) and restore at
+# whatever dtype they were saved with.
+
+STATE_TREEDEF = "repro.core.batched.StepState"
+
+STATE_DTYPES = {
+    "attempt": "int32", "done": "bool", "alive": "bool",
+    "disputed": "bool", "key_data": "uint32", "h_params": "float32",
+    "rounds": "int32", "min_loss": "float32", "hist_stuck": "bool",
+    "hist_rounds": "int32", "hist_alive": "int32", "hist_p": "int32",
+    "hist_players": "int32", "hist_players_h": "int32",
+    "hist_players_last": "int32", "in_attempt": "bool",
+    "akey_data": "uint32", "t": "int32", "bound": "int32",
+    "hits": "int32", "cur_h": "float32", "step": "int32",
+}
+
+
+def check_state_dtypes(leaves: dict, dtypes: dict, what: str) -> None:
+    """Fail loudly when a restored leaf's dtype drifted from the
+    engine's declared layout (shared by both engines' reconstructors)."""
+    for name, want in dtypes.items():
+        got = np.dtype(np.asarray(leaves[name]).dtype)
+        if got != np.dtype(want):
+            raise ValueError(
+                f"checkpoint leaf {name!r} of {what} has dtype {got} "
+                f"but the engine expects {want} — refusing a silent "
+                f"cast (bit-parity would break invisibly)")
+
+
+def _unflatten_state(leaves: dict) -> StepState:
+    missing = set(StepState._fields) - set(leaves)
+    if missing:
+        raise KeyError(f"checkpoint missing StepState leaves: "
+                       f"{sorted(missing)}")
+    check_state_dtypes(leaves, STATE_DTYPES, "batched.StepState")
+    return StepState(**{f: leaves[f] for f in StepState._fields})
+
+
+msgpack_ckpt.register_treedef(STATE_TREEDEF, _unflatten_state)
 
 
 def num_rounds_dynamic(cfg: BoostConfig, m_alive: jax.Array) -> jax.Array:

@@ -66,6 +66,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.ckpt import msgpack_ckpt
 from repro.core import approximation, batched, classify, ledger as L, weak
 from repro.core import weights as W
 from repro.core.boost_attempt import _center_erm, _gather_coreset, _shard_map
@@ -218,6 +219,30 @@ def _round_body(cfg: BoostConfig, cls, k: int, x, y, alive, x_orders,
 # ---------------------------------------------------------------------------
 
 _SHARDED_FIELDS = ("alive", "disputed", "hits")
+
+# -- checkpoint identity ----------------------------------------------------
+# The sharded state is the batched StepState's leaves (same names, same
+# dtypes — built by batched.init_state) plus the wire-payload counters.
+
+STATE_TREEDEF = "repro.core.sharded_batched.state"
+
+STATE_DTYPES = dict(
+    batched.STATE_DTYPES,
+    awire_core="int32", awire_ws="int32", hist_wire_core="int32",
+    hist_wire_ws="int32", wire_bytes="int32", wire_q_points="int32",
+    wire_q_counts="int32")
+
+
+def _unflatten_state(leaves: dict) -> dict:
+    missing = set(STATE_DTYPES) - set(leaves)
+    if missing:
+        raise KeyError(f"checkpoint missing sharded-state leaves: "
+                       f"{sorted(missing)}")
+    batched.check_state_dtypes(leaves, STATE_DTYPES, "sharded state")
+    return dict(leaves)
+
+
+msgpack_ckpt.register_treedef(STATE_TREEDEF, _unflatten_state)
 
 
 def init_state_sharded(x, y, keys, cfg: BoostConfig, alive=None,

@@ -39,12 +39,20 @@ with none of that:
   can be cut off after N wire rounds, its whole protocol state
   serialized to a msgpack checkpoint (``ckpt/msgpack_ckpt``), and the
   batch **requeued**: the next scheduler step restores the state from
-  the file and runs the remaining rounds.  A preempted-and-resumed
-  request completes bit-identical to its uninterrupted ``one_shot``
-  run — the same parity bar PR 3 set for batching (the step body is
-  one program; the state round-trips exactly).  ``preempt={dispatch:
-  rounds}`` injects failures into ``run_stream`` deterministically;
-  ``stats.preemptions``/``stats.resumes`` count them.
+  the file and runs the remaining rounds.  The checkpoint path is
+  built not to stall the dispatch loop: saves go through a single
+  off-thread writer (the loop pays only the device→host copy, not
+  packb+fsync+rename), a re-preempted batch re-checkpoints
+  **incrementally** (only leaves whose content hash changed since the
+  previous snapshot of that dispatch, chained to it), and the resume
+  restores **template-free** from the checkpoint's own manifest — no
+  engine init runs just to build a ``like=`` template.  A preempted-
+  and-resumed request completes bit-identical to its uninterrupted
+  ``one_shot`` run — the same parity bar PR 3 set for batching (the
+  step body is one program; the state round-trips exactly).
+  ``preempt={dispatch: rounds}`` injects failures into ``run_stream``
+  deterministically (resumes consume dispatch seqs too, so an entry
+  can hit one); ``stats.preemptions``/``stats.resumes`` count them.
 
 Every completion is bit-identical to the one-shot engine run of the
 same padded request (``BoostScheduler.one_shot`` is that baseline;
@@ -282,16 +290,20 @@ class SchedulerStats:
 class _Suspended:
     """A preempted in-flight batch, requeued for resume.
 
-    The protocol state lives in the msgpack checkpoint; the static
-    inputs (the stacked sample arrays and keys — regenerable from the
-    requests, kept here to avoid rebuilding) ride along."""
+    The protocol state lives in the msgpack checkpoint chain (the tip
+    is ``ckpt_path``; ``paths`` holds every file of the chain for
+    cleanup); the static inputs (the stacked sample arrays and keys —
+    regenerable from the requests, kept here to avoid rebuilding) ride
+    along."""
 
     bucket: BucketKey
     admitted: list               # the (req, task, data) tuples
     payload: tuple               # stacked (x, y, alive, keys)
     m_true: np.ndarray
-    ckpt_path: str
+    ckpt_path: str               # chain tip — what a resume restores
     rounds_done: int
+    chain: str = ""              # writer chain id (incremental diffing)
+    paths: tuple = ()            # every file of the chain, for cleanup
 
 
 def _percentile(xs, q):
@@ -357,7 +369,11 @@ class BoostScheduler:
         self.cache = cache or CompileCache(capacity=cache_capacity)
         # fault injection: {dispatch_seq: wire_rounds} — the seq-th
         # engine dispatch is preempted after that many rounds, its
-        # state checkpointed to ckpt_dir and the batch requeued
+        # state checkpointed to ckpt_dir and the batch requeued.  A
+        # RESUME consumes a dispatch seq too, so injecting on it
+        # preempts the same batch again — the re-checkpoint is then an
+        # incremental snapshot chained to the previous one (only leaves
+        # whose content changed are serialized).
         self.preempt = dict(preempt or {})
         self.ckpt_dir = ckpt_dir
         if self.preempt and not self.ckpt_dir:
@@ -368,6 +384,7 @@ class BoostScheduler:
         self._suspended: collections.deque = collections.deque()
         self._dispatch_seq = 0
         self._meshes: dict = {}
+        self._writer: msgpack_ckpt.AsyncCheckpointer | None = None
 
     # -- request intake ----------------------------------------------------
 
@@ -460,52 +477,90 @@ class BoostScheduler:
         return batched.finalize(state, x, y, alive, compat.cfg,
                                 compat.cls, m_true=m_true)
 
+    def _ckpt_writer(self) -> msgpack_ckpt.AsyncCheckpointer:
+        if self._writer is None:
+            self._writer = msgpack_ckpt.AsyncCheckpointer()
+        return self._writer
+
+    def _state_treedef(self, bucket: BucketKey) -> str:
+        return (sharded_batched.STATE_TREEDEF
+                if bucket.compat.engine == "sharded"
+                else batched.STATE_TREEDEF)
+
+    def _checkpoint(self, seq: int, bucket: BucketKey, state, admitted,
+                    rounds_done: int, chain: str) -> str:
+        """Hand the state to the writer thread (caller pays only the
+        device→host copy); first save of a chain is a full snapshot,
+        later ones serialize only changed leaves."""
+        os.makedirs(self.ckpt_dir, exist_ok=True)
+        path = os.path.join(self.ckpt_dir, f"preempt_{seq:04d}.msgpack")
+        self._ckpt_writer().save(
+            path, state,
+            meta={"rounds_done": rounds_done,
+                  "engine": bucket.compat.engine,
+                  "rids": [a[0].rid for a in admitted]},
+            treedef=self._state_treedef(bucket), chain=chain)
+        return path
+
     def _preempt_dispatch(self, seq: int, bucket: BucketKey, admitted,
                           payload, m_true, n_rounds: int):
         """Run ``n_rounds`` wire rounds, checkpoint the protocol state
-        to msgpack, drop it, and requeue the batch for resume."""
+        to msgpack (async, off-thread), drop it, and requeue the batch
+        for resume."""
         x, y, alive, keys = payload
         t0 = time.perf_counter()
         state = self._engine_init(bucket, x, y, alive, keys)
         state = self._engine_run(bucket, state, x, y, n=n_rounds)
-        os.makedirs(self.ckpt_dir, exist_ok=True)
-        path = os.path.join(self.ckpt_dir,
-                            f"preempt_{seq:04d}.msgpack")
-        msgpack_ckpt.save_pytree(
-            path, jax.device_get(state),
-            meta={"rounds_done": n_rounds, "engine": bucket.compat.engine,
-                  "rids": [a[0].rid for a in admitted]})
+        chain = f"d{seq:04d}"
+        path = self._checkpoint(seq, bucket, state, admitted, n_rounds,
+                                chain)
         del state                              # the preemption: state dies
         self._suspended.append(_Suspended(
             bucket=bucket, admitted=admitted, payload=payload,
-            m_true=m_true, ckpt_path=path, rounds_done=n_rounds))
+            m_true=m_true, ckpt_path=path, rounds_done=n_rounds,
+            chain=chain, paths=(path,)))
         self.stats.preemptions += 1
         return [], time.perf_counter() - t0
 
-    def _resume(self, sus: _Suspended, now: float):
-        """Restore a preempted batch from its checkpoint and finish it.
+    def _resume(self, sus: _Suspended, seq: int, now: float):
+        """Restore a preempted batch from its checkpoint and continue.
 
-        Unlike the one-shot path, the round-granular programs compile
-        through the implicit jit cache (per engine statics + slice
-        signature), so a shape's FIRST preempt/resume pays its compile
-        inside ``service_s`` — the same way a compile-cache miss is
-        charged to the dispatch that missed.  The checkpoint is deleted
-        once the batch completes.
+        The restore is **template-free**: the checkpoint manifest
+        carries the state's treedef name + per-leaf dtypes, so no
+        engine init runs (the old path burned discarded device compute
+        and a fresh PRNG stream just to build a ``like=`` template).
+        A resume consumes a dispatch seq, so an injected ``preempt``
+        entry for it cuts the SAME batch off again — the re-checkpoint
+        chains incrementally to the previous snapshot.  The whole
+        chain is deleted once the batch completes.
         """
         x, y, alive, keys = sus.payload
         t0 = time.perf_counter()
-        template = self._engine_init(sus.bucket, x, y, alive, keys)
-        state, _meta = msgpack_ckpt.load_pytree(sus.ckpt_path,
-                                                like=template)
+        self._ckpt_writer().wait()             # tip durable before read
+        state, _meta = msgpack_ckpt.restore_pytree(sus.ckpt_path)
+        self.stats.resumes += 1
+        n_pre = self.preempt.get(seq)
+        if n_pre is not None:                  # preempted AGAIN mid-resume
+            state = self._engine_run(sus.bucket, state, x, y, n=n_pre)
+            path = self._checkpoint(seq, sus.bucket, state, sus.admitted,
+                                    sus.rounds_done + n_pre, sus.chain)
+            del state
+            self._suspended.append(dataclasses.replace(
+                sus, ckpt_path=path,
+                rounds_done=sus.rounds_done + n_pre,
+                paths=sus.paths + (path,)))
+            self.stats.preemptions += 1
+            return [], time.perf_counter() - t0
         state = self._engine_run(sus.bucket, state, x, y, n=None)
         res = self._engine_finalize(sus.bucket, state, x, y, alive,
                                     sus.m_true)
         service_s = time.perf_counter() - t0
-        try:
-            os.remove(sus.ckpt_path)           # consumed — don't litter
-        except OSError:
-            pass
-        self.stats.resumes += 1
+        self._ckpt_writer().forget(sus.chain)
+        for p in sus.paths:                    # consumed — don't litter
+            try:
+                os.remove(p)
+            except OSError:
+                pass
         self.stats.note(sus.bucket, len(sus.admitted), sus.bucket.B)
         completions = []
         for lane, (req, task, _data) in enumerate(sus.admitted):
@@ -524,10 +579,14 @@ class BoostScheduler:
         Returns (completions, service_s) — empty if nothing is queued.
         Admission pops up to bucket-B requests per compat group; the
         rest stay queued for the next step (the "slots free up" cycle).
-        Preempted (suspended) batches resume before fresh admissions.
+        Preempted (suspended) batches resume before fresh admissions;
+        a resume is an engine dispatch and consumes a dispatch seq (so
+        ``preempt`` injections can hit it too).
         """
         if self._suspended:
-            return self._resume(self._suspended.popleft(), now)
+            seq = self._dispatch_seq
+            self._dispatch_seq += 1
+            return self._resume(self._suspended.popleft(), seq, now)
         qkey = self._pick_queue()
         if qkey is None:
             return [], 0.0
@@ -622,7 +681,8 @@ class BoostScheduler:
 
     # -- warmup ------------------------------------------------------------
 
-    def warm(self, requests, b_sizes: tuple | None = None) -> int:
+    def warm(self, requests, b_sizes: tuple | None = None,
+             stepping: bool | None = None) -> int:
         """Compile every bucket a request set can reach.
 
         The admission policy picks the bucket B from the instantaneous
@@ -633,7 +693,17 @@ class BoostScheduler:
         payloads, so a warmed scheduler serves any arrival order of
         these requests with zero recompiles.  Returns the number of
         programs compiled.
+
+        ``stepping`` additionally compiles the round-granular programs
+        the preempt/resume path runs (``init_state``/``run_rounds``; the
+        slice length ``n`` is a traced argument, so one program per
+        bucket covers every slice size including run-to-completion).
+        Defaults to on when the scheduler has a checkpoint dir — a
+        preemption-injected stream then pays no stepping compile inside
+        measured service time.
         """
+        if stepping is None:
+            stepping = self.ckpt_dir is not None
         groups = {}
         for req in requests:
             mloc_b = self.lattice.bucket_mloc(req.m // req.k)
@@ -646,9 +716,11 @@ class BoostScheduler:
             for B in (b_sizes or self.lattice.b_sizes):
                 xb, yb, ab, keys, _ = batched.stack_for_dispatch(
                     [item], B)
-                self._compiled(BucketKey(compat=compat, B=B,
-                                         mloc=mloc_b),
-                               xb, yb, ab, keys)
+                bucket = BucketKey(compat=compat, B=B, mloc=mloc_b)
+                self._compiled(bucket, xb, yb, ab, keys)
+                if stepping:
+                    st = self._engine_init(bucket, xb, yb, ab, keys)
+                    self._engine_run(bucket, st, xb, yb, n=0)
         return self.cache.stats.compiles - before
 
     # -- parity baseline ---------------------------------------------------

@@ -1,0 +1,394 @@
+"""Checkpoint durability + incremental/async/template-free semantics.
+
+ISSUE 6 coverage: engine-state round-trips (both engines, thresholds +
+histogram trees) through the template-free path, loud shape/dtype
+mismatches instead of silent ``astype``, crash-mid-write atomicity
+(fsync before publish), incremental chains restoring ≡ full snapshots,
+manager retention with chain-ancestor protection, and the async
+writer's barrier/error contract.
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import msgpack_ckpt
+from repro.core import batched, scenarios, sharded_batched, tasks, weak
+from repro.core.types import BoostConfig
+from repro.weak_tree import HistogramTrees
+
+N = 1 << 10
+CLS = weak.Thresholds(n=N)
+CFG = BoostConfig(k=4, coreset_size=32, domain_size=N, opt_budget=4)
+
+
+def _assert_trees_equal(a, b):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        x, y = np.asarray(x), np.asarray(y)
+        assert x.dtype == y.dtype
+        np.testing.assert_array_equal(x, y)
+
+
+@pytest.fixture(scope="module")
+def batched_state():
+    x, y, _ = tasks.make_batch(CLS, 2, 64, 4, 1, seed0=7)
+    keys = jax.random.split(jax.random.key(2), 2)
+    st = batched.init_state(x, y, keys, CFG)
+    st = batched.run_rounds(st, x, y, CFG, CLS, n=3)
+    return jax.block_until_ready(st), (x, y, CFG, CLS)
+
+
+# ---------------------------------------------------------------------------
+# Template-free round-trips (both engines, stumps + trees)
+# ---------------------------------------------------------------------------
+
+def test_roundtrip_batched_template_free(tmp_path, batched_state):
+    """Restore rebuilds the exact StepState from the manifest alone —
+    no template, no engine init — bit-identical, dtypes preserved."""
+    state, _ = batched_state
+    path = str(tmp_path / "s.msgpack")
+    msgpack_ckpt.save_pytree(path, jax.device_get(state),
+                             meta={"rounds_done": 3},
+                             treedef=batched.STATE_TREEDEF)
+    restored, meta = msgpack_ckpt.restore_pytree(path)
+    assert isinstance(restored, batched.StepState)
+    assert meta["rounds_done"] == 3
+    _assert_trees_equal(state, restored)
+    # ...and matches the legacy template path exactly
+    via_like, _ = msgpack_ckpt.load_pytree(path, like=state)
+    _assert_trees_equal(restored, via_like)
+
+
+def test_roundtrip_batched_trees(tmp_path):
+    """A histogram-tree engine state (feature inputs, wider h_params)
+    round-trips template-free too — the manifest, not the hypothesis
+    class, defines the layout."""
+    cls = HistogramTrees(num_features=4, depth=2, bins=8)
+    cfg = BoostConfig(k=4, coreset_size=32,
+                      domain_size=1 << min(cls.value_bits, 30),
+                      opt_budget=4, deterministic_coreset=False)
+    spec = scenarios.ScenarioSpec(name="xor", noise=2)
+    ts = [scenarios.make_feature_task(cls, m=64, k=4, spec=spec, seed=s)
+          for s in range(2)]
+    x = np.stack([t.x for t in ts])
+    y = np.stack([t.y for t in ts])
+    keys = jax.random.split(jax.random.key(3), 2)
+    st = batched.init_state(x, y, keys, cfg, cls=cls)
+    st = batched.run_rounds(st, x, y, cfg, cls, n=2)
+    path = str(tmp_path / "t.msgpack")
+    msgpack_ckpt.save_pytree(path, jax.device_get(st),
+                             treedef=batched.STATE_TREEDEF)
+    restored, _ = msgpack_ckpt.restore_pytree(path)
+    assert isinstance(restored, batched.StepState)
+    _assert_trees_equal(st, restored)
+
+
+@pytest.mark.xdist_group("device_mesh_subprocess")
+def test_roundtrip_sharded_template_free(tmp_path):
+    x, y, _ = tasks.make_batch(CLS, 2, 64, 4, 1, seed0=9)
+    keys = jax.random.split(jax.random.key(4), 2)
+    st = sharded_batched.init_state_sharded(x, y, keys, CFG, cls=CLS)
+    st = sharded_batched.run_rounds_sharded(st, x, y, CFG, CLS, n=2)
+    path = str(tmp_path / "sh.msgpack")
+    msgpack_ckpt.save_pytree(path, jax.device_get(st),
+                             treedef=sharded_batched.STATE_TREEDEF)
+    restored, _ = msgpack_ckpt.restore_pytree(path)
+    assert isinstance(restored, dict)
+    assert set(restored) == set(st)
+    for k in st:
+        np.testing.assert_array_equal(np.asarray(st[k]),
+                                      np.asarray(restored[k]))
+
+
+def test_template_free_rejects_dtype_drift(tmp_path, batched_state):
+    """The engine reconstructor re-checks its declared dtype layout —
+    a checkpoint whose leaves drifted is refused, not silently cast."""
+    state, _ = batched_state
+    bad = state._replace(hits=np.asarray(state.hits, np.int64))
+    path = str(tmp_path / "bad.msgpack")
+    msgpack_ckpt.save_pytree(path, jax.device_get(bad),
+                             treedef=batched.STATE_TREEDEF)
+    with pytest.raises(ValueError, match="dtype"):
+        msgpack_ckpt.restore_pytree(path)
+
+
+def test_unregistered_treedef_raises(tmp_path):
+    path = str(tmp_path / "u.msgpack")
+    msgpack_ckpt.save_pytree(path, {"a": np.zeros(2, np.int32)},
+                             treedef="no.such.treedef")
+    with pytest.raises(KeyError, match="not registered"):
+        msgpack_ckpt.restore_pytree(path)
+
+
+# ---------------------------------------------------------------------------
+# Loud mismatches + owned arrays (satellite 1)
+# ---------------------------------------------------------------------------
+
+def test_load_shape_mismatch_raises(tmp_path):
+    path = str(tmp_path / "c.msgpack")
+    msgpack_ckpt.save_pytree(path, {"a": np.zeros(4, np.float32)})
+    with pytest.raises(ValueError, match="shape"):
+        msgpack_ckpt.load_pytree(path, like={"a": np.zeros(5,
+                                                           np.float32)})
+
+
+def test_load_dtype_mismatch_raises_not_casts(tmp_path):
+    """The old path did ``astype`` here — resuming f32 state into an
+    f64 template silently changed every subsequent weight update."""
+    path = str(tmp_path / "c.msgpack")
+    msgpack_ckpt.save_pytree(path, {"a": np.zeros(4, np.float32)})
+    with pytest.raises(ValueError, match="dtype"):
+        msgpack_ckpt.load_pytree(path, like={"a": np.zeros(4,
+                                                           np.float64)})
+
+
+def test_load_missing_key_raises(tmp_path):
+    path = str(tmp_path / "c.msgpack")
+    msgpack_ckpt.save_pytree(path, {"a": np.zeros(4, np.float32)})
+    with pytest.raises(KeyError, match="missing"):
+        msgpack_ckpt.load_pytree(path, like={"a": np.zeros(4, np.float32),
+                                             "b": np.zeros(1, np.int32)})
+
+
+def test_loaded_arrays_are_owned_and_writable(tmp_path):
+    """np.frombuffer over the msgpack blob yields read-only views; the
+    loader must hand back owned copies that survive in-place updates."""
+    path = str(tmp_path / "c.msgpack")
+    msgpack_ckpt.save_pytree(path, {"a": np.arange(6, dtype=np.int32)})
+    arrays, _ = msgpack_ckpt.load_pytree(path)
+    assert arrays["a"].flags.writeable
+    arrays["a"] += 1          # would raise on a frombuffer view
+    np.testing.assert_array_equal(arrays["a"], np.arange(1, 7))
+
+
+# ---------------------------------------------------------------------------
+# Durable atomic writes (satellite 2)
+# ---------------------------------------------------------------------------
+
+def test_fsync_before_publish_then_dir(tmp_path, monkeypatch):
+    events = []
+    real_fsync, real_replace = os.fsync, os.replace
+
+    def spy_fsync(fd):
+        events.append("fsync")
+        return real_fsync(fd)
+
+    def spy_replace(src, dst):
+        events.append("replace")
+        return real_replace(src, dst)
+
+    monkeypatch.setattr(os, "fsync", spy_fsync)
+    monkeypatch.setattr(os, "replace", spy_replace)
+    msgpack_ckpt.save_pytree(str(tmp_path / "c.msgpack"),
+                             {"a": np.ones(2, np.float32)})
+    # data fsync'd BEFORE the atomic publish, directory entry after
+    assert events == ["fsync", "replace", "fsync"]
+
+
+@pytest.mark.parametrize("crash_at", ["fsync", "replace"])
+def test_crash_mid_write_preserves_previous(tmp_path, monkeypatch,
+                                            crash_at):
+    """A crash between write and publish never corrupts the previous
+    snapshot and never leaks the temp file."""
+    path = str(tmp_path / "c.msgpack")
+    first = {"a": np.arange(4, dtype=np.int32)}
+    msgpack_ckpt.save_pytree(path, first)
+
+    def boom(*a, **k):
+        raise OSError("simulated crash")
+
+    monkeypatch.setattr(os, crash_at, boom)
+    with pytest.raises(OSError, match="simulated crash"):
+        msgpack_ckpt.save_pytree(path, {"a": np.zeros(4, np.int32)})
+    monkeypatch.undo()
+    got, _ = msgpack_ckpt.load_pytree(path, like=first)
+    np.testing.assert_array_equal(got["a"], first["a"])
+    assert [f for f in os.listdir(tmp_path) if f.endswith(".tmp")] == []
+
+
+def test_corrupt_checkpoint_raises_clearly(tmp_path):
+    path = tmp_path / "c.msgpack"
+    path.write_bytes(b"\xde\xad\xbe\xef not msgpack")
+    with pytest.raises(ValueError, match="corrupt checkpoint"):
+        msgpack_ckpt.load_pytree(str(path))
+
+
+# ---------------------------------------------------------------------------
+# Incremental chains
+# ---------------------------------------------------------------------------
+
+def test_incremental_chain_restores_equal_to_full(tmp_path,
+                                                  batched_state):
+    state, (x, y, cfg, cls) = batched_state
+    base_path = str(tmp_path / "c0.msgpack")
+    hashes = msgpack_ckpt.save_pytree(base_path, jax.device_get(state),
+                                      treedef=batched.STATE_TREEDEF)
+    state2 = batched.run_rounds(state, x, y, cfg, cls, n=2)
+    host2 = jax.device_get(state2)
+    tip = str(tmp_path / "c1.msgpack")
+    msgpack_ckpt.save_pytree(tip, host2, treedef=batched.STATE_TREEDEF,
+                             base=base_path, base_hashes=hashes)
+    full = str(tmp_path / "full.msgpack")
+    msgpack_ckpt.save_pytree(full, host2,
+                             treedef=batched.STATE_TREEDEF)
+    assert msgpack_ckpt.snapshot_base(tip) == "c0.msgpack"
+    assert msgpack_ckpt.snapshot_base(full) is None
+    assert os.path.getsize(tip) < os.path.getsize(full)
+    via_chain, _ = msgpack_ckpt.restore_pytree(tip)
+    via_full, _ = msgpack_ckpt.restore_pytree(full)
+    _assert_trees_equal(via_chain, via_full)
+    _assert_trees_equal(via_chain, state2)
+
+
+def test_incremental_unchanged_leaves_not_rewritten(tmp_path):
+    t0 = {"big": np.zeros(1024, np.float32),
+          "ctr": np.int32(0)}
+    p0 = str(tmp_path / "a0.msgpack")
+    h0 = msgpack_ckpt.save_pytree(p0, t0)
+    t1 = dict(t0, ctr=np.int32(1))        # only the counter changed
+    p1 = str(tmp_path / "a1.msgpack")
+    msgpack_ckpt.save_pytree(p1, t1, base=p0, base_hashes=h0)
+    payload = msgpack_ckpt._read_payload(p1)
+    assert set(payload["arrays"]) == {"ctr"}
+    got, _ = msgpack_ckpt.load_pytree(p1, like=t1)
+    _assert_trees_equal(got, t1)
+
+
+# ---------------------------------------------------------------------------
+# Async writer (tentpole b)
+# ---------------------------------------------------------------------------
+
+def test_async_writer_wait_is_a_durability_barrier(tmp_path,
+                                                   batched_state):
+    state, _ = batched_state
+    w = msgpack_ckpt.AsyncCheckpointer(max_pending=2)
+    paths = [str(tmp_path / f"a{i}.msgpack") for i in range(3)]
+    for p in paths:
+        w.save(p, state, treedef=batched.STATE_TREEDEF)
+    w.wait()
+    for p in paths:
+        restored, _ = msgpack_ckpt.restore_pytree(p)
+        _assert_trees_equal(state, restored)
+    w.close()
+
+
+def test_async_writer_chains_incrementally(tmp_path):
+    w = msgpack_ckpt.AsyncCheckpointer()
+    t0 = {"big": np.zeros(512, np.float32), "ctr": np.int32(0)}
+    p0, p1, p2 = (str(tmp_path / f"c{i}.msgpack") for i in range(3))
+    w.save(p0, t0, chain="d0")
+    w.save(p1, dict(t0, ctr=np.int32(1)), chain="d0")
+    w.wait()
+    assert msgpack_ckpt.snapshot_base(p0) is None
+    assert msgpack_ckpt.snapshot_base(p1) == "c0.msgpack"
+    assert set(msgpack_ckpt._read_payload(p1)["arrays"]) == {"ctr"}
+    w.forget("d0")                       # chain consumed → next is full
+    w.save(p2, dict(t0, ctr=np.int32(2)), chain="d0")
+    w.wait()
+    assert msgpack_ckpt.snapshot_base(p2) is None
+    w.close()
+
+
+def test_async_writer_error_surfaces_in_wait(tmp_path):
+    w = msgpack_ckpt.AsyncCheckpointer()
+    blocker = tmp_path / "sub"
+    blocker.write_text("a file where the save needs a directory")
+    w.save(str(blocker / "x.msgpack"), {"a": np.zeros(2, np.int32)})
+    with pytest.raises(RuntimeError, match="async checkpoint save"):
+        w.wait()
+    # the error is consumed; the writer stays usable
+    ok = str(tmp_path / "ok.msgpack")
+    w.save(ok, {"a": np.ones(2, np.int32)})
+    w.wait()
+    assert os.path.exists(ok)
+    w.close()
+
+
+def test_save_pytree_async_module_level(tmp_path):
+    path = str(tmp_path / "m.msgpack")
+    w = msgpack_ckpt.save_pytree_async(path, {"a": np.arange(3)})
+    w.wait()
+    arrays, _ = msgpack_ckpt.load_pytree(path)
+    np.testing.assert_array_equal(arrays["a"], np.arange(3))
+
+
+# ---------------------------------------------------------------------------
+# CheckpointManager (satellite 3 + retention)
+# ---------------------------------------------------------------------------
+
+def test_manager_keep_zero_raises(tmp_path):
+    """keep=0 used to silently disable retention (``steps()[:-0]`` is
+    the empty slice) — it must refuse loudly."""
+    with pytest.raises(ValueError, match="keep=0"):
+        msgpack_ckpt.CheckpointManager(str(tmp_path), keep=0)
+    with pytest.raises(ValueError, match="full_every"):
+        msgpack_ckpt.CheckpointManager(str(tmp_path), full_every=0)
+
+
+def test_manager_steps_skips_stray_files(tmp_path):
+    mgr = msgpack_ckpt.CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(10, {"a": np.zeros(2, np.int32)})
+    (tmp_path / "ckpt_garbage.msgpack").write_bytes(b"junk")
+    (tmp_path / "ckpt_00000020.msgpack.tmp").write_bytes(b"junk")
+    with pytest.warns(UserWarning, match="unparsable"):
+        steps = mgr.steps()
+    assert steps == [10]
+    got, meta = mgr.restore_latest()
+    assert meta["step"] == 10
+    np.testing.assert_array_equal(got["a"], np.zeros(2))
+
+
+def test_manager_restore_latest_empty_dir(tmp_path):
+    mgr = msgpack_ckpt.CheckpointManager(str(tmp_path))
+    assert mgr.restore_latest() == (None, None)
+
+
+def test_manager_retention_protects_chain_ancestors(tmp_path):
+    """keep=1 with a live incremental chain must NOT delete the bases
+    the kept tip restores through."""
+    mgr = msgpack_ckpt.CheckpointManager(str(tmp_path), keep=1,
+                                         incremental=True,
+                                         full_every=10)
+    tree = {"big": np.zeros(256, np.float32), "ctr": np.int32(0)}
+    for step in range(4):
+        mgr.save(step, dict(tree, ctr=np.int32(step)))
+    assert mgr.steps() == [0, 1, 2, 3]   # chain keeps every ancestor
+    got, meta = mgr.restore_latest()
+    assert meta["step"] == 3
+    assert int(got["ctr"]) == 3
+    np.testing.assert_array_equal(got["big"], tree["big"])
+
+
+def test_manager_full_every_bounds_chains(tmp_path):
+    """full_every=2 rolls a fresh full snapshot, letting retention
+    finally collect the old chain."""
+    mgr = msgpack_ckpt.CheckpointManager(str(tmp_path), keep=1,
+                                         incremental=True,
+                                         full_every=2)
+    tree = {"big": np.zeros(256, np.float32), "ctr": np.int32(0)}
+    for step in range(7):
+        mgr.save(step, dict(tree, ctr=np.int32(step)))
+    kept = mgr.steps()
+    assert kept[-1] == 6
+    assert len(kept) <= 3                # tip + its short chain only
+    got, _ = mgr.restore_latest()
+    assert int(got["ctr"]) == 6
+
+
+def test_manager_template_free_restore_roundtrip(tmp_path,
+                                                 batched_state):
+    state, _ = batched_state
+    mgr = msgpack_ckpt.CheckpointManager(str(tmp_path), keep=2,
+                                         incremental=True,
+                                         treedef=batched.STATE_TREEDEF)
+    mgr.save(1, jax.device_get(state))
+    restored, meta = mgr.restore_latest()
+    assert isinstance(restored, batched.StepState)
+    assert meta["step"] == 1
+    _assert_trees_equal(state, restored)

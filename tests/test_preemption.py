@@ -106,6 +106,40 @@ def test_sharded_preemption_keeps_wire_ledger_valid(tmp_path):
     assert validated > 0
 
 
+def test_chained_re_preemption_checkpoints_incrementally(tmp_path):
+    """A resumed dispatch can itself be preempted again: the second
+    checkpoint chains incrementally onto the first (only changed
+    leaves on disk), and the chain restores to a bit-identical
+    completion.  Resumes consume dispatch seqs, so preempt={0:…, 1:…}
+    targets the batch's first dispatch AND its first resume."""
+    from repro.ckpt import msgpack_ckpt
+    reqs = S.make_request_stream(2, np.zeros(2), [SHAPES[0]], seed0=2,
+                                 **COMMON)   # one shape ⇒ one bucket
+    sched = S.BoostScheduler(lattice=LATTICE, ckpt_dir=str(tmp_path),
+                             preempt={0: 2, 1: 2})
+    for r in reqs:
+        sched.submit(r)
+    done, _ = sched.step()                   # dispatch 0: preempted
+    assert done == [] and sched.stats.preemptions == 1
+    done, _ = sched.step()                   # resume 1: re-preempted
+    assert done == [] and sched.stats.preemptions == 2
+    assert sched.stats.resumes == 1
+    sched._ckpt_writer().wait()              # flush the async writer
+    ckpts = sorted(f for f in os.listdir(tmp_path)
+                   if f.endswith(".msgpack"))
+    assert len(ckpts) == 2
+    assert msgpack_ckpt.snapshot_base(
+        os.path.join(tmp_path, ckpts[1])) == ckpts[0]
+    done, _ = sched.step()                   # resume 2: completes
+    assert len(done) == 2 and all(c.resumed for c in done)
+    assert sched.stats.resumes == 2
+    # the whole chain is deleted once the batch completes
+    assert [f for f in os.listdir(tmp_path)
+            if f.endswith(".msgpack")] == []
+    for c in done:
+        _assert_one_shot_parity(sched, c)
+
+
 def test_preempt_requires_ckpt_dir():
     with pytest.raises(ValueError):
         S.BoostScheduler(lattice=LATTICE, preempt={0: 3})
