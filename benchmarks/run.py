@@ -55,6 +55,8 @@ EXPECTED_GATES = {
     "trees": ("tree_hist_kernel_parity", "tree_xor_guarantee",
               "tree_stump_separation", "tree_matched_accuracy",
               "tree_matched_wire"),
+    "tree_comms": ("tree_comm_parity", "tree_comm_ledger",
+                   "tree_comm_savings"),
 }
 
 
@@ -62,13 +64,14 @@ def _suite():
     from benchmarks import (baselines, batched_classify, checkpointing,
                             fault_injection, finite_class, kernel_micro,
                             paper_claims, roofline, serving,
-                            sharded_scenarios, trees)
+                            sharded_scenarios, tree_comms, trees)
     return {
         "batched_classify": batched_classify.run_all,
         "serving": serving.run_all,
         "fault_injection": fault_injection.run_all,
         "checkpointing": checkpointing.run_all,
         "trees": trees.run_all,
+        "tree_comms": tree_comms.run_all,
         "sharded_scenarios": sharded_scenarios.run_all,
         "comm_vs_opt": paper_claims.comm_vs_opt,
         "comm_vs_k": paper_claims.comm_vs_k,
@@ -90,16 +93,31 @@ def _repo_root() -> str:
 
 
 def write_trajectory_snapshot(all_rows: dict, failures: int,
-                              only: str | None) -> str:
-    """Append the next dated BENCH_<n>.json at the repo root."""
-    root = _repo_root()
+                              only: str | None,
+                              root: str | None = None) -> str:
+    """Append the next dated BENCH_<n>.json at the repo root.
+
+    The index is claimed atomically: ``os.open(O_CREAT | O_EXCL)``
+    either owns the path or raises, and a collision (two runs in one
+    session racing the same glob-derived n, or a leftover file the glob
+    missed) retries on the next index — never truncating an existing
+    snapshot.
+    """
+    root = _repo_root() if root is None else root
     taken = []
     for f in glob.glob(os.path.join(root, "BENCH_*.json")):
         m = re.fullmatch(r"BENCH_(\d+)\.json", os.path.basename(f))
         if m:
             taken.append(int(m.group(1)))
     n = max(taken, default=0) + 1
-    path = os.path.join(root, f"BENCH_{n}.json")
+    while True:
+        path = os.path.join(root, f"BENCH_{n}.json")
+        try:
+            fd = os.open(path, os.O_CREAT | os.O_EXCL | os.O_WRONLY,
+                         0o644)
+            break
+        except FileExistsError:
+            n += 1
     snapshot = {
         "n": n,
         "date": time.strftime("%Y-%m-%d %H:%M:%S"),
@@ -108,7 +126,7 @@ def write_trajectory_snapshot(all_rows: dict, failures: int,
         "failures": failures,
         "results": all_rows,
     }
-    with open(path, "w") as f:
+    with os.fdopen(fd, "w") as f:
         json.dump(snapshot, f, indent=1, default=str)
     return path
 

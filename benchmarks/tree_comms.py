@@ -1,0 +1,170 @@
+"""Tree communication modes: coreset vs histogram-merge vs voting.
+
+The coreset protocol ships ``c`` weighted EXAMPLES per player per
+round — Theorem 4.1's m-independent but c·example_bits-heavy payload.
+For histogram-tree classes two classical distributed-GBDT layouts move
+strictly less (``repro.weak_tree.trees.HistogramTrees.erm_players``):
+
+* ``histogram`` — feature-parallel merge: each player ships its full
+  per-node weighted histograms (2·nodes·F·Q fixed-point cells) and the
+  merged sums drive the same greedy grower;
+* ``voting``    — LightGBM-style parallel voting: top-k split
+  proposals per node (feat_bits+bin_bits+gain each), a deterministic
+  election, then merged histograms on the 2k elected columns only.
+
+Three registered gates (run.py fails the run if one stops executing):
+
+* **tree_comm_parity** — per mode, the host loop, the batched engine
+  and the mesh-sharded engine produce bit-identical hypothesis
+  streams, attempts and ledgers on every lane (modes may differ from
+  each other — each mode is its own deterministic float program — but
+  the three engines must agree bit-for-bit WITHIN a mode).
+* **tree_comm_ledger** — ``validate_ledger`` on every sharded lane:
+  the Theorem-4.1-style accounting (bits_histograms / bits_votes /
+  stuck-round-only coresets) equals the payloads measured at the
+  collective sites.
+* **tree_comm_savings** — on each planted family (xor, checkerboard,
+  bands) the measured total wire bits order
+  ``voting < histogram < coreset``: the election's 2·topk elected
+  columns beat the full F-column exchange, which beats shipping
+  c examples — the sizing (c=512, F=8, Q=8, depth 2, topk=1) mirrors
+  the regime the LightGBM voting paper targets (payload ∝ features,
+  not examples).
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import batched, classify, scenarios, sharded_batched, weak
+from repro.core.types import BoostConfig
+
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+B = 2 if SMOKE else 4
+M = 256 if SMOKE else 512
+K = 4
+F = 8
+BINS = 8
+DEPTH = 2
+TOPK = 1
+CORESET = 512                    # the payload the merges must beat
+MODES = ("coreset", "histogram", "voting")
+# depth-2-representable members of every family (min_tree_depth ≤ 2)
+FAMILIES = (("xor", dict()),
+            ("checkerboard", dict(cells=2)),
+            ("bands", dict(n_bands=2)))
+
+
+def _cls(mode):
+    return weak.make_class("tree", num_features=F, tree_depth=DEPTH,
+                           tree_bins=BINS, tree_comm_mode=mode,
+                           tree_vote_topk=TOPK)
+
+
+def _cfg(cls):
+    return BoostConfig(k=K, coreset_size=CORESET,
+                       domain_size=1 << min(cls.value_bits, 30),
+                       opt_budget=16, deterministic_coreset=False)
+
+
+def _host_loop(x, y, keys, cfg, cls):
+    out = []
+    for b in range(x.shape[0]):
+        try:
+            out.append(classify.run_accurately_classify(
+                jnp.asarray(x[b]), jnp.asarray(y[b]), keys[b], cfg, cls))
+        except RuntimeError:             # opt_budget exhausted — the
+            out.append(None)             # engines flag it as ok=False
+    return out
+
+
+def bench_family(name, knobs, seed0):
+    spec = scenarios.ScenarioSpec(name=name, noise=2, **knobs)
+    # tasks are raw split arrays — identical for every mode (the mode
+    # classes differ only in how the protocol merges, not in the
+    # concept grid), so all modes run the SAME samples and keys
+    x, y, ts = scenarios.make_scenario_batch(_cls("coreset"), B, M, K,
+                                             spec, seed0=seed0)
+    keys = jax.random.split(jax.random.key(seed0), B)
+    mesh = sharded_batched.make_players_mesh(K)
+    rows, wire = [], {}
+    for mode in MODES:
+        cls = _cls(mode)
+        cfg = _cfg(cls)
+        host_out = _host_loop(x, y, keys, cfg, cls)
+        bat_out = batched.run_accurately_classify_batched(x, y, keys,
+                                                          cfg, cls)
+        t0 = time.time()
+        sh_out = sharded_batched.run_accurately_classify_sharded(
+            x, y, keys, cfg, cls, mesh=mesh)
+        wall = time.time() - t0
+        ok = [bool(bat_out.ok[b]) and bool(sh_out.ok[b])
+              and host_out[b] is not None for b in range(B)]
+        assert all(ok), f"{name}/{mode}: lanes exhausted opt_budget"
+        agree = all(
+            host_out[b].attempts == int(bat_out.attempts[b])
+            == int(sh_out.attempts[b])
+            and host_out[b].ledger.total_bits
+            == bat_out.ledger(b).total_bits
+            == sh_out.ledger(b).total_bits
+            and np.array_equal(
+                np.asarray(host_out[b].hypotheses)[:host_out[b].rounds],
+                np.asarray(bat_out.hypotheses[b])[
+                    :int(bat_out.rounds[b])])
+            and np.array_equal(
+                np.asarray(host_out[b].hypotheses)[:host_out[b].rounds],
+                sh_out.hypotheses[b][:int(sh_out.rounds[b])])
+            for b in range(B))
+        common.gate("tree_comm_parity", agree,
+                    f"{name}/{mode}: host/batched/sharded diverge")
+        for b in range(B):
+            sh_out.validate_ledger(b)    # ledger ≡ measured payload
+        common.gate("tree_comm_ledger", True, "")
+        bits = [sh_out.ledger(b).total_bits for b in range(B)]
+        led = sh_out.ledger(0)
+        wire[mode] = int(np.mean(bits))
+        errs = [int(weak.empirical_errors(
+            sh_out.classifier(b)(jnp.asarray(ts[b].flat_x)),
+            jnp.asarray(ts[b].flat_y))) for b in range(B)]
+        rows.append({
+            "bench": f"tree_comms_{name}_{mode}",
+            "us_per_call": round(1e6 * wall / B, 1),
+            "derived": (f"bits_mean={wire[mode]};"
+                        f"hist_bits={led.bits_histograms};"
+                        f"vote_bits={led.bits_votes};"
+                        f"coreset_bits={led.bits_coresets};"
+                        f"E_S_max={max(errs)};"
+                        f"rounds_max={int(sh_out.rounds.max())}"),
+            "family": name, "mode": mode, "B": B, "m": M, "k": K,
+            "wire_bits_mean": wire[mode],
+            "bits_histograms": led.bits_histograms,
+            "bits_votes": led.bits_votes,
+            "bits_coresets": led.bits_coresets,
+            "errors": errs,
+            "tasks_per_s": round(B / max(wall, 1e-9), 2),
+        })
+    common.gate(
+        "tree_comm_savings",
+        wire["voting"] < wire["histogram"] < wire["coreset"],
+        f"{name}: wire bits {wire} violate voting<histogram<coreset")
+    return rows
+
+
+def run_all():
+    rows = []
+    for i, (name, knobs) in enumerate(FAMILIES):
+        rows += bench_family(name, knobs, seed0=10 * (i + 1) + 3)
+    return rows
+
+
+if __name__ == "__main__":
+    import json
+
+    for row in run_all():
+        print(row["bench"], json.dumps(row))

@@ -73,8 +73,17 @@ def _gather_coreset(x, y, idx):
 
 
 def _center_erm(cls, cx, cy, mix, c):
-    """Pooled-coreset ERM under the mixture D_t (step 2(c)+(d))."""
+    """Pooled-coreset ERM under the mixture D_t (step 2(c)+(d)).
+
+    Classes with a distributed ``comm_mode`` (weak_tree trees in
+    histogram/voting mode) grow from per-player partials instead: here
+    the caller already holds all k players' shards, so the per-player
+    grower runs with an identity gather — the same float path the
+    sharded engine's real collectives produce (bit-parity per mode).
+    """
     k = cy.shape[0]
+    if getattr(cls, "comm_mode", "coreset") != "coreset":
+        return cls.erm_players(cx, cy, mix / c)
     w = jnp.broadcast_to(mix[:, None] / c, (k, c)).reshape(-1)
     cx_flat = cx.reshape((k * c,) + cx.shape[2:])
     cy_flat = cy.reshape(-1)

@@ -47,6 +47,51 @@ def weight_sum_bits(m: int, num_rounds: int) -> int:
         + math.ceil(math.log2(max(m, 2)))
 
 
+# ---------------------------------------------------------------------------
+# Distributed tree growth (weak_tree comm_mode): what replaces the
+# per-round coreset payload.  All three are STATIC per-player per-round
+# counts derived from the class — the engines' wire counters and the
+# ledger charge the same formulas, and validate_ledger cross-checks.
+# ---------------------------------------------------------------------------
+
+def tree_comm_mode(cls) -> str:
+    """The class's split-finding exchange mode ("coreset" for every
+    class without the capability — all the 1-D protocol classes)."""
+    return getattr(cls, "comm_mode", "coreset")
+
+
+def hist_scalars_per_player(cls) -> int:
+    """Histogram scalars ONE player ships per round: (hist_w, hist_wy)
+    pairs over every node of every level — 2·nodes·F·Q in histogram
+    mode, 2·nodes·elected·Q in voting mode (merged columns only)."""
+    mode = tree_comm_mode(cls)
+    if mode == "histogram":
+        return 2 * cls.nodes * cls.num_features * cls.bins
+    if mode == "voting":
+        return 2 * cls.nodes * cls.elected * cls.bins
+    return 0
+
+
+def vote_entries_per_player(cls) -> int:
+    """Vote proposals ONE player ships per round: top-k per node."""
+    if tree_comm_mode(cls) == "voting":
+        return cls.nodes * cls.vote_topk
+    return 0
+
+
+def histogram_cell_bits(m: int, num_rounds: int) -> int:
+    """One histogram scalar on the wire — a weight-scale quantity, so
+    the same fixed-point format as a weight sum."""
+    return weight_sum_bits(m, num_rounds)
+
+
+def vote_entry_bits(cls, m: int, num_rounds: int) -> int:
+    """One vote proposal: (feature id, bin edge, gain) — feat_bits +
+    bin_bits + a weight-fixed-point gain (the center can early-exit on
+    the proposed gain, so it rides along as in LightGBM's voting)."""
+    return cls.feat_bits + cls.bin_bits + weight_sum_bits(m, num_rounds)
+
+
 def boost_attempt_ledger(cfg: BoostConfig, cls, m: int, rounds: int,
                          stuck: bool) -> Ledger:
     """Exact bits for one BoostAttempt run that produced ``rounds``
@@ -55,8 +100,21 @@ def boost_attempt_ledger(cfg: BoostConfig, cls, m: int, rounds: int,
     T = cfg.num_rounds(m)
     wire_rounds = rounds + (1 if stuck else 0)     # stuck round still sent 2(a,b)
     led = Ledger(attempts=1, rounds=wire_rounds)
-    led.bits_coresets = (wire_rounds * cfg.k * cfg.coreset_size
-                         * example_bits(n))
+    if tree_comm_mode(cls) == "coreset":
+        led.bits_coresets = (wire_rounds * cfg.k * cfg.coreset_size
+                             * example_bits(n))
+    else:
+        # distributed growth: histograms/votes replace the per-round
+        # coreset payload; examples cross the wire only when the
+        # attempt sticks (quarantine needs the actual points)
+        led.bits_coresets = (cfg.k * cfg.coreset_size * example_bits(n)
+                             if stuck else 0)
+        led.bits_histograms = (wire_rounds * cfg.k
+                               * hist_scalars_per_player(cls)
+                               * histogram_cell_bits(m, T))
+        led.bits_votes = (wire_rounds * cfg.k
+                          * vote_entries_per_player(cls)
+                          * vote_entry_bits(cls, m, T))
     led.bits_weight_sums = wire_rounds * cfg.k * weight_sum_bits(m, T)
     led.bits_hypotheses = rounds * cfg.k * cls.hypothesis_bits()
     led.bits_control = cfg.k * (1 if stuck else 0) + cfg.k  # stuck flag + halt
@@ -84,7 +142,19 @@ def boost_attempt_ledger_masked(cfg: BoostConfig, cls, m: int, rounds: int,
     T = cfg.num_rounds(m)
     wire_rounds = rounds + (1 if stuck else 0)
     led = Ledger(attempts=1, rounds=wire_rounds)
-    led.bits_coresets = player_rounds * cfg.coreset_size * example_bits(n)
+    if tree_comm_mode(cls) == "coreset":
+        led.bits_coresets = (player_rounds * cfg.coreset_size
+                             * example_bits(n))
+    else:
+        # only the stuck round ships examples — from the players alive
+        # AT that round (== players_last, the stuck round is the
+        # attempt's final wire round)
+        led.bits_coresets = (players_last * cfg.coreset_size
+                             * example_bits(n) if stuck else 0)
+        led.bits_histograms = (player_rounds * hist_scalars_per_player(cls)
+                               * histogram_cell_bits(m, T))
+        led.bits_votes = (player_rounds * vote_entries_per_player(cls)
+                          * vote_entry_bits(cls, m, T))
     led.bits_weight_sums = player_rounds * weight_sum_bits(m, T)
     led.bits_hypotheses = player_h_rounds * cls.hypothesis_bits()
     led.bits_control = players_last * (1 if stuck else 0) + players_last
@@ -109,9 +179,18 @@ def theorem_41_bound(cfg: BoostConfig, cls, m: int, opt: int,
     logm = math.log2(max(m, 2))
     logn = math.log2(max(n, 2))
     d = cls.vc_dim
+    T = cfg.num_rounds(m)
+    # distributed tree growth swaps the per-round coreset payload for
+    # histograms/votes; the bound keeps BOTH terms (monotone loosening
+    # — coreset bits still cover the stuck round's example transfer)
+    mode_payload = (hist_scalars_per_player(cls)
+                    * histogram_cell_bits(m, T)
+                    + vote_entries_per_player(cls)
+                    * vote_entry_bits(cls, m, T)
+                    if tree_comm_mode(cls) != "coreset" else 0)
     per_attempt = cfg.k * (6 * logm + 1) * (
         cfg.coreset_size * (logn + 1) / max(d, 1) * d
-        + cls.hypothesis_bits() + logm)
+        + cls.hypothesis_bits() + logm + mode_payload)
     return constant * max(opt + 1, 1) * per_attempt
 
 

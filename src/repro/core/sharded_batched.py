@@ -97,6 +97,8 @@ class _RoundCarry(NamedTuple):
     wire_core: jax.Array    # int32 — coreset examples gathered this attempt
     wire_ws: jax.Array      # int32 — weight-sum scalars gathered this attempt
     wire_bytes: jax.Array   # int32 — machine bytes of those collectives
+    wire_hist: jax.Array    # int32 — histogram scalars merged (comm_mode)
+    wire_votes: jax.Array   # int32 — vote proposals exchanged (voting)
 
 
 def _slice_player_keys(keys_all: jax.Array, kloc: int) -> jax.Array:
@@ -146,30 +148,50 @@ def _round_body(cfg: BoostConfig, cls, k: int, x, y, alive, x_orders,
     cx_all = jax.lax.all_gather(cx, AXIS)                 # [p, kloc, c(, F)]
     cy_all = jax.lax.all_gather(cy, AXIS)
     ws_all = jax.lax.all_gather(log_wsums, AXIS)          # [p, kloc]
+    comm_mode = L.tree_comm_mode(cls)
     # payload counters: what alive players actually sent.  Unmasked,
     # they are taken from the gathered arrays themselves (move iff the
     # collective executed, by its actual size); masked, they charge the
     # per-player payload × the round's alive count.
-    if player_alive is None:
-        n_examples = int(np.prod(cy_all.shape))           # k · c, exactly
-        n_scalars = int(np.prod(ws_all.shape))            # k
-        n_bytes = (cx_all.size * cx_all.dtype.itemsize
-                   + cy_all.size * cy_all.dtype.itemsize
-                   + ws_all.size * ws_all.dtype.itemsize)
-    else:
-        k_alive = jnp.sum(player_alive.astype(jnp.int32))
-        per_player = ((cx_all.size // k) * cx_all.dtype.itemsize
-                      + (cy_all.size // k) * cy_all.dtype.itemsize
-                      + ws_all.dtype.itemsize)
-        n_examples = k_alive * cfg.coreset_size
-        n_scalars = k_alive
-        n_bytes = k_alive * per_player
+    k_alive = (jnp.int32(k) if player_alive is None
+               else jnp.sum(player_alive.astype(jnp.int32)))
+    core_pp_bytes = ((cx_all.size // k) * cx_all.dtype.itemsize
+                     + (cy_all.size // k) * cy_all.dtype.itemsize)
+    if comm_mode == "coreset":
+        if player_alive is None:
+            n_examples = int(np.prod(cy_all.shape))       # k · c, exactly
+            n_scalars = int(np.prod(ws_all.shape))        # k
+            n_bytes = (cx_all.size * cx_all.dtype.itemsize
+                       + cy_all.size * cy_all.dtype.itemsize
+                       + ws_all.size * ws_all.dtype.itemsize)
+        else:
+            n_examples = k_alive * cfg.coreset_size
+            n_scalars = k_alive
+            n_bytes = k_alive * (core_pp_bytes + ws_all.dtype.itemsize)
     cx_all = cx_all.reshape((k,) + cx_all.shape[2:])      # player order
     cy_all = cy_all.reshape((k,) + cy_all.shape[2:])
     ws_all = ws_all.reshape(-1)
     mix = W.mixture_weights(ws_all)
     # --- center: step 2(c)+(d) pooled weighted ERM ----------------------
-    if no_center:
+    if comm_mode != "coreset":
+        # Distributed tree growth: split finding runs on per-player
+        # histograms (and votes), merged by a REAL collective — the
+        # every-round coreset gather above survives only as a carry-
+        # shape/quarantine simulation artifact; protocol-wise examples
+        # cross the wire solely on the stuck round, and the counters
+        # below charge exactly that.  The merge is centerless by
+        # construction (every device computes the identical merged
+        # answer), so the §2.2 no_center flag is moot here.
+        pid = jax.lax.axis_index(AXIS)
+        mix_loc = jax.lax.dynamic_slice_in_dim(mix, pid * kloc, kloc, 0)
+
+        def _ag(a):
+            g = jax.lax.all_gather(a, AXIS)
+            return g.reshape((k,) + g.shape[2:])
+
+        h, loss = cls.erm_players(cx, cy, mix_loc / cfg.coreset_size,
+                                  all_gather=_ag)
+    elif no_center:
         # §2.2: the first ALIVE player acts as center; only its device
         # runs the ERM and the result is psum-broadcast back (exact:
         # all other summands are literal zeros).
@@ -187,6 +209,24 @@ def _round_body(cfg: BoostConfig, cls, k: int, x, y, alive, x_orders,
     else:
         h, loss = _center_erm(cls, cx_all, cy_all, mix, cfg.coreset_size)
     stuck_now = loss > cfg.weak_threshold
+    if comm_mode != "coreset":
+        # distributed-mode payloads: per-player scalar counts are
+        # STATIC class properties (ledger.py charges the same formulas)
+        # × the round's alive-player count; coreset examples move only
+        # when this round sticks (quarantine ships the points then)
+        hist_pp = L.hist_scalars_per_player(cls)
+        vote_pp = L.vote_entries_per_player(cls)
+        n_examples = jnp.where(stuck_now, k_alive * cfg.coreset_size, 0)
+        n_scalars = k_alive
+        n_hist = k_alive * hist_pp
+        n_votes = k_alive * vote_pp
+        n_bytes = (jnp.where(stuck_now, k_alive * core_pp_bytes, 0)
+                   + k_alive * (ws_all.dtype.itemsize
+                                + 4 * hist_pp      # f32 histogram cells
+                                + 4 * vote_pp))    # i32 vote entries
+    else:
+        n_hist = jnp.int32(0)
+        n_votes = jnp.int32(0)
     # --- players: step 2(f) multiplicative-weights update (local) ------
     pred = cls.predict(h, x)
     upd = W.update_hits(c.hits, pred == y, alive)
@@ -209,6 +249,8 @@ def _round_body(cfg: BoostConfig, cls, k: int, x, y, alive, x_orders,
         wire_core=c.wire_core + n_examples,
         wire_ws=c.wire_ws + n_scalars,
         wire_bytes=c.wire_bytes + n_bytes,
+        wire_hist=c.wire_hist + n_hist,
+        wire_votes=c.wire_votes + n_votes,
     )
 
 
@@ -230,7 +272,8 @@ STATE_DTYPES = dict(
     batched.STATE_DTYPES,
     awire_core="int32", awire_ws="int32", hist_wire_core="int32",
     hist_wire_ws="int32", wire_bytes="int32", wire_q_points="int32",
-    wire_q_counts="int32")
+    wire_q_counts="int32", awire_hist="int32", awire_votes="int32",
+    hist_wire_hist="int32", hist_wire_votes="int32")
 
 
 def _unflatten_state(leaves: dict) -> dict:
@@ -266,7 +309,10 @@ def init_state_sharded(x, y, keys, cfg: BoostConfig, alive=None,
         hist_wire_core=i32((B, a_max)),
         hist_wire_ws=i32((B, a_max)),
         wire_bytes=i32((B,)),
-        wire_q_points=i32((B,)), wire_q_counts=i32((B,)))
+        wire_q_points=i32((B,)), wire_q_counts=i32((B,)),
+        awire_hist=i32((B,)), awire_votes=i32((B,)),
+        hist_wire_hist=i32((B, a_max)),
+        hist_wire_votes=i32((B, a_max)))
     return state
 
 
@@ -296,6 +342,8 @@ def _one_step_sharded(cfg: BoostConfig, cls, k: int, no_center: bool,
     t = jnp.where(start, 0, s["t"])
     awire_core = jnp.where(start, 0, s["awire_core"])
     awire_ws = jnp.where(start, 0, s["awire_ws"])
+    awire_hist = jnp.where(start, 0, s["awire_hist"])
+    awire_votes = jnp.where(start, 0, s["awire_votes"])
     hist_alive = jnp.where(start, s["hist_alive"].at[a].set(m_alive),
                            s["hist_alive"])
     # ---- one BoostAttempt round over the wire -------------------------
@@ -307,7 +355,8 @@ def _one_step_sharded(cfg: BoostConfig, cls, k: int, no_center: bool,
         h_params=cur_h, core_x=s["core_x"], core_y=s["core_y"],
         min_loss=s["min_loss"],
         wire_core=jnp.int32(0), wire_ws=jnp.int32(0),
-        wire_bytes=jnp.int32(0))
+        wire_bytes=jnp.int32(0), wire_hist=jnp.int32(0),
+        wire_votes=jnp.int32(0))
     out = _round_body(cfg, cls, k, x, y, s["alive"], x_orders, y_sorted,
                       alive_sorted, no_center, rc, player_alive=pa)
     stuck = out.stuck
@@ -325,6 +374,8 @@ def _one_step_sharded(cfg: BoostConfig, cls, k: int, no_center: bool,
         stuck, classify.distinct_count_masked(core_flat, valid_flat), 0)
     awire_core = awire_core + out.wire_core
     awire_ws = awire_ws + out.wire_ws
+    awire_hist = awire_hist + out.wire_hist
+    awire_votes = awire_votes + out.wire_votes
     nxt = {
         "attempt": jnp.where(ended, a + 1, a),
         "done": s["done"] | success,
@@ -355,12 +406,19 @@ def _one_step_sharded(cfg: BoostConfig, cls, k: int, no_center: bool,
         "core_x": out.core_x, "core_y": out.core_y,
         "step": s["step"] + 1,
         "awire_core": awire_core, "awire_ws": awire_ws,
+        "awire_hist": awire_hist, "awire_votes": awire_votes,
         "hist_wire_core": jnp.where(
             ended, s["hist_wire_core"].at[a].set(awire_core),
             s["hist_wire_core"]),
         "hist_wire_ws": jnp.where(
             ended, s["hist_wire_ws"].at[a].set(awire_ws),
             s["hist_wire_ws"]),
+        "hist_wire_hist": jnp.where(
+            ended, s["hist_wire_hist"].at[a].set(awire_hist),
+            s["hist_wire_hist"]),
+        "hist_wire_votes": jnp.where(
+            ended, s["hist_wire_votes"].at[a].set(awire_votes),
+            s["hist_wire_votes"]),
         "wire_bytes": s["wire_bytes"] + out.wire_bytes,
         "wire_q_points": s["wire_q_points"] + k_alive * p_count,
         "wire_q_counts": s["wire_q_counts"] + k_alive * p_count,
@@ -471,12 +529,16 @@ class ShardedClassifyResult(batched.BatchedClassifyResult):
     wire_bytes: np.ndarray = None       # [B] machine bytes of collectives
     wire_q_points: np.ndarray = None    # [B] quarantine point messages
     wire_q_counts: np.ndarray = None    # [B] quarantine count reports
+    hist_wire_hist: np.ndarray = None   # [B, A] histogram scalars merged
+    hist_wire_votes: np.ndarray = None  # [B, A] vote proposals exchanged
     mesh_devices: int = 1
 
     def wire_summary(self, b: int) -> dict:
         return {
             "coreset_examples": int(self.hist_wire_core[b].sum()),
             "weight_sum_scalars": int(self.hist_wire_ws[b].sum()),
+            "histogram_scalars": int(self.hist_wire_hist[b].sum()),
+            "vote_proposals": int(self.hist_wire_votes[b].sum()),
             "collective_bytes": int(self.wire_bytes[b]),
             "quarantine_point_msgs": int(self.wire_q_points[b]),
             "quarantine_count_msgs": int(self.wire_q_counts[b]),
@@ -494,30 +556,60 @@ class ShardedClassifyResult(batched.BatchedClassifyResult):
           weight_sum_bits(m_alive, T) with per-attempt m_alive;
         * per attempt, gathered payload == Σ_rounds k_alive · c examples
           and Σ_rounds k_alive scalars (the protocol's message pattern);
+          in a distributed comm_mode the per-round payload is instead
+          Σ_rounds k_alive · hist_scalars (+ votes), with examples
+          gathered only on the stuck round;
+        * ledger histogram/vote bits == merged scalars / exchanged
+          proposals × their per-attempt bit widths;
         * quarantine messages == Σ_stuck k_alive(stuck round) · P.
         """
         cfg, cls = self.cfg, self.cls
         n = L.domain_size(cls)
+        mode = L.tree_comm_mode(cls)
+        hist_pp = L.hist_scalars_per_player(cls)
+        vote_pp = L.vote_entries_per_player(cls)
         led = self.ledger(b)
         n_att = int(self.attempts[b])
         got_core = int(self.hist_wire_core[b, :n_att].sum())
         got_ws = int(self.hist_wire_ws[b, :n_att].sum())
         exp_ws_bits = 0
+        exp_hist_bits = 0
+        exp_vote_bits = 0
         exp_q = 0
         for a in range(n_att):
             pl_rounds, _, pl_last = self._attempt_players(b, a)
-            assert int(self.hist_wire_core[b, a]) == \
-                pl_rounds * cfg.coreset_size, (b, a)
+            stuck = bool(self.hist_stuck[b, a])
+            if mode == "coreset":
+                assert int(self.hist_wire_core[b, a]) == \
+                    pl_rounds * cfg.coreset_size, (b, a)
+            else:
+                # distributed modes gather examples only when stuck —
+                # from the stuck round's alive players
+                assert int(self.hist_wire_core[b, a]) == \
+                    (pl_last * cfg.coreset_size if stuck else 0), (b, a)
+            assert int(self.hist_wire_hist[b, a]) == \
+                pl_rounds * hist_pp, (b, a)
+            assert int(self.hist_wire_votes[b, a]) == \
+                pl_rounds * vote_pp, (b, a)
             assert int(self.hist_wire_ws[b, a]) == pl_rounds, (b, a)
             m_a = max(int(self.hist_alive[b, a]), 2)
+            T_a = cfg.num_rounds(m_a)
             exp_ws_bits += int(self.hist_wire_ws[b, a]) \
-                * L.weight_sum_bits(m_a, cfg.num_rounds(m_a))
-            if self.hist_stuck[b, a]:
+                * L.weight_sum_bits(m_a, T_a)
+            exp_hist_bits += int(self.hist_wire_hist[b, a]) \
+                * L.histogram_cell_bits(m_a, T_a)
+            exp_vote_bits += int(self.hist_wire_votes[b, a]) \
+                * L.vote_entry_bits(cls, m_a, T_a) if vote_pp else 0
+            if stuck:
                 exp_q += pl_last * int(self.hist_p[b, a])
         assert led.bits_coresets == got_core * L.example_bits(n), (
             led.bits_coresets, got_core)
         assert led.bits_weight_sums == exp_ws_bits, (
             led.bits_weight_sums, exp_ws_bits)
+        assert led.bits_histograms == exp_hist_bits, (
+            led.bits_histograms, exp_hist_bits)
+        assert led.bits_votes == exp_vote_bits, (
+            led.bits_votes, exp_vote_bits)
         assert int(self.wire_q_points[b]) == exp_q, (
             int(self.wire_q_points[b]), exp_q)
         assert int(self.wire_q_counts[b]) == exp_q
@@ -526,6 +618,12 @@ class ShardedClassifyResult(batched.BatchedClassifyResult):
             "coreset_examples_gathered": got_core,
             "bits_weight_sums": led.bits_weight_sums,
             "weight_sum_scalars_gathered": got_ws,
+            "bits_histograms": led.bits_histograms,
+            "histogram_scalars_merged": int(
+                self.hist_wire_hist[b, :n_att].sum()),
+            "bits_votes": led.bits_votes,
+            "vote_proposals_exchanged": int(
+                self.hist_wire_votes[b, :n_att].sum()),
             "quarantine_msgs": int(self.wire_q_points[b]),
             "collective_bytes": int(self.wire_bytes[b]),
         }
@@ -551,6 +649,8 @@ def finalize_sharded(state: dict, x, y, alive0, cfg: BoostConfig, cls,
         hist_players_last=out["hist_players_last"],
         hist_wire_core=out["hist_wire_core"],
         hist_wire_ws=out["hist_wire_ws"],
+        hist_wire_hist=out["hist_wire_hist"],
+        hist_wire_votes=out["hist_wire_votes"],
         wire_bytes=out["wire_bytes"],
         wire_q_points=out["wire_q_points"],
         wire_q_counts=out["wire_q_counts"],

@@ -102,12 +102,19 @@ class Ledger:
     bits_dispute: int = 0        # outer loop: center holds S' (already sent)
     rounds: int = 0
     attempts: int = 0
+    # distributed tree growth (weak_tree comm_mode != "coreset"): the
+    # per-round histogram merge / vote proposals that REPLACE step
+    # 2(a)'s coreset payload (bits_coresets then charges only the stuck
+    # round's example transfer, which quarantine still needs)
+    bits_histograms: int = 0
+    bits_votes: int = 0
 
     @property
     def total_bits(self) -> int:
         return (self.bits_coresets + self.bits_weight_sums
                 + self.bits_hypotheses + self.bits_control
-                + self.bits_dispute)
+                + self.bits_dispute + self.bits_histograms
+                + self.bits_votes)
 
     def __add__(self, other: "Ledger") -> "Ledger":
         return Ledger(
@@ -118,4 +125,6 @@ class Ledger:
             bits_dispute=self.bits_dispute + other.bits_dispute,
             rounds=self.rounds + other.rounds,
             attempts=self.attempts + other.attempts,
+            bits_histograms=self.bits_histograms + other.bits_histograms,
+            bits_votes=self.bits_votes + other.bits_votes,
         )

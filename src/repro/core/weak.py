@@ -339,7 +339,8 @@ def erm_batch(cls, xs: jax.Array, ys: jax.Array, w: jax.Array):
 
 
 def make_class(name: str, *, n: int = 0, num_features: int = 0,
-               tree_depth: int = 2, tree_bins: int = 32):
+               tree_depth: int = 2, tree_bins: int = 32,
+               tree_comm_mode: str = "coreset", tree_vote_topk: int = 2):
     if name == "singletons":
         return Singletons(n=n)
     if name == "thresholds":
@@ -351,7 +352,9 @@ def make_class(name: str, *, n: int = 0, num_features: int = 0,
     if name == "tree":
         from repro.weak_tree import HistogramTrees
         return HistogramTrees(num_features=num_features,
-                              depth=tree_depth, bins=tree_bins)
+                              depth=tree_depth, bins=tree_bins,
+                              comm_mode=tree_comm_mode,
+                              vote_topk=tree_vote_topk)
     raise ValueError(f"unknown hypothesis class {name!r}")
 
 

@@ -21,7 +21,8 @@ import jax.numpy as jnp
 
 from repro.kernels.histogram import kernel as K
 from repro.kernels.histogram.ref import (  # noqa: F401  (re-export oracle)
-    best_splits_ref, bin_index, node_histograms_ref)
+    best_splits_per_feature, best_splits_ref, bin_index,
+    node_histograms_ref, split_err_surface)
 
 
 def _pallas_histograms(x, w, wy, bins: int, interpret: bool):

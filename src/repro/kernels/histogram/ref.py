@@ -37,29 +37,62 @@ def node_histograms_ref(x, w, wy, bins: int):
             jnp.einsum("nc,cfq->nfq", wy, onehot))
 
 
-def best_splits_ref(hist_w, hist_wy):
-    """Reduce histograms to the best (feature, bin) split per node.
+def split_err_surface(hist_w, hist_wy):
+    """Two-leaf weighted error of every (feature, bin) split candidate.
 
-    hist_* [..., N, F, Q] → (feat [..., N] i32, q [..., N] i32,
-    err [..., N] f32): the split minimising the two-leaf weighted error
-    with optimally-signed constant leaves,
+    hist_* [..., N, F, Q] → err [..., N, F, Q] f32,
         err(f, q) = ½(W_L − |WY_L|) + ½(W_R − |WY_R|),
     where L = bins < q, R = bins ≥ q.  q = 0 is the degenerate
     everything-right split (its error is the no-split optimum), kept as
     a candidate so an unsplittable node degrades deterministically.
-    Ties break to the first flat (f, q) index — bit-stable everywhere.
     """
-    Q = hist_w.shape[-1]
-    F = hist_w.shape[-2]
     cw = jnp.cumsum(hist_w, axis=-1)
     cwy = jnp.cumsum(hist_wy, axis=-1)
     left_w = cw - hist_w                    # exclusive prefix: bins < q
     left_wy = cwy - hist_wy
     tot_w = cw[..., -1:]
     tot_wy = cwy[..., -1:]
-    err = (0.5 * (left_w - jnp.abs(left_wy))
-           + 0.5 * ((tot_w - left_w) - jnp.abs(tot_wy - left_wy)))
+    return (0.5 * (left_w - jnp.abs(left_wy))
+            + 0.5 * ((tot_w - left_w) - jnp.abs(tot_wy - left_wy)))
+
+
+def _pinned_argmin(v, size: int):
+    """Index of the minimum of v's last axis with ties pinned to the
+    LOWEST index — explicitly, not via argmin's backend-dependent
+    tie-breaking (XLA:CPU happens to take the first occurrence but TPU
+    reductions make no such promise; voting-mode elections need the
+    winner to be engine-independent, so the pin is spelled out)."""
+    vmin = jnp.min(v, axis=-1, keepdims=True)
+    idx = jnp.arange(size, dtype=jnp.int32)
+    return jnp.min(jnp.where(v == vmin, idx, size), axis=-1)
+
+
+def best_splits_ref(hist_w, hist_wy):
+    """Reduce histograms to the best (feature, bin) split per node.
+
+    hist_* [..., N, F, Q] → (feat [..., N] i32, q [..., N] i32,
+    err [..., N] f32): the split minimising :func:`split_err_surface`.
+    Ties break to the lowest flat (feature, bin) index — pinned
+    explicitly, bit-stable on every backend.
+    """
+    Q = hist_w.shape[-1]
+    F = hist_w.shape[-2]
+    err = split_err_surface(hist_w, hist_wy)
     flat = err.reshape(err.shape[:-2] + (F * Q,))
-    j = jnp.argmin(flat, axis=-1)
+    j = _pinned_argmin(flat, F * Q)
     errmin = jnp.take_along_axis(flat, j[..., None], axis=-1)[..., 0]
     return (j // Q).astype(jnp.int32), (j % Q).astype(jnp.int32), errmin
+
+
+def best_splits_per_feature(hist_w, hist_wy):
+    """Best bin of EVERY feature — the voting mode's local proposals.
+
+    hist_* [..., N, F, Q] → (q [..., N, F] i32, err [..., N, F] f32):
+    per feature, the bin minimising :func:`split_err_surface` (ties to
+    the lowest bin, same explicit pin as :func:`best_splits_ref`, so a
+    player proposes the identical candidate on every backend)."""
+    Q = hist_w.shape[-1]
+    err = split_err_surface(hist_w, hist_wy)
+    q = _pinned_argmin(err, Q)
+    errmin = jnp.min(err, axis=-1)
+    return q.astype(jnp.int32), errmin

@@ -93,6 +93,8 @@ class Request:
     num_features: int = 8
     tree_depth: int = 2          # clsname == "tree": depth / bin grid
     tree_bins: int = 32
+    tree_comm_mode: str = "coreset"  # coreset | histogram | voting
+    tree_vote_topk: int = 2
     coreset_size: int = 100
     opt_budget: int = 16
     scenario: str | None = None  # core/scenarios.py adversary, or uniform
@@ -104,7 +106,9 @@ class Request:
         return weak.make_class(self.clsname, n=self.domain,
                                num_features=self.num_features,
                                tree_depth=self.tree_depth,
-                               tree_bins=self.tree_bins)
+                               tree_bins=self.tree_bins,
+                               tree_comm_mode=self.tree_comm_mode,
+                               tree_vote_topk=self.tree_vote_topk)
 
     def make_cfg(self) -> BoostConfig:
         # feature-row classes (stumps, trees) use the randomized
@@ -672,12 +676,24 @@ class BoostScheduler:
         return completions
 
     def _fill_deadline(self) -> float | None:
-        """Virtual time at which the oldest queue must dispatch even if
-        not full; None when it is already full enough."""
-        q = self._queues[self._pick_queue()]
-        if len(q) >= self.lattice.max_b:
-            return None
-        return q[0][0].arrival_s + self.fill_wait_s
+        """Virtual time at which SOME queue must dispatch even if not
+        full; None when a queue is already full enough to go now.
+
+        Dispatch order is "oldest head across bucket queues"
+        (:meth:`_pick_queue`), so the deadline must consider every
+        queue, not just one: a full max-B batch anywhere dispatches
+        immediately (returning None) even when the globally oldest head
+        sits in a sparser queue, and the hold never extends past the
+        oldest pending head + ``fill_wait_s`` — previously this read a
+        single queue and a two-bucket burst could hold a ready batch
+        (or a stale head) for the whole fill window.
+        """
+        heads = []
+        for q in self._queues.values():
+            if len(q) >= self.lattice.max_b:
+                return None
+            heads.append(q[0][0].arrival_s)
+        return min(heads) + self.fill_wait_s
 
     # -- warmup ------------------------------------------------------------
 

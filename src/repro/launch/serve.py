@@ -117,7 +117,9 @@ def run_classify(args) -> dict:
     cls = weak.make_class(args.cls, n=args.domain,
                           num_features=args.features,
                           tree_depth=args.tree_depth,
-                          tree_bins=args.tree_bins)
+                          tree_bins=args.tree_bins,
+                          tree_comm_mode=args.comm_mode,
+                          tree_vote_topk=args.vote_topk)
     cfg = BoostConfig(
         k=args.k, coreset_size=args.coreset, domain_size=args.domain,
         opt_budget=args.opt_budget,
@@ -264,6 +266,7 @@ def run_serve_stream(args) -> dict:
         clsname=args.cls, domain=args.domain,
         num_features=args.features,
         tree_depth=args.tree_depth, tree_bins=args.tree_bins,
+        tree_comm_mode=args.comm_mode, tree_vote_topk=args.vote_topk,
         coreset_size=args.coreset, opt_budget=args.opt_budget,
         engine=args.engine)
     # one lattice point per distinct shape: the next power of two over
@@ -325,6 +328,14 @@ def main():
                     help="--cls tree: tree depth D (2^D leaves)")
     ap.add_argument("--tree-bins", type=int, default=32,
                     help="--cls tree: histogram bins Q (power of two)")
+    ap.add_argument("--comm-mode", default="coreset",
+                    choices=["coreset", "histogram", "voting"],
+                    help="--cls tree: how split finding crosses the "
+                         "wire (coreset gather, histogram merge, or "
+                         "LightGBM-style parallel voting)")
+    ap.add_argument("--vote-topk", type=int, default=2,
+                    help="--comm-mode voting: proposals per node per "
+                         "player")
     ap.add_argument("--opt-budget", type=int, default=16)
     ap.add_argument("--engine", default="batched",
                     choices=["batched", "sharded"])

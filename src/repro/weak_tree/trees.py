@@ -65,6 +65,21 @@ class HistogramTrees:
     depth: int = 2
     bins: int = 32               # power of two: q/Q thresholds are exact
 
+    # How split finding crosses the wire (core/boost_attempt._center_erm
+    # dispatches on it; ledger.py charges it; scheduler.CompatKey hashes
+    # it so mixed-mode traffic partitions into separate compile buckets):
+    #   "coreset"   — players ship coresets, the center grows on pooled
+    #                 examples (the paper's step 2(a) exchange);
+    #   "histogram" — players ship per-node weighted histograms, the
+    #                 merge is the sum — examples cross the wire only on
+    #                 a stuck round (quarantine needs the points);
+    #   "voting"    — LightGBM-style parallel voting: players ship top-k
+    #                 per-node split proposals, a deterministic election
+    #                 picks ≤ 2·topk candidate features, and one merged-
+    #                 histogram round runs on the elected columns only.
+    comm_mode: str = "coreset"
+    vote_topk: int = 2           # proposals per node per player (voting)
+
     # capability protocol (core/tasks.py, serve/scheduler): this class
     # consumes feature rows [.., F] and needs the randomized coreset
     needs_features: bool = dataclasses.field(default=True, init=False,
@@ -76,6 +91,12 @@ class HistogramTrees:
         if self.bins < 2 or self.bins & (self.bins - 1):
             raise ValueError(
                 f"bins must be a power of two ≥ 2, got {self.bins}")
+        if self.comm_mode not in ("coreset", "histogram", "voting"):
+            raise ValueError(
+                f"comm_mode must be coreset|histogram|voting, "
+                f"got {self.comm_mode!r}")
+        if self.vote_topk < 1:
+            raise ValueError(f"vote_topk must be ≥ 1, got {self.vote_topk}")
 
     # -- shape/bit accounting ---------------------------------------------
 
@@ -94,6 +115,14 @@ class HistogramTrees:
     @property
     def param_dim(self) -> int:
         return 1 + 2 * self.nodes + self.leaves
+
+    @property
+    def elected(self) -> int:
+        """Candidate features the voting election keeps per node —
+        LightGBM's 2·topk cap (every elected feature was in SOME
+        player's top-k, so ≤ min(F, k·topk), and 2·topk suffices for
+        the majority-vote guarantee)."""
+        return min(self.num_features, 2 * self.vote_topk)
 
     @property
     def bin_bits(self) -> int:
@@ -190,6 +219,119 @@ class HistogramTrees:
         onleaf = (route[:, None] == jnp.arange(NL)[None])
         w_leaf = jnp.sum(jnp.where(onleaf, w[:, None], 0.0), axis=0)
         wy_leaf = jnp.sum(jnp.where(onleaf, wy[:, None], 0.0), axis=0)
+        sign = jnp.where(wy_leaf >= 0, 1.0, -1.0)    # sign(0) := +1
+        loss = jnp.sum(0.5 * (w_leaf - jnp.abs(wy_leaf)))
+        params = jnp.concatenate(
+            [jnp.array([TYPE_TREE], jnp.float32),
+             jnp.concatenate(feats).astype(jnp.float32),
+             jnp.concatenate(qbins).astype(jnp.float32),
+             sign.astype(jnp.float32)])
+        return params, loss
+
+    def erm_players(self, cx: jax.Array, cy: jax.Array, pw: jax.Array,
+                    *, all_gather=None, interpret=None):
+        """Distributed greedy grower — the ``comm_mode`` collectives.
+
+        cx [kp, c, F] / cy [kp, c]: per-player coreset shards; pw [kp]:
+        per-player per-example weight (mixture/c — a dead player carries
+        pw = 0 and contributes zero to every histogram and no votes).
+        ``all_gather`` pools a [kp, …] per-player array to [k, …] in
+        player order (identity when the caller already holds all k
+        players — the host and batched engines; the sharded engine
+        passes a real ``lax.all_gather``+reshape).  Returns (params
+        [param_dim], loss), same encoding as :meth:`erm`.
+
+        Per level, each player builds its local per-node histograms with
+        the kernels/histogram triple (kp is the kernel's native batch
+        axis); then either
+
+        * **histogram**: gather + sum over the player axis — the merged
+          global histogram, reduced to best splits exactly as the
+          pooled-coreset grower would (``jnp.sum`` over the gathered
+          [k, …] array, NOT a ``psum``: reduction order must not depend
+          on mesh topology or bit-parity across engines breaks);
+        * **voting**: each player proposes its ``vote_topk`` best
+          features per node (stable argsort of per-feature best errors
+          ⇒ lowest feature wins local ties); the election counts votes
+          of players with pw > 0 and ranks features by
+          ``votes·F + (F−1−f)`` — all ranks distinct, so ``lax.top_k``
+          is fully deterministic: most votes wins, lowest feature
+          breaks vote ties.  One merged-histogram round then runs on
+          the ``elected`` columns only.
+
+        Leaves come from the LAST level's merged histograms (prefix
+        sums at the chosen split), so no extra payload is needed.  Each
+        mode's float path is engine-independent (the parity tests pin
+        host ≡ batched ≡ sharded per mode) but the per-player-partial
+        summation order differs from the pooled grower's, so modes may
+        disagree with each other in the last float bit — by design.
+        """
+        kp, c = cx.shape[0], cx.shape[1]
+        F = self.num_features
+        ag = all_gather if all_gather is not None else (lambda a: a)
+        w = jnp.broadcast_to(pw[:, None], (kp, c))            # [kp, c]
+        wy = w * cy.astype(w.dtype)
+        b = H.bin_index(cx, self.bins)                        # [kp, c, F]
+        route = jnp.zeros((kp, c), jnp.int32)
+        feats, qbins = [], []
+        sel = q_n = hw_m = hwy_m = None
+        for level in range(self.depth):
+            N = 1 << level
+            onnode = (route[..., None] == jnp.arange(N))      # [kp, c, N]
+            wn = jnp.where(onnode, w[..., None], 0.0)
+            wyn = jnp.where(onnode, wy[..., None], 0.0)
+            hw, hwy = H.node_histograms(
+                cx, wn.transpose(0, 2, 1), wyn.transpose(0, 2, 1),
+                self.bins, interpret=interpret)               # [kp,N,F,Q]
+            if self.comm_mode == "voting":
+                _, err_f = H.best_splits_per_feature(hw, hwy)  # [kp,N,F]
+                prop = jnp.argsort(err_f, axis=-1,
+                                   stable=True)[..., :self.vote_topk]
+                votes_all = ag(prop)                          # [k,N,topk]
+                alive_all = ag(pw > 0)                        # [k]
+                onefeat = ((votes_all[..., None] == jnp.arange(F))
+                           & alive_all[:, None, None, None])
+                votes = jnp.sum(onefeat.astype(jnp.int32),
+                                axis=(0, 2))                  # [N, F]
+                rank = votes * F + jnp.arange(F - 1, -1, -1)
+                _, elect = jax.lax.top_k(rank, self.elected)  # [N, E]
+                gidx = elect[None, :, :, None]
+                hw_e = jnp.take_along_axis(hw, gidx, axis=2)
+                hwy_e = jnp.take_along_axis(hwy, gidx, axis=2)
+                hw_m = jnp.sum(ag(hw_e), axis=0)              # [N, E, Q]
+                hwy_m = jnp.sum(ag(hwy_e), axis=0)
+                sel, q_n, _ = H.best_splits_ref(hw_m, hwy_m)
+                f_n = jnp.take_along_axis(elect, sel[:, None],
+                                          axis=1)[:, 0]
+            else:                                             # histogram
+                hw_m = jnp.sum(ag(hw), axis=0)                # [N, F, Q]
+                hwy_m = jnp.sum(ag(hwy), axis=0)
+                f_n, q_n, _ = H.best_splits_ref(hw_m, hwy_m)
+                sel = f_n
+            feats.append(f_n)
+            qbins.append(q_n)
+            f_pt = f_n[route]
+            q_pt = q_n[route]
+            xv = jnp.take_along_axis(b, f_pt[..., None], axis=-1)[..., 0]
+            route = route * 2 + (xv >= q_pt).astype(jnp.int32)
+        # -- leaves from the last level's merged histograms: the chosen
+        # column's prefix sums at q give each child's (w, wy) exactly —
+        # children interleave as [left_0, right_0, left_1, …], matching
+        # the route*2 + (bin ≥ q) descent above.
+        hw_sel = jnp.take_along_axis(
+            hw_m, sel[:, None, None], axis=1)[:, 0]           # [N, Q]
+        hwy_sel = jnp.take_along_axis(hwy_m, sel[:, None, None],
+                                      axis=1)[:, 0]
+        cw = jnp.cumsum(hw_sel, axis=-1)
+        cwy = jnp.cumsum(hwy_sel, axis=-1)
+        left_w = jnp.take_along_axis(cw - hw_sel, q_n[:, None],
+                                     axis=-1)[:, 0]
+        left_wy = jnp.take_along_axis(cwy - hwy_sel, q_n[:, None],
+                                      axis=-1)[:, 0]
+        w_leaf = jnp.stack([left_w, cw[:, -1] - left_w],
+                           axis=-1).reshape(-1)
+        wy_leaf = jnp.stack([left_wy, cwy[:, -1] - left_wy],
+                            axis=-1).reshape(-1)
         sign = jnp.where(wy_leaf >= 0, 1.0, -1.0)    # sign(0) := +1
         loss = jnp.sum(0.5 * (w_leaf - jnp.abs(wy_leaf)))
         params = jnp.concatenate(

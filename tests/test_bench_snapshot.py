@@ -1,0 +1,51 @@
+"""BENCH_<n>.json trajectory snapshots must never clobber each other
+(ISSUE 7 satellite): the index is claimed with O_CREAT|O_EXCL and a
+collision retries on the next index instead of truncating an existing
+snapshot."""
+
+import json
+import os
+
+from benchmarks import run as bench_run
+
+
+def test_back_to_back_snapshots_both_survive(tmp_path):
+    root = str(tmp_path)
+    p1 = bench_run.write_trajectory_snapshot(
+        {"suite": [{"bench": "a"}]}, 0, None, root=root)
+    p2 = bench_run.write_trajectory_snapshot(
+        {"suite": [{"bench": "b"}]}, 1, "suite", root=root)
+    assert p1 != p2
+    assert os.path.basename(p1) == "BENCH_1.json"
+    assert os.path.basename(p2) == "BENCH_2.json"
+    with open(p1) as f:
+        s1 = json.load(f)
+    with open(p2) as f:
+        s2 = json.load(f)
+    assert s1["n"] == 1 and s1["results"]["suite"][0]["bench"] == "a"
+    assert s2["n"] == 2 and s2["failures"] == 1 and s2["only"] == "suite"
+
+
+def test_snapshot_collision_retries_not_truncates(tmp_path, monkeypatch):
+    """Even when the glob-derived index is stale (another process wrote
+    BENCH_1 after our scan), the O_EXCL claim must skip ahead rather
+    than overwrite."""
+    root = str(tmp_path)
+    stale = os.path.join(root, "BENCH_1.json")
+    with open(stale, "w") as f:
+        json.dump({"precious": True}, f)
+    # a glob that never sees the existing file → the naive index is 1
+    monkeypatch.setattr(bench_run.glob, "glob", lambda pat: [])
+    p = bench_run.write_trajectory_snapshot({}, 0, None, root=root)
+    assert os.path.basename(p) == "BENCH_2.json"
+    with open(stale) as f:
+        assert json.load(f) == {"precious": True}   # untouched
+
+
+def test_snapshot_ignores_non_index_files(tmp_path):
+    root = str(tmp_path)
+    for name in ("BENCH_xyz.json", "BENCH_.json", "notBENCH_3.json"):
+        with open(os.path.join(root, name), "w") as f:
+            f.write("{}")
+    p = bench_run.write_trajectory_snapshot({}, 0, None, root=root)
+    assert os.path.basename(p) == "BENCH_1.json"

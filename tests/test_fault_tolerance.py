@@ -21,7 +21,8 @@ import jax
 import numpy as np
 import pytest
 
-from repro.core import batched, scenarios, sharded_batched, tasks, weak
+from repro.core import (batched, ledger, scenarios, sharded_batched,
+                        tasks, weak)
 from repro.ckpt import msgpack_ckpt
 from repro.core.types import BoostConfig
 
@@ -54,7 +55,8 @@ def _assert_bitwise(ref, got):
                                   got.hist_players_last)
     for b in range(ref.batch):
         for f in ("bits_coresets", "bits_weight_sums", "bits_hypotheses",
-                  "bits_control", "bits_dispute", "rounds", "attempts"):
+                  "bits_control", "bits_dispute", "bits_histograms",
+                  "bits_votes", "rounds", "attempts"):
             assert getattr(ref.ledger(b), f) == getattr(got.ledger(b), f), f
 
 
@@ -297,6 +299,123 @@ def test_checkpoint_shape_mismatch_fails_loudly(tmp_path):
     wrong = batched.init_state(x3, y3, keys3, CFG)
     with pytest.raises(ValueError, match="shape"):
         msgpack_ckpt.load_pytree(path, like=wrong)
+
+
+# ---------------------------------------------------------------------------
+# Distributed tree-growth modes (histogram-merge / voting) under
+# infrastructure adversaries — dead players must contribute neither
+# histograms nor votes, and the masked ledger must still equal the
+# measured collective payloads.
+# ---------------------------------------------------------------------------
+
+TREE_CFG = BoostConfig(k=4, coreset_size=64, domain_size=1 << 12,
+                       opt_budget=16, deterministic_coreset=False)
+TREE_SPECS = {
+    "dropout": scenarios.InfraSpec(name="dropout", player=1,
+                                   drop_round=0),
+    "rejoin": scenarios.InfraSpec(name="rejoin", player=0, drop_round=2,
+                                  rejoin_round=5),
+}
+
+
+def _tree_cls(mode):
+    return weak.make_class("tree", num_features=4, tree_depth=2,
+                           tree_bins=8, tree_comm_mode=mode,
+                           tree_vote_topk=1)
+
+
+def _tree_batch(cls, B=2, m=256, seed0=21):
+    spec = scenarios.ScenarioSpec(name="xor", noise=2)
+    x, y, ts = scenarios.make_scenario_batch(cls, B, m, 4, spec,
+                                             seed0=seed0)
+    keys = jax.random.split(jax.random.key(7), B)
+    return x, y, keys, ts
+
+
+@pytest.mark.parametrize("infra", sorted(TREE_SPECS))
+@pytest.mark.parametrize("mode", ["histogram", "voting"])
+def test_tree_comm_infra_parity_and_masked_ledger(mode, infra):
+    """Batched ≡ sharded bitwise under dropout/rejoin for both
+    distributed tree-growth modes, with validate_ledger proving the
+    masked accounting equals the measured histogram/vote payloads."""
+    cls = _tree_cls(mode)
+    sched = TREE_SPECS[infra].schedule(4, seed=0)
+    assert not sched.all()
+    x, y, keys, _ = _tree_batch(cls)
+    ref = batched.run_accurately_classify_batched(
+        x, y, keys, TREE_CFG, cls, player_sched=sched)
+    got = sharded_batched.run_accurately_classify_sharded(
+        x, y, keys, TREE_CFG, cls, player_sched=sched)
+    assert bool(ref.ok.all())
+    _assert_bitwise(ref, got)
+    wire = np.asarray(got.hist_rounds) + np.asarray(got.hist_stuck)
+    alive_rounds = np.asarray(got.hist_players)
+    assert np.any(alive_rounds < 4 * wire)   # somebody actually missed
+    for b in range(ref.batch):
+        got.validate_ledger(b)               # masked ledger ≡ payload
+        led = got.ledger(b)
+        assert led.bits_histograms > 0       # both modes merge hists
+        assert (led.bits_votes > 0) == (mode == "voting")
+
+
+def test_tree_comm_dead_player_ships_no_payload():
+    """With player 1 silenced for the whole run, the measured histogram
+    and vote payload counters can only ever count 3 alive players per
+    wire round — the dead player's messages are never charged."""
+    cls = _tree_cls("voting")
+    sched = TREE_SPECS["dropout"].schedule(4, seed=0)
+    x, y, keys, _ = _tree_batch(cls)
+    got = sharded_batched.run_accurately_classify_sharded(
+        x, y, keys, TREE_CFG, cls, player_sched=sched)
+    assert bool(got.ok.all())
+    wire = np.asarray(got.hist_rounds) + np.asarray(got.hist_stuck)
+    assert np.all(np.asarray(got.hist_players) <= 3 * wire)
+    hist_pp = ledger.hist_scalars_per_player(cls)
+    vote_pp = ledger.vote_entries_per_player(cls)
+    assert hist_pp > 0 and vote_pp > 0
+    for b in range(got.batch):
+        got.validate_ledger(b)
+        # the measured counters are exactly (alive player-rounds) ×
+        # (static per-player payload): 3/4 of the all-alive charge
+        n_att = int(got.attempts[b])
+        pr = int(np.sum(np.asarray(got.hist_players)[b, :n_att]))
+        assert int(np.sum(got.hist_wire_hist[b, :n_att])) \
+            == pr * hist_pp
+        assert int(np.sum(got.hist_wire_votes[b, :n_att])) \
+            == pr * vote_pp
+
+
+@pytest.mark.parametrize("mode", ["histogram", "voting"])
+def test_tree_comm_sharded_checkpoint_resume(mode, tmp_path):
+    """Mid-run sharded state → msgpack (template-free restore) → resume:
+    bit-identical to the uninterrupted run for both distributed modes —
+    the new histogram/vote wire counters round-trip with the state."""
+    cls = _tree_cls(mode)
+    x, y, keys, _ = _tree_batch(cls)
+    full = sharded_batched.run_accurately_classify_sharded(
+        x, y, keys, TREE_CFG, cls)
+    state = sharded_batched.init_state_sharded(x, y, keys, TREE_CFG,
+                                               cls=cls)
+    state = sharded_batched.run_rounds_sharded(state, x, y, TREE_CFG,
+                                               cls, n=3)
+    path = os.path.join(tmp_path, f"tree_{mode}.msgpack")
+    msgpack_ckpt.save_pytree(path, jax.device_get(state),
+                             treedef=sharded_batched.STATE_TREEDEF)
+    del state                                    # the preemption
+    restored, _ = msgpack_ckpt.restore_pytree(path)
+    assert {"awire_hist", "awire_votes",
+            "hist_wire_hist", "hist_wire_votes"} <= set(restored)
+    done = sharded_batched.run_rounds_sharded(restored, x, y, TREE_CFG,
+                                              cls)
+    got = sharded_batched.finalize_sharded(done, x, y, full.alive0,
+                                           TREE_CFG, cls)
+    _assert_bitwise(full, got)
+    np.testing.assert_array_equal(full.hist_wire_hist,
+                                  got.hist_wire_hist)
+    np.testing.assert_array_equal(full.hist_wire_votes,
+                                  got.hist_wire_votes)
+    for b in range(full.batch):
+        got.validate_ledger(b)
 
 
 def test_all_alive_schedule_is_a_bitwise_noop():

@@ -283,6 +283,39 @@ def test_arrival_traces():
     assert 0.1 < burst[-1] < 5.0
 
 
+def test_fill_policy_two_bucket_burst_dispatches_full_batch():
+    """Regression (ISSUE 7 satellite): the fill hold must scan EVERY
+    bucket queue.  With an older lone head in bucket A and a full max-B
+    burst in bucket B, the old single-queue ``_fill_deadline`` held the
+    ready batch for the whole fill window; the fix dispatches it
+    immediately, so the burst's head latency stays far under
+    fill_wait_s."""
+    fill_wait = 30.0
+    reqs = [S.Request(rid=0, m=64, k=2, noise=0, seed=1,
+                      arrival_s=0.0, **COMMON)]          # bucket mloc 32
+    reqs += [S.Request(rid=1 + i, m=96, k=2, noise=0, seed=2 + i,
+                       arrival_s=1e-3, **COMMON)          # bucket mloc 48
+             for i in range(LATTICE.max_b)]              # a FULL batch
+    # a straggler far out keeps the fill hold live while the burst waits
+    reqs.append(S.Request(rid=9, m=64, k=2, noise=0, seed=9,
+                          arrival_s=3 * fill_wait, **COMMON))
+    sched = S.BoostScheduler(lattice=LATTICE, policy="fill",
+                             fill_wait_s=fill_wait)
+    sched.warm(reqs)
+    done = sched.run_stream(reqs)
+    assert len(done) == len(reqs)
+    burst = [c for c in done if c.request.m == 96]
+    assert len(burst) == LATTICE.max_b
+    # one full-B dispatch, not max_b trickles
+    assert {c.bucket.B for c in burst} == {LATTICE.max_b}
+    assert len({id(c.result) for c in burst}) == 1
+    # head latency: admitted as soon as the server is free — far under
+    # the fill window the old code charged (the only wait is at most
+    # one warm dispatch of the lone bucket-A head in front of it)
+    assert max(c.queue_wait_s for c in burst) < fill_wait / 2, \
+        [c.queue_wait_s for c in burst]
+
+
 def test_fill_policy_batches_fuller_than_pack():
     """Under a trickle of arrivals, fill holds for full batches while
     pack dispatches eagerly — fewer, fuller dispatches."""

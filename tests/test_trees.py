@@ -117,6 +117,48 @@ def test_zero_weight_rows_are_inert():
     assert float(l1) == float(l2)
 
 
+def test_split_ties_break_to_lowest_feature_bin():
+    """Tie-breaking is pinned, not backend luck: on a gain surface with
+    EXACT ties (dyadic weights, duplicated feature columns — every
+    partial sum exactly representable) the chosen split must be the
+    lowest flat (feature, bin) index, identically on ref histograms and
+    the interpret-mode Pallas kernel."""
+    from repro.kernels.histogram import ops as H
+
+    Q = 8
+    rng = np.random.default_rng(2)
+    c = 64
+    col = ((rng.integers(0, Q, c) + 0.5) / Q).astype(np.float32)
+    x = np.stack([col, col, rng.random(c).astype(np.float32)], axis=1)
+    w = (rng.integers(1, 32, (1, c)) / 32.0).astype(np.float32)
+    wy = w * rng.choice([-1.0, 1.0], (1, c)).astype(np.float32)
+    hw_ref, hwy_ref = H.node_histograms_ref(
+        jnp.asarray(x), jnp.asarray(w), jnp.asarray(wy), Q)
+    hw_k, hwy_k = H.node_histograms(
+        jnp.asarray(x), jnp.asarray(w), jnp.asarray(wy), Q,
+        interpret=jax.default_backend() != "tpu")
+    np.testing.assert_array_equal(np.asarray(hw_ref), np.asarray(hw_k))
+    np.testing.assert_array_equal(np.asarray(hwy_ref),
+                                  np.asarray(hwy_k))
+    # columns 0 and 1 are identical ⇒ their err surfaces tie exactly;
+    # the winner must be feature 0 on both histogram paths
+    err = np.asarray(H.split_err_surface(hw_ref, hwy_ref))
+    np.testing.assert_array_equal(err[0, 0], err[0, 1])
+    for hw, hwy in ((hw_ref, hwy_ref), (hw_k, hwy_k)):
+        f, q, _ = H.best_splits_ref(hw, hwy)
+        assert int(f[0]) == 0
+        # and within the feature, the lowest of the tied bins
+        tied = np.flatnonzero(err[0, 0] == err[0, 0, int(q[0])])
+        assert int(q[0]) == tied[0]
+    # the fully-degenerate surface (wy ≡ 0: EVERY candidate ties) pins
+    # the global minimum to (feature 0, bin 0)
+    f0, q0, _ = H.best_splits_ref(hw_ref, jnp.zeros_like(hwy_ref))
+    assert int(f0[0]) == 0 and int(q0[0]) == 0
+    # per-feature proposals (voting mode) use the same pin
+    qf, _ = H.best_splits_per_feature(hw_ref, jnp.zeros_like(hwy_ref))
+    np.testing.assert_array_equal(np.asarray(qf)[0], 0)
+
+
 # ---------------------------------------------------------------------------
 # The acceptance bar: XOR separation
 # ---------------------------------------------------------------------------
