@@ -1,0 +1,121 @@
+"""Doc-consistency check: docs must not rot against the code.
+
+Two checks, both build-failing (run from CI and from tier-1 via
+tests/test_docs.py):
+
+1. **Code references resolve.**  Every backtick span in ``docs/*.md``
+   (and README.md) that names a dotted ``repro.*`` / ``benchmarks.*``
+   path must resolve: the longest importable module prefix is
+   imported, the remainder is walked with getattr.  A renamed module,
+   class, function or attribute breaks the doc that references it.
+2. **Tier-1 command agreement.**  ROADMAP.md declares the tier-1
+   verify command (the line ``**Tier-1 verify:** `...` ``); TESTING.md
+   must quote exactly that command — the two files drifting is how a
+   "gate every PR must keep green" stops being the gate anyone runs.
+
+Usage: ``python .github/scripts/check_docs.py [repo_root]`` — exits
+non-zero listing every failure (never stops at the first).
+"""
+
+from __future__ import annotations
+
+import glob
+import importlib
+import os
+import re
+import sys
+
+# dotted repro./benchmarks. paths inside backticks; a trailing
+# ``(...)`` or markdown punctuation stays outside the capture
+REF_RE = re.compile(r"`((?:repro|benchmarks)(?:\.[A-Za-z_][A-Za-z0-9_]*)+)`")
+_MISSING = object()
+
+
+def iter_refs(md_path: str):
+    with open(md_path, encoding="utf-8") as f:
+        text = f.read()
+    for m in REF_RE.finditer(text):
+        yield m.group(1)
+
+
+def resolve(ref: str) -> str | None:
+    """None if ``ref`` resolves, else a reason string."""
+    parts = ref.split(".")
+    mod = None
+    mod_len = 0
+    for i in range(len(parts), 0, -1):
+        try:
+            mod = importlib.import_module(".".join(parts[:i]))
+            mod_len = i
+            break
+        except ImportError:
+            continue
+        except Exception as e:  # noqa: BLE001 — import-time crash is a failure too
+            return f"importing {'.'.join(parts[:i])} raised {type(e).__name__}: {e}"
+    if mod is None:
+        return "no importable module prefix"
+    obj = mod
+    for attr in parts[mod_len:]:
+        obj = getattr(obj, attr, _MISSING)
+        if obj is _MISSING:
+            return (f"{'.'.join(parts[:mod_len])} has no attribute "
+                    f"chain {'.'.join(parts[mod_len:])!r}")
+    return None
+
+
+def check_refs(root: str) -> list[str]:
+    failures = []
+    pages = sorted(glob.glob(os.path.join(root, "docs", "*.md")))
+    readme = os.path.join(root, "README.md")
+    if os.path.exists(readme):
+        pages.append(readme)
+    if not pages:
+        return ["no docs/*.md found — the docs subsystem is missing"]
+    for page in pages:
+        for ref in iter_refs(page):
+            reason = resolve(ref)
+            if reason is not None:
+                failures.append(
+                    f"{os.path.relpath(page, root)}: `{ref}` does not "
+                    f"resolve ({reason})")
+    return failures
+
+
+def check_tier1_command(root: str) -> list[str]:
+    roadmap = os.path.join(root, "ROADMAP.md")
+    testing = os.path.join(root, "TESTING.md")
+    try:
+        with open(roadmap, encoding="utf-8") as f:
+            m = re.search(r"\*\*Tier-1 verify:\*\*\s*`([^`]+)`", f.read())
+    except OSError as e:
+        return [f"cannot read ROADMAP.md: {e}"]
+    if not m:
+        return ["ROADMAP.md no longer declares '**Tier-1 verify:** `...`'"]
+    cmd = m.group(1).strip()
+    try:
+        with open(testing, encoding="utf-8") as f:
+            testing_text = f.read()
+    except OSError as e:
+        return [f"cannot read TESTING.md: {e}"]
+    if cmd not in testing_text:
+        return [f"TESTING.md does not contain ROADMAP's tier-1 command "
+                f"verbatim: {cmd!r}"]
+    return []
+
+
+def main(root: str | None = None) -> int:
+    root = root or os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    sys.path.insert(0, os.path.join(root, "src"))
+    sys.path.insert(0, root)                      # benchmarks package
+    failures = check_refs(root) + check_tier1_command(root)
+    for f in failures:
+        print(f"DOC DRIFT: {f}", file=sys.stderr)
+    if not failures:
+        print("docs consistent: all code references resolve, tier-1 "
+              "command agrees")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1] if len(sys.argv) > 1 else None))

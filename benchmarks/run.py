@@ -57,6 +57,8 @@ EXPECTED_GATES = {
               "tree_matched_wire"),
     "tree_comms": ("tree_comm_parity", "tree_comm_ledger",
                    "tree_comm_savings"),
+    "streaming": ("streaming_small_m_parity", "streaming_hist_parity",
+                  "streaming_peak_memory", "streaming_sketch_epsilon"),
 }
 
 
@@ -64,7 +66,8 @@ def _suite():
     from benchmarks import (baselines, batched_classify, checkpointing,
                             fault_injection, finite_class, kernel_micro,
                             paper_claims, roofline, serving,
-                            sharded_scenarios, tree_comms, trees)
+                            sharded_scenarios, streaming, tree_comms,
+                            trees)
     return {
         "batched_classify": batched_classify.run_all,
         "serving": serving.run_all,
@@ -85,6 +88,7 @@ def _suite():
         "finite_class": finite_class.run_all,
         "kernel_micro": kernel_micro.run_all,
         "roofline": roofline.run_all,
+        "streaming": streaming.run_all,
     }
 
 

@@ -1,0 +1,259 @@
+"""Streaming tier: memory roofline + throughput for million-point tasks.
+
+Four registered gates (run.py checks each executed — docs/streaming.md
+documents the tier they pin):
+
+* **streaming_small_m_parity** — at small m, `chunk_size` on vs off is
+  BITWISE invisible across all three engines (host loop, batched,
+  sharded): every hypothesis, round count, quarantine mask and ledger
+  bit is equal.  This is the tier's core contract: the chunked sort
+  order is the stable argsort, exactly (`core/streaming.sort_order`).
+* **streaming_hist_parity** — chunked histogram accumulation (ref and
+  interpreted-Pallas routing, batched and unbatched, non-dividing tile
+  sizes) is bitwise equal to the monolithic kernels on dyadic weights.
+* **streaming_peak_memory** — XLA's static buffer assignment
+  (`compiled.memory_analysis()`) for the m-point histogram build: the
+  chunked program's temp bytes must undercut the monolithic program's
+  at the largest m.  Static analysis, not a high-water probe: the gate
+  holds even where actually executing the monolithic program (a ≥ 1 GB
+  one-hot at m = 10^6) would be irresponsible.
+* **streaming_sketch_epsilon** — the bounded-memory quantile sketch's
+  SELF-ACCOUNTED bound is honest (measured sup-loss approximation
+  error ≤ the bound the sketch claims) and lands ≤ the paper's
+  ε = 1/100 at the bench's cap — the pinned ε-approximation guarantee.
+
+Rows: per m ∈ {10^4, 10^5, 10^6}, peak temp bytes (monolithic vs
+chunked, static) and points/sec for the chunked histogram build and
+the sketch build; plus chunked-vs-monolithic end-to-end tasks/sec on
+the batched engine at the parity m.  ``REPRO_BENCH_SMOKE=1`` shrinks
+the grid (CI).
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import batched, classify, sharded_batched, streaming, tasks
+from repro.core import approximation, weak
+from repro.core.types import EPS_APPROX, BoostConfig
+from repro.data import chunks as data_chunks
+from repro.kernels.histogram import ops as hist_ops
+
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+M_GRID = (2_000, 10_000) if SMOKE else (10_000, 100_000, 1_000_000)
+CHUNK = 1_024 if SMOKE else 16_384       # point tile (sort + histogram)
+CAP = 8_192 if SMOKE else 32_768         # sketch capacity
+CORESET = 1_024                          # sketch-coreset slots (ε gate)
+N = 1 << 16                              # integer-track domain
+F, Q, NODES = 8, 32, 4                   # histogram build shape
+PARITY_M = 2_048                         # small-m three-engine parity
+
+
+# ---------------------------------------------------------------------------
+# gates
+# ---------------------------------------------------------------------------
+
+def gate_small_m_parity() -> None:
+    """chunk_size on/off is bitwise invisible to all three engines."""
+    cls = weak.Thresholds(n=N)
+    B, k = 2, 4
+    x, y, _ = tasks.make_batch(cls, B, PARITY_M, k, 5, seed0=3)
+    keys = jax.random.split(jax.random.key(9), B)
+    key_host = jax.random.key(9)
+
+    def run(chunk):
+        cfg = BoostConfig(k=k, coreset_size=64, domain_size=N,
+                          opt_budget=32, chunk_size=chunk)
+        host = classify.run_accurately_classify(
+            jnp.asarray(x[0]), jnp.asarray(y[0]), key_host, cfg, cls)
+        bat = batched.run_accurately_classify_batched(x, y, keys, cfg,
+                                                      cls)
+        shd = sharded_batched.run_accurately_classify_sharded(
+            x, y, keys, cfg, cls)
+        return host, bat, shd
+
+    mono, chk = run(None), run(CHUNK)
+    for name, a, b in (("host", mono[0], chk[0]),
+                       ("batched", mono[1], chk[1]),
+                       ("sharded", mono[2], chk[2])):
+        for field in ("hypotheses", "rounds") if name == "host" else (
+                "hypotheses", "rounds", "ok", "attempts", "disputed"):
+            va = np.asarray(getattr(a, field))
+            vb = np.asarray(getattr(b, field))
+            common.gate("streaming_small_m_parity",
+                        np.array_equal(va, vb),
+                        f"{name}.{field} differs chunked vs monolithic")
+    for b_i in range(B):
+        common.gate("streaming_small_m_parity",
+                    mono[1].ledger(b_i).total_bits
+                    == chk[1].ledger(b_i).total_bits,
+                    f"batched ledger differs at task {b_i}")
+
+
+def gate_hist_parity() -> None:
+    """Chunked accumulation ≡ monolithic kernels, bitwise, on dyadic
+    weights — ref and interpreted-Pallas routing, (un)batched, ragged
+    tiles."""
+    rng = np.random.default_rng(0)
+    interp = jax.default_backend() != "tpu"
+    for c, tile in ((257, 64), (512, 128), (130, 200)):
+        x = jnp.asarray((rng.integers(0, Q, (c, F)) + 0.5) / Q,
+                        jnp.float32)
+        w = jnp.asarray(rng.integers(0, 256, (NODES, c)) / 256.0,
+                        jnp.float32)
+        wy = w * jnp.asarray(rng.choice([-1.0, 1.0], (NODES, c)),
+                             jnp.float32)
+        ref = hist_ops.node_histograms_ref(x, w, wy, Q)
+        for kw in ({"interpret": None}, {"interpret": interp}):
+            got = hist_ops.node_histograms(x, w, wy, Q,
+                                           chunk_size=tile, **kw)
+            common.gate(
+                "streaming_hist_parity",
+                all(np.array_equal(np.asarray(a), np.asarray(b))
+                    for a, b in zip(got, ref)),
+                f"chunked != monolithic at c={c} tile={tile} {kw}")
+        # batched (leading task axis) form
+        xb, wb, wyb = x[None], w[None], wy[None]
+        refb = hist_ops.node_histograms_ref(xb, wb, wyb, Q)
+        gotb = hist_ops.node_histograms_chunked_ref(xb, wb, wyb, Q, tile)
+        common.gate(
+            "streaming_hist_parity",
+            all(np.array_equal(np.asarray(a), np.asarray(b))
+                for a, b in zip(gotb, refb)),
+            f"batched chunked ref != monolithic at c={c} tile={tile}")
+
+
+def _hist_args(m: int, rng):
+    x = jnp.asarray((rng.integers(0, Q, (m, F)) + 0.5) / Q, jnp.float32)
+    w = jnp.asarray(rng.integers(0, 256, (NODES, m)) / 256.0, jnp.float32)
+    wy = w * jnp.asarray(rng.choice([-1.0, 1.0], (NODES, m)), jnp.float32)
+    return x, w, wy
+
+
+def _static_peak(fn, *args) -> int:
+    """Temp-buffer bytes of the compiled program — XLA's static buffer
+    assignment, no execution needed (how the roofline gate can price
+    the 1 GB monolithic one-hot without allocating it)."""
+    mem = jax.jit(fn).lower(*args).compile().memory_analysis()
+    return int(mem.temp_size_in_bytes)
+
+
+def bench_roofline() -> list:
+    rows = []
+    rng = np.random.default_rng(1)
+    mono_peak = chunk_peak = 0
+    for m in M_GRID:
+        x, w, wy = _hist_args(m, rng)
+        mono_peak = _static_peak(
+            lambda a, b, c: hist_ops.node_histograms_ref(a, b, c, Q),
+            x, w, wy)
+        chunk_peak = _static_peak(
+            lambda a, b, c: hist_ops.node_histograms(a, b, c, Q,
+                                                     chunk_size=CHUNK),
+            x, w, wy)
+        hist = jax.jit(lambda a, b, c: hist_ops.node_histograms(
+            a, b, c, Q, chunk_size=CHUNK))
+        us = common.timeit(hist, x, w, wy)
+        rows.append({
+            "bench": "streaming_hist", "m": m,
+            "us_per_call": round(us, 1),
+            "mono_temp_bytes": mono_peak,
+            "chunk_temp_bytes": chunk_peak,
+            "derived": (f"m={m};pts_per_s={round(m / us * 1e6):,};"
+                        f"mono_temp={mono_peak:,};"
+                        f"chunk_temp={chunk_peak:,};chunk={CHUNK}"),
+        })
+    # gate at the largest m: the chunked program must undercut the
+    # monolithic static peak (the whole point of the tier)
+    common.gate("streaming_peak_memory", chunk_peak < mono_peak,
+                f"chunked temp {chunk_peak:,} ≥ monolithic "
+                f"{mono_peak:,} at m={M_GRID[-1]}")
+    return rows
+
+
+def bench_sketch() -> list:
+    rows = []
+    for m in M_GRID:
+        rng = np.random.default_rng(m)
+        x = rng.integers(0, N, size=m).astype(np.int32)
+        y = rng.choice(np.array([-1, 1], np.int8), size=m)
+        hits = rng.integers(0, 13, size=m).astype(np.int32)
+        alive = np.ones(m, bool)
+        w = np.asarray(streaming.sketch_weights(jnp.asarray(hits),
+                                                jnp.asarray(alive)))
+
+        def build():
+            feed = data_chunks.iter_shard_chunks(x, y, w, CHUNK)
+            return streaming.build_sketch(feed, CAP, n=N)
+
+        sk = build()                     # warm/compile
+        t0 = time.perf_counter()
+        sk = build()
+        jax.block_until_ready(sk.x)
+        wall = time.perf_counter() - t0
+        idx = streaming.sketch_coreset(sk, CORESET)
+        bound = float(streaming.coreset_bound(sk, CORESET))
+        theta = np.arange(0, N + 1, 256, dtype=np.int32)
+        grid = jnp.asarray(np.stack(
+            [np.concatenate([theta, theta]),
+             np.concatenate([np.ones_like(theta),
+                             -np.ones_like(theta)])], axis=1))
+
+        def predict(params, pts):
+            return (jnp.where(pts[None, :] <= params[:, 0:1], 1, -1)
+                    * params[:, 1:2])
+
+        measured = float(approximation.approximation_error(
+            idx, jnp.asarray(x), jnp.asarray(y), jnp.asarray(hits),
+            jnp.asarray(alive), predict, grid))
+        common.gate("streaming_sketch_epsilon",
+                    measured <= bound <= EPS_APPROX,
+                    f"m={m}: measured {measured:.5f} ≤ bound "
+                    f"{bound:.5f} ≤ ε={EPS_APPROX} violated")
+        rows.append({
+            "bench": "streaming_sketch", "m": m,
+            "us_per_call": round(wall * 1e6, 1),
+            "derived": (f"m={m};pts_per_s={round(m / wall):,};"
+                        f"cap={CAP};measured={measured:.5f};"
+                        f"bound={bound:.5f};eps={EPS_APPROX}"),
+        })
+    return rows
+
+
+def bench_engine_throughput() -> list:
+    """End-to-end chunked vs monolithic batched protocol at parity m."""
+    cls = weak.Thresholds(n=N)
+    B, k = 2, 4
+    x, y, _ = tasks.make_batch(cls, B, PARITY_M, k, 5, seed0=3)
+    keys = jax.random.split(jax.random.key(9), B)
+    rows = []
+    for label, chunk in (("monolithic", None), ("chunked", CHUNK)):
+        cfg = BoostConfig(k=k, coreset_size=64, domain_size=N,
+                          opt_budget=32, chunk_size=chunk)
+        run = batched.run_accurately_classify_batched
+        run(x, y, keys, cfg, cls)        # warm
+        t0 = time.perf_counter()
+        run(x, y, keys, cfg, cls)
+        wall = time.perf_counter() - t0
+        rows.append({
+            "bench": f"streaming_engine_{label}", "m": PARITY_M,
+            "us_per_call": round(wall * 1e6, 1),
+            "derived": (f"tasks_per_s={round(B / wall, 1)};"
+                        f"chunk={chunk};m={PARITY_M}"),
+        })
+    return rows
+
+
+def run_all() -> list:
+    gate_small_m_parity()
+    gate_hist_parity()
+    rows = bench_roofline()
+    rows += bench_sketch()
+    rows += bench_engine_throughput()
+    return rows

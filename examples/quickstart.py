@@ -44,3 +44,14 @@ print(f"communication        = {result.ledger.total_bits:,} bits")
 print(f"send-raw-data        = {naive:,} bits")
 print(f"quarantined points   = {result.dispute_count}")
 assert errors <= opt
+
+# Where to go from here: the same protocol scales along three axes.
+#   batch:  python -m repro.launch.serve --workload classify --batch 32
+#   class:  add --cls tree --tree-depth 2, and pick how tree growth
+#           crosses the wire with --comm-mode {coreset,histogram,voting}
+#           (+ --vote-topk N for voting) — see docs/ledger.md for what
+#           each mode pays per round
+#   data:   BoostConfig(chunk_size=...) streams m >= 10^6 points
+#           (docs/streaming.md)
+print("next: python -m repro.launch.serve --workload classify "
+      "--cls tree --comm-mode voting --vote-topk 1")

@@ -58,7 +58,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.ckpt import msgpack_ckpt
-from repro.core import boost_attempt, classify, ledger as L, weak
+from repro.core import boost_attempt, classify, ledger as L, streaming, weak
 from repro.core import weights as W
 from repro.core.types import BoostConfig, ClassifyResult, Ledger
 
@@ -177,9 +177,24 @@ def init_state(x, y, keys, cfg: BoostConfig, alive=None,
                t_buf: int | None = None, cls=None) -> StepState:
     """Fresh protocol state for a [B, k, mloc(, F)] batch.
 
-    ``cls`` sizes the ensemble buffers (``weak.param_dim`` — classes
-    with wider hypothesis vectors than the 4-wide default, e.g. the
-    histogram trees, need it); None keeps the legacy 4-wide layout.
+    Inputs: ``x`` [B, k, mloc] int32 domain points (integer track) or
+    [B, k, mloc, F] float32 feature rows; ``y`` [B, k, mloc] int8 ±1
+    labels; ``keys`` [B] PRNG keys (one per task); ``alive`` optional
+    [B, k, mloc] bool (False = padding rows, masked out of every
+    coreset, weight sum and ledger charge); ``t_buf`` ensemble-buffer
+    rounds (defaults to ``cfg.num_rounds(k·mloc)``).  ``cls`` sizes
+    the ensemble buffers (``weak.param_dim`` — classes with wider
+    hypothesis vectors than the 4-wide default, e.g. the histogram
+    trees, need it); None keeps the legacy 4-wide layout.
+
+    Returns a ``StepState`` — a plain pytree of device arrays (int32
+    counters, bool masks, float32 ensemble/coreset buffers, uint32
+    PRNG key data; no Python objects), so it round-trips through
+    ``ckpt.msgpack_ckpt`` template-free.  Contract: ``init_state`` →
+    ``run_rounds``* → ``finalize`` in ANY slicing is bit-identical to
+    the single-dispatch engine run, which is itself bit-identical to
+    the host reference loop given the same keys (docs/architecture.md;
+    pinned in tests/test_batched.py, tests/test_fault_tolerance.py).
     """
     x = jnp.asarray(x)
     y = jnp.asarray(y)
@@ -302,7 +317,10 @@ def _run_steps(x, y, sched, state: StepState, n, cfg: BoostConfig,
     """Advance every active task by up to ``n`` wire rounds (traced)."""
     a_max = cfg.opt_budget + 1
     x1d = x if x.ndim == 3 else x[..., 0]
-    x_orders = jax.vmap(jax.vmap(jnp.argsort))(x1d)   # hoisted per slice
+    # hoisted per slice; chunk-local runs under cfg.chunk_size (bitwise
+    # identical to the monolithic argsort — streaming tier)
+    x_orders = jax.vmap(jax.vmap(lambda v: streaming.sort_order(
+        v, cfg.chunk_size, cfg.domain_size)))(x1d)
 
     def active(s: StepState):
         return (~s.done) & (s.attempt < a_max)
@@ -332,8 +350,26 @@ def _run_rounds_jit(x, y, sched, state, n, cfg, cls):
 def run_rounds(state: StepState, x, y, cfg: BoostConfig, cls,
                n: int | None = None, player_sched=None) -> StepState:
     """Advance the protocol by up to ``n`` wire rounds (None = to
-    completion).  ``n`` is traced — every slice size shares one
-    compiled program per input signature."""
+    completion).
+
+    ``state``: a ``StepState`` from :func:`init_state` (or a restored
+    checkpoint of one); ``x``/``y``: the SAME [B, k, mloc(, F)] /
+    [B, k, mloc] arrays the state was initialised with (data stays
+    outside the state so checkpoints hold O(state), not O(m));
+    ``player_sched``: optional [R, k] or [B, R, k] bool per-wire-round
+    player-alive schedule (see :func:`canon_player_sched`).  Returns
+    the advanced ``StepState``; tasks already done pass through
+    unchanged.
+
+    ``n`` is traced — every slice size shares one compiled program per
+    input signature, so preempting at an arbitrary round never
+    recompiles.  Bitwise contract: any slicing (1/3/7/… rounds per
+    call) produces the same final state, bit for bit, as one
+    ``n=None`` call (tests/test_fault_tolerance.py); with
+    ``cfg.chunk_size`` set, the chunked sort path is bitwise identical
+    to the monolithic argsort, so slicing AND chunking are both
+    invisible in every output (docs/streaming.md,
+    tests/test_streaming.py)."""
     x = jnp.asarray(x)
     y = jnp.asarray(y)
     B, k = x.shape[0], x.shape[1]
@@ -449,7 +485,9 @@ class BatchedClassifyResult:
     def ledger(self, b: int) -> Ledger:
         """Bit-identical to the Ledger the reference loop accumulates
         (all players alive); under a dropout mask, charges only bits
-        alive players actually sent."""
+        alive players actually sent.  docs/ledger.md walks every
+        charge; the sharded twin's ``validate_ledger`` cross-checks
+        the same numbers against measured collective payloads."""
         cfg, cls = self.cfg, self.cls
         k, mloc = self.x.shape[1], self.x.shape[2]
         n = L.domain_size(cls)
@@ -505,7 +543,21 @@ class BatchedClassifyResult:
 
 def finalize(state: StepState, x, y, alive0, cfg: BoostConfig, cls,
              m_true=None) -> BatchedClassifyResult:
-    """Materialise a (host) result from stepped protocol state."""
+    """Materialise a (host) result from stepped protocol state.
+
+    ``state``: a completed (or mid-protocol) ``StepState``;
+    ``x``/``y``/``alive0``: the dispatch inputs, kept on the result
+    for per-task reconstruction (``per_task``/``classifier``);
+    ``m_true``: optional [B] int true sample sizes — when the serving
+    layer padded shards up to a bucket mloc, the ledger's dispute-bit
+    width must charge the request's own ⌈log2 m⌉, not the padded
+    capacity.  Returns a ``BatchedClassifyResult`` of host numpy
+    arrays: ``hypotheses`` [B, t_buf, P] float32, ``rounds``/
+    ``attempts`` [B] int32, ``ok`` [B] bool, ``alive``/``disputed``
+    [B, k, mloc] bool, plus per-attempt histories [B, A].  Pure
+    materialisation — no protocol math happens here, so finalizing a
+    restored checkpoint equals finalizing the original state bit for
+    bit (tests/test_preemption.py)."""
     out = jax.device_get(state)
     return BatchedClassifyResult(
         hypotheses=out.h_params, rounds=out.rounds,

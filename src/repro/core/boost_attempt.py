@@ -46,7 +46,7 @@ else:
                               out_specs=out_specs, check_rep=False)
 
 from repro.core import approximation, weights as W
-from repro.core import weak
+from repro.core import streaming, weak
 from repro.core.types import BoostAttemptResult, BoostConfig
 
 
@@ -169,9 +169,12 @@ def boost_attempt_arrays(x, y, alive, hits0, key, cfg: BoostConfig, cls,
 
     # §Perf P1: loop-invariant per-player argsort hoisted out of the
     # round loop; §Perf P4: so are the y/alive gathers into sorted space.
+    # With cfg.chunk_size the order is built from chunk-local sorted
+    # runs (streaming tier) — bitwise identical, never sorts > a chunk.
     if x_orders is None:
         x1d = x if x.ndim == 2 else x[:, :, 0]
-        x_orders = jax.vmap(jnp.argsort)(x1d)
+        x_orders = jax.vmap(lambda v: streaming.sort_order(
+            v, cfg.chunk_size, cfg.domain_size))(x1d)
     y_sorted = jnp.take_along_axis(y, x_orders, axis=1)
     alive_sorted = jnp.take_along_axis(alive, x_orders, axis=1)
     return jax.lax.while_loop(
@@ -230,9 +233,12 @@ def boost_attempt_sharded(mesh, cfg: BoostConfig, cls, num_rounds: int,
         xl = x[None]
         yl, al, hl = y[None], alive[None], hits[None]
         # §Perf P1: the domain points are loop-invariant — sort once
-        # outside the round loop instead of inside every coreset build.
+        # outside the round loop instead of inside every coreset build
+        # (chunk-local runs under cfg.chunk_size, bitwise identical).
         x1d = xl[0] if xl.ndim == 2 else xl[0, :, 0]
-        x_order = jnp.argsort(x1d) if cfg.deterministic_coreset else None
+        x_order = (streaming.sort_order(x1d, cfg.chunk_size,
+                                        cfg.domain_size)
+                   if cfg.deterministic_coreset else None)
         y_sorted = yl[0][x_order] if x_order is not None else None
         alive_sorted = al[0][x_order] if x_order is not None else None
 

@@ -67,7 +67,8 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.ckpt import msgpack_ckpt
-from repro.core import approximation, batched, classify, ledger as L, weak
+from repro.core import approximation, batched, classify, ledger as L
+from repro.core import streaming, weak
 from repro.core import weights as W
 from repro.core.boost_attempt import _center_erm, _gather_coreset, _shard_map
 from repro.core.types import BoostConfig
@@ -293,10 +294,20 @@ def init_state_sharded(x, y, keys, cfg: BoostConfig, alive=None,
     """Fresh sharded-engine state (global [B, …] arrays; the shard_map
     call partitions the player-sharded fields per its in_specs).
 
-    The protocol fields ARE ``batched.init_state``'s — built by it, so
-    the two engines' state layouts (and checkpoint shape contracts) can
-    never drift; only the wire-payload counters are sharded-specific.
-    ``cls`` sizes the ensemble buffers, exactly as there.
+    Same input shapes/dtypes as ``batched.init_state``: ``x``
+    [B, k, mloc] int32 or [B, k, mloc, F] float32, ``y`` [B, k, mloc]
+    int8 ±1, ``keys`` [B] PRNG keys, ``alive`` optional [B, k, mloc]
+    bool.  Returns a dict state: the protocol fields ARE
+    ``batched.init_state``'s — built by it, so the two engines' state
+    layouts (and checkpoint shape contracts) can never drift — plus
+    int32 [B] / [B, A] wire-payload counters (gathered coreset
+    examples, weight-sum scalars, histogram scalars, vote proposals,
+    collective bytes) that only this engine maintains.  ``cls`` sizes
+    the ensemble buffers, exactly as there.  Bitwise contract: the
+    protocol fields evolve identically to the local batched engine's
+    on any mesh shape (docs/architecture.md,
+    tests/test_sharded_batched.py); the counters feed
+    ``ShardedClassifyResult.validate_ledger`` (docs/ledger.md).
     """
     state = batched.init_state(jnp.asarray(x), jnp.asarray(y), keys,
                                cfg, alive=alive, t_buf=t_buf,
@@ -439,7 +450,10 @@ def _build_sharded_step(mesh: Mesh, cfg: BoostConfig, cls,
 
     def per_device(x, y, sched, state, n):
         x1d = x if x.ndim == 3 else x[..., 0]
-        x_orders = jax.vmap(jax.vmap(jnp.argsort))(x1d)
+        # chunk-local runs under cfg.chunk_size, bitwise identical to
+        # the monolithic argsort (streaming tier)
+        x_orders = jax.vmap(jax.vmap(lambda v: streaming.sort_order(
+            v, cfg.chunk_size, cfg.domain_size)))(x1d)
 
         def active(st):
             return (~st["done"]) & (st["attempt"] < a_max)
@@ -474,7 +488,20 @@ def run_rounds_sharded(state: dict, x, y, cfg: BoostConfig, cls,
                        mesh: Mesh | None = None, n: int | None = None,
                        player_sched=None, no_center: bool = False) -> dict:
     """Advance the sharded protocol by up to ``n`` wire rounds (None =
-    to completion); the mesh-collective twin of ``batched.run_rounds``."""
+    to completion); the mesh-collective twin of ``batched.run_rounds``.
+
+    ``state``: the dict from :func:`init_state_sharded` (or a restored
+    checkpoint); ``x``/``y``: the same [B, k, mloc(, F)] / [B, k, mloc]
+    dispatch arrays; ``mesh``: a ``players`` mesh whose axis size
+    divides k (default ``make_players_mesh(k)``); ``player_sched``:
+    [R, k] / [B, R, k] bool infrastructure-adversary schedule;
+    ``no_center``: the §2.2 center-free model.  Returns the advanced
+    dict.  ``n`` is traced (one compiled program per signature, any
+    slice size).  Bitwise contract: identical slicing ⇒ protocol
+    fields identical to ``batched.run_rounds`` on the same inputs —
+    the collectives change WHERE bytes move, never a single output
+    bit — and ``cfg.chunk_size`` is equally invisible here
+    (docs/streaming.md, tests/test_streaming.py)."""
     x = jnp.asarray(x)
     y = jnp.asarray(y)
     B, k = x.shape[0], x.shape[1]
@@ -548,6 +575,8 @@ class ShardedClassifyResult(batched.BatchedClassifyResult):
     def validate_ledger(self, b: int) -> dict:
         """Cross-check Theorem 4.1 accounting against measured payloads.
 
+        docs/ledger.md walks the accounting this validates, field by
+        field, with a worked example and the masked variants.
         Raises AssertionError on any mismatch; returns the comparison.
         Checks, per task (all player-mask-aware — under a dropout
         schedule only alive players' payloads are charged):
@@ -632,7 +661,16 @@ class ShardedClassifyResult(batched.BatchedClassifyResult):
 def finalize_sharded(state: dict, x, y, alive0, cfg: BoostConfig, cls,
                      m_true=None, mesh: Mesh | None = None,
                      ) -> ShardedClassifyResult:
-    """Materialise a host result from stepped sharded state."""
+    """Materialise a host result from stepped sharded state.
+
+    Same inputs as ``batched.finalize`` plus the state dict's wire
+    counters.  Returns a ``ShardedClassifyResult``: every
+    ``BatchedClassifyResult`` field (same shapes/dtypes — hypotheses
+    [B, t_buf, P] float32, [B] int32 counters, [B, k, mloc] bool
+    masks) plus the measured collective payloads ([B, A] int32
+    ``hist_wire_*``, [B] int32 ``wire_*``) that
+    ``validate_ledger`` checks against the Theorem 4.1 accounting
+    (docs/ledger.md).  Pure materialisation, no protocol math."""
     out = jax.device_get(state)
     return ShardedClassifyResult(
         hypotheses=out["h_params"], rounds=out["rounds"],

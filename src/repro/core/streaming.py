@@ -1,0 +1,421 @@
+"""Mergeable streaming summaries — the large-m execution tier.
+
+Every engine used to assume a task's m points fit one device-resident
+buffer AND one monolithic sort: the per-player ``argsort(x)`` the
+deterministic coreset hoists (§Perf P1) is the protocol's only
+m-superlinear op, and XLA:CPU's variadic comparator sort is the cliff
+the roadmap notes (``weak._sorted_prefix`` packs (x, idx) into one
+int32 key to dodge it, but the pack needs ``n·m < 2³¹`` — dead at
+m = 10⁶ on the default 2¹⁶ domain).  This module scales the data axis
+with two constructions, both built from the same primitive — a
+**chunk-local sorted summary** ``(x sorted ascending, original index)``
+merged associatively:
+
+1. :func:`sort_order` — the EXACT path.  Sort each ``chunk_size`` tile
+   (each tile small enough for the packed single-operand fast sort),
+   then merge pairs with a searchsorted/scatter two-pointer merge (no
+   comparator sort anywhere).  Ties resolve lower-index-first at every
+   level, so the result is **bitwise identical to the stable
+   ``jnp.argsort``** — downstream (quantile levels, cumsums, coreset
+   indices, hypotheses, ledgers) cannot tell the paths apart.  This is
+   what ``BoostConfig.chunk_size`` switches on inside all three
+   engines; parity is pinned in tests/test_streaming.py.
+
+2. :class:`QuantileSketch` — the BOUNDED-MEMORY path.  A capacity-``cap``
+   summary whose entries each represent a *segment* of the weighted
+   point sequence (per-label masses ``wp``/``wn`` plus one genuine
+   representative point per label); chunks enter via
+   :func:`sketch_from_chunk`, merge via :func:`merge_sketches` (a
+   two-pointer interleave — each side pays the other's segment
+   granularity in rank error), and :func:`compress_sketch` folds
+   mass-balanced buckets together, setting the granularity the next
+   merge will charge.  :func:`build_sketch` arranges the merges in a
+   logarithmic level buffer so the accumulated error is
+   O(log(m/chunk) · W/cap), not O(m/chunk · W/cap).  The bound is
+   **self-accounted**: like the communication ledger, the structure
+   carries the price of every approximation it made, and
+   :func:`coreset_bound` turns it into a sup-loss ε the pinned test
+   (and the streaming benchmark gate) checks against the measured
+   ``approximation.approximation_error``.
+
+The sketch replaces the full-sample sort with O(m/chunk) chunk sorts
+plus O(cap) state — one pass, transfer overlappable with
+``repro.data.chunks.prefetch_to_device``.  The exact path keeps O(m)
+state (the order itself is O(m)) but never materialises a sort larger
+than ``chunk_size`` and never hits the comparator-sort cliff.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# A chunk this size always fits the packed int32 single-operand sort
+# for domains up to n = 2^16 (n·chunk < 2^31) — the default tile.
+DEFAULT_CHUNK = 1 << 14
+
+
+# ---------------------------------------------------------------------------
+# The primitive: merge two sorted runs without a comparator sort.
+# ---------------------------------------------------------------------------
+
+def merge_sorted(xa, ia, xb, ib):
+    """Merge two sorted summaries; ties place a-entries first.
+
+    xa/xb ascending (each with its payload ia/ib in the same order) →
+    (x, i) of length |a|+|b|, ascending, equal-x runs ordered a before
+    b (and within each input, in input order).  When every a-index is
+    smaller than every b-index — adjacent chunks merged in chunk order,
+    the only way the callers below build runs — the tie rule equals
+    global lower-index-first, i.e. the STABLE sort order.
+
+    Implementation is two searchsorted rank computations + scatters
+    (the classic parallel two-pointer merge): a[j] lands at
+    ``j + rank_left(b, a[j])``, b[j] at ``j + rank_right(a, b[j])`` —
+    all positions distinct by construction, no sort involved.
+    """
+    na, nb = xa.shape[0], xb.shape[0]
+    pa = jnp.arange(na, dtype=jnp.int32) \
+        + jnp.searchsorted(xb, xa, side="left").astype(jnp.int32)
+    pb = jnp.arange(nb, dtype=jnp.int32) \
+        + jnp.searchsorted(xa, xb, side="right").astype(jnp.int32)
+    x = jnp.zeros((na + nb,), xa.dtype).at[pa].set(xa).at[pb].set(xb)
+    i = jnp.zeros((na + nb,), ia.dtype).at[pa].set(ia).at[pb].set(ib)
+    return x, i
+
+
+def _chunk_order(xc, n: int | None):
+    """Stable sort order of one chunk — packed single-operand fast path
+    when the caller certifies an integer domain [0, n) that fits
+    (``weak._sorted_prefix``'s trick, per tile instead of per shard)."""
+    t = xc.shape[0]
+    if (n is not None and 0 < n * t < 2 ** 31
+            and jnp.issubdtype(xc.dtype, jnp.integer)):
+        keys = xc.astype(jnp.int32) * t + jnp.arange(t, dtype=jnp.int32)
+        keys_s = jnp.sort(keys)
+        return keys_s % t
+    return jnp.argsort(xc)
+
+
+def chunk_runs(x, chunk_size: int, n: int | None = None):
+    """Chunk-local sorted summaries of a 1-D array, in chunk order:
+    list of (values ascending, original indices), one per tile."""
+    m = x.shape[0]
+    runs = []
+    for s in range(0, m, chunk_size):
+        xc = jax.lax.slice_in_dim(x, s, min(s + chunk_size, m))
+        o = _chunk_order(xc, n)
+        runs.append((xc[o], (o + s).astype(jnp.int32)))
+    return runs
+
+
+def merge_runs(runs):
+    """Associative pairwise reduction of adjacent sorted runs (adjacency
+    keeps the lower-index-first tie rule global — see merge_sorted)."""
+    while len(runs) > 1:
+        runs = [merge_sorted(*runs[i], *runs[i + 1])
+                if i + 1 < len(runs) else runs[i]
+                for i in range(0, len(runs), 2)]
+    return runs[0]
+
+
+def sort_order(x, chunk_size: int | None = None, n: int | None = None):
+    """Stable argsort of a 1-D array, chunked when asked.
+
+    ``chunk_size=None`` (or ≥ m) IS ``jnp.argsort(x)`` — the exact op
+    the engines always ran, so the default path cannot drift.  With a
+    chunk size, the order is built from chunk-local sorts + merges and
+    is bitwise identical to the monolithic argsort (stable tie-breaking
+    included); no sort larger than ``chunk_size`` ever runs, and each
+    tile takes the packed int32 fast path when ``n`` (the domain size)
+    certifies ``n·chunk_size < 2³¹``.  vmap-safe: everything is
+    searchsorted/gather/scatter with static shapes.
+    """
+    m = x.shape[0]
+    if chunk_size is None or chunk_size >= m:
+        return jnp.argsort(x)
+    if chunk_size < 1:
+        raise ValueError(f"chunk_size must be ≥ 1, got {chunk_size}")
+    return merge_runs(chunk_runs(x, chunk_size, n))[1]
+
+
+# ---------------------------------------------------------------------------
+# Bounded-memory quantile-coreset sketch.
+# ---------------------------------------------------------------------------
+
+class QuantileSketch(NamedTuple):
+    """Capacity-bounded mergeable summary of a weighted labelled sample.
+
+    Entry j represents a contiguous *segment* of the x-sorted sample:
+    ``x[j]`` is the segment's last member (the merge ordering key),
+    ``wp[j]``/``wn[j]`` its total positive/negative label mass, and
+    ``ip[j]``/``i_n[j]`` the global indices of a genuinely-positive /
+    genuinely-negative member whose per-label rank equals the segment
+    end's cumulative label mass (−1 while the label hasn't appeared) —
+    a folded segment mixes labels, so one representative per label is
+    the only way a selection can promise the label it ships.
+
+    The error state is the sketch's self-accounting (the ledger ethos:
+    carry the exact price of every approximation made):
+
+    * ``err_p``/``err_n`` — how far any entry's recorded cumulative
+      label mass may sit from its true rank.  Zero for fresh chunks;
+      **merging adds the partner's granularity** (a folded segment of
+      one sketch is attributed wholesale at its key's position among
+      the other's entries, misplacing at most one segment's mass —
+      ``max(err_a + gran_b, err_b + gran_a)``), compression adds
+      nothing (kept entries keep their cumulative masses).
+    * ``gran_p``/``gran_n`` — the largest per-label segment mass: the
+      gap between a quantile level and the first entry at-or-past it.
+      Zero while segments are single points; set by compression.
+
+    A selected representative's true label rank is within
+    ``err + gran`` of its quantile level — :func:`coreset_bound` turns
+    that into the sup-loss ε the pinned test checks.
+    """
+
+    x: jax.Array       # [cap] segment-end points, ascending (merge key)
+    wp: jax.Array      # [cap] f32 segment mass with label +1
+    wn: jax.Array      # [cap] f32 segment mass with label −1
+    ip: jax.Array      # [cap] int32 positive representative (−1 = none)
+    i_n: jax.Array     # [cap] int32 negative representative (−1 = none)
+    err_p: jax.Array   # f32 — rank-error bound, positive mass
+    err_n: jax.Array   # f32 — rank-error bound, negative mass
+    gran_p: jax.Array  # f32 — max positive segment mass
+    gran_n: jax.Array  # f32 — max negative segment mass
+
+
+def sketch_weights(hits, alive):
+    """The engines' unnormalised MW weights (quantile levels are
+    scale-free): 2^{−(hits−min alive hits)}, 0 on dead rows — the same
+    max-shifted form ``approximation.quantile_coreset`` uses."""
+    hmin = jnp.min(jnp.where(alive, hits, jnp.iinfo(hits.dtype).max))
+    shift = jnp.clip((hits - hmin).astype(jnp.float32), 0.0, 126.0)
+    return jnp.where(alive, jnp.exp2(-shift), 0.0)
+
+
+def _rep_floor(dtype):
+    """Sentinel ordering key for an absent representative — below every
+    real point so a forward-fill max never picks it."""
+    if jnp.issubdtype(dtype, jnp.integer):
+        return jnp.array(jnp.iinfo(dtype).min, dtype)
+    return jnp.array(-jnp.inf, dtype)
+
+
+def _ffill_max(xv, iv):
+    """Running max-by-key forward fill: position e gets the (key,
+    payload) pair with the largest key among entries ≤ e (ties → the
+    later entry).  Turns per-entry label representatives into
+    last-seen-label-point-so-far — the refresh every merge needs so a
+    segment's representative never goes stale behind interleaved mass
+    from the partner sketch."""
+    def op(a, b):
+        ax, ai = a
+        bx, bi = b
+        take_b = bx >= ax
+        return (jnp.where(take_b, bx, ax), jnp.where(take_b, bi, ai))
+    return jax.lax.associative_scan(op, (xv, iv))
+
+
+def sketch_from_chunk(x, y, w, start,
+                      n: int | None = None) -> QuantileSketch:
+    """Exact single-point-segment sketch of one chunk.
+
+    x [t] points, y [t] ±1 labels, w [t] ≥ 0 weights; ``start`` is the
+    chunk's offset in the global sample (indices are global; pass it as
+    an array so one compiled program serves every chunk).  The chunk is
+    sorted locally (fast path under the same ``n`` certificate as
+    :func:`sort_order`) — err and gran are zero: every segment is one
+    point and every cumulative mass exact.
+    """
+    o = _chunk_order(x, n)
+    xs = x[o]
+    ws = w[o]
+    pos = y[o] > 0
+    gi = (o + jnp.asarray(start, jnp.int32)).astype(jnp.int32)
+    floor = _rep_floor(xs.dtype)
+    _, ip = _ffill_max(jnp.where(pos, xs, floor),
+                       jnp.where(pos, gi, -1))
+    _, i_n = _ffill_max(jnp.where(pos, floor, xs),
+                        jnp.where(pos, -1, gi))
+    zero = jnp.float32(0)
+    return QuantileSketch(
+        x=xs,
+        wp=jnp.where(pos, ws, 0.0), wn=jnp.where(pos, 0.0, ws),
+        ip=ip, i_n=i_n,
+        err_p=zero, err_n=zero, gran_p=zero, gran_n=zero)
+
+
+def merge_sketches(a: QuantileSketch, b: QuantileSketch) -> QuantileSketch:
+    """Associative merge: interleave the segment lists by key (two-
+    pointer merge, no sort) and refresh representatives.
+
+    The price of merging FOLDED sketches: a segment is attributed
+    wholesale at its key, but its members spread down to the previous
+    key, so each side's cumulative masses pick up rank error bounded by
+    the *other* side's segment granularity (at most one partner segment
+    straddles any point):
+
+        err_label := err_a + err_b + gran_a + gran_b
+
+    Merging exact sketches (gran 0) is free — the textbook mergeable-
+    summary law, priced per label from the actual operands.
+    Representatives are re-forward-filled across the interleaved list
+    so each entry points at the last known point of its label, which is
+    what keeps the selection's shipped label honest."""
+    na, nb = a.x.shape[0], b.x.shape[0]
+    x, j = merge_sorted(a.x, jnp.arange(na, dtype=jnp.int32),
+                        b.x, jnp.arange(nb, dtype=jnp.int32) + na)
+
+    def pick(fa, fb):
+        return jnp.concatenate([fa, fb])[j]
+
+    wp, wn = pick(a.wp, b.wp), pick(a.wn, b.wn)
+    floor = _rep_floor(x.dtype)
+    # Representative keys: a rep is a real point ≤ its segment key, so
+    # the segment key upper-bounds it; forward-filling with the key as
+    # ordering proxy keeps "latest label point at-or-before here".
+    _, ip = _ffill_max(jnp.where(pick(a.ip, b.ip) >= 0, x, floor),
+                       pick(a.ip, b.ip))
+    _, i_n = _ffill_max(jnp.where(pick(a.i_n, b.i_n) >= 0, x, floor),
+                        pick(a.i_n, b.i_n))
+    return QuantileSketch(
+        x=x, wp=wp, wn=wn, ip=ip, i_n=i_n,
+        err_p=a.err_p + b.err_p + a.gran_p + b.gran_p,
+        err_n=a.err_n + b.err_n + a.gran_n + b.gran_n,
+        gran_p=jnp.maximum(a.gran_p, b.gran_p),
+        gran_n=jnp.maximum(a.gran_n, b.gran_n))
+
+
+def compress_sketch(s: QuantileSketch, cap: int) -> QuantileSketch:
+    """Fold a sketch down to ``cap`` segments, paying the exact price.
+
+    Buckets are MASS-balanced, not index-balanced: bucket j ends at the
+    first entry whose cumulative total mass reaches ``(j+1)·W/cap``, so
+    a bucket's mass is ≤ W/cap + one entry's mass even under the
+    protocol's exponentially skewed MW weights (index-uniform buckets
+    degrade with skew — measured, not guessed).  Each bucket folds to
+    one segment at its LAST entry, keeping that entry's cumulative
+    masses (compression does NOT move err) and its forward-filled
+    per-label representatives.  What it does move is GRANULARITY — the
+    largest per-label segment mass, the gap a quantile query can land
+    inside and the misattribution the next merge will charge:
+
+        gran_label := max_j bucket_mass_label(j)
+
+    — accumulated numerically from the masses actually folded, not a
+    formula: the bound is exact for the compression that actually
+    happened.  No-op when the sketch already fits."""
+    m = s.x.shape[0]
+    if m <= cap:
+        return s
+    cwp = jnp.cumsum(s.wp)
+    cwn = jnp.cumsum(s.wn)
+    cw = cwp + cwn
+    levels = (jnp.arange(1, cap + 1, dtype=jnp.float32) / cap) * cw[-1]
+    ends = jnp.clip(jnp.searchsorted(cw, levels, side="left"), 0, m - 1)
+    ends = ends.at[-1].set(m - 1)          # total mass is always kept
+    seg_wp = jnp.diff(cwp[ends], prepend=0.0)
+    seg_wn = jnp.diff(cwn[ends], prepend=0.0)
+    return QuantileSketch(
+        x=s.x[ends], wp=seg_wp, wn=seg_wn,
+        ip=s.ip[ends], i_n=s.i_n[ends],
+        err_p=s.err_p, err_n=s.err_n,
+        gran_p=jnp.maximum(s.gran_p, jnp.max(seg_wp)),
+        gran_n=jnp.maximum(s.gran_n, jnp.max(seg_wn)))
+
+
+@partial(jax.jit, static_argnames="cap")
+def _merge_compress(a: QuantileSketch, b: QuantileSketch,
+                    cap: int) -> QuantileSketch:
+    return compress_sketch(merge_sketches(a, b), cap)
+
+
+def build_sketch(chunks, cap: int, n: int | None = None) -> QuantileSketch:
+    """One-pass bounded-memory sketch of a chunked stream.
+
+    ``chunks`` yields (x [t], y [t], w [t], start) tuples in index
+    order (see ``repro.data.chunks`` for the double-buffered device
+    feed).  Merges are arranged in a LOGARITHMIC level buffer (the
+    classic mergeable-summary schedule): level ℓ holds at most one
+    sketch covering 2^ℓ chunks, and two same-level sketches merge and
+    promote.  Each merge charges the operands' granularity, so error
+    accumulates like the merge-tree DEPTH — O(log(m/chunk) · W/cap) —
+    instead of once per chunk; state never exceeds
+    O(cap · log(m/chunk)) entries.  Returns the compressed sketch —
+    its err/gran fields price everything that happened.
+    """
+    levels: list[QuantileSketch | None] = []
+    seen = False
+    for x, y, w, start in chunks:
+        seen = True
+        s = sketch_from_chunk(jnp.asarray(x), jnp.asarray(y),
+                              jnp.asarray(w), start, n)
+        s = compress_sketch(s, cap)
+        i = 0
+        while i < len(levels) and levels[i] is not None:
+            s = _merge_compress(levels[i], s, cap)   # older side first
+            levels[i] = None
+            i += 1
+        if i == len(levels):
+            levels.append(s)
+        else:
+            levels[i] = s
+    if not seen:
+        raise ValueError("empty chunk stream")
+    acc = None
+    for s in reversed(levels):                       # oldest level first
+        if s is None:
+            continue
+        acc = s if acc is None else merge_sketches(acc, s)
+    return compress_sketch(acc, cap)
+
+
+def sketch_coreset(s: QuantileSketch, c: int) -> jax.Array:
+    """[c] global indices — ``approximation.quantile_coreset``'s
+    per-label weighted-quantile selection, run on sketch segments.
+
+    Same construction, same float ops: allocate c± ∝ W± slots, take
+    mass-quantile levels (j+½)/c± within each label, searchsorted into
+    the per-label cumulative masses, ship the landing segment's
+    representative OF THAT LABEL.  On an uncompressed sketch of the
+    whole sample this selects exactly the monolithic coreset's indices
+    (pinned in tests/test_streaming.py); on a compressed one each
+    selected point's label rank is within the self-accounted
+    ``err + gran`` of its level."""
+    cum = jnp.cumsum(jnp.stack([s.wp, s.wn]), axis=-1)      # [2, cap]
+    w_pos, w_neg = cum[0, -1], cum[1, -1]
+    has_pos = w_pos > 1e-12
+    has_neg = w_neg > 1e-12
+    c_pos = jnp.round(c * w_pos
+                      / jnp.maximum(w_pos + w_neg, 1e-30)).astype(jnp.int32)
+    c_pos = jnp.clip(c_pos, jnp.where(has_pos, 1, 0),
+                     c - jnp.where(has_neg, 1, 0))
+    j = jnp.arange(c, dtype=jnp.float32)
+    c_posf = jnp.maximum(c_pos.astype(jnp.float32), 1.0)
+    c_negf = jnp.maximum((c - c_pos).astype(jnp.float32), 1.0)
+    lvls = jnp.stack([(j + 0.5) * w_pos / c_posf,
+                      (j - c_posf + 0.5) * w_neg / c_negf])  # [2, c]
+    i2 = jnp.clip(jax.vmap(jnp.searchsorted)(cum, lvls), 0,
+                  s.x.shape[0] - 1)
+    pos_sel = jnp.arange(c) < c_pos
+    return jnp.where(pos_sel, s.ip[i2[0]], s.i_n[i2[1]])
+
+
+def coreset_bound(s: QuantileSketch, c: int) -> jax.Array:
+    """Sup-loss ε the sketch guarantees for a size-c coreset.
+
+    The monolithic per-label quantile coreset has discrepancy ≤ 2/c per
+    label class (≤ 4/c total, the ``approximation.quantile_coreset``
+    analysis); on a sketch each selected point's label rank sits within
+    ``err + gran`` of its quantile level, adding ≤ 2·(err+gran)/W per
+    class.  The streaming benchmark and the pinned ε test check the
+    MEASURED ``approximation.approximation_error`` against this."""
+    w_pos = jnp.sum(s.wp)
+    w_neg = jnp.sum(s.wn)
+    rel = ((s.err_p + s.gran_p) / jnp.maximum(w_pos, 1e-30)
+           + (s.err_n + s.gran_n) / jnp.maximum(w_neg, 1e-30))
+    return 4.0 / c + 2.0 * rel

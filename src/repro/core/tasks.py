@@ -126,6 +126,31 @@ def pad_shards(x: np.ndarray, y: np.ndarray, mloc: int):
     return x_pad, y_pad, alive_pad
 
 
+def shard_chunk_feed(task: Task, player: int, chunk_size: int,
+                     weights: np.ndarray | None = None, depth: int = 1,
+                     device=None):
+    """Streaming-tier feed of one player's shard (docs/streaming.md).
+
+    Yields double-buffered device-resident ``(x, y, w, start)`` tiles of
+    ``task.x[player]`` — exactly what
+    ``repro.core.streaming.build_sketch`` consumes, with the transfer of
+    tile i+1 overlapping the accumulation of tile i
+    (``repro.data.chunks.prefetch_to_device``).  ``weights`` defaults to
+    uniform; the int track feeds 1-D domain points, the feature track
+    feeds the first column (the sort axis every engine uses).
+    """
+    from repro.data import chunks
+
+    x = task.x[player]
+    if x.ndim > 1:
+        x = x[:, 0]
+    y = task.y[player]
+    w = (np.ones(y.shape, np.float32) if weights is None
+         else np.asarray(weights, np.float32))
+    return chunks.iter_shard_chunks(x, y, w, chunk_size, depth=depth,
+                                    device=device)
+
+
 def true_opt(task: Task, grid: int = 4096) -> int:
     """Brute-force OPT over a hypothesis grid (exact for small classes).
 

@@ -48,6 +48,12 @@ class BoostConfig:
     deterministic_coreset: bool = True  # quantile coreset (1-D classes) vs
                                         # Gumbel/categorical sampling
     seed: int = 0
+    # Streaming tier (docs/streaming.md): when set, every engine builds
+    # its loop-invariant per-player sort order from chunk-local sorted
+    # runs (repro.core.streaming.sort_order — bitwise identical to the
+    # monolithic argsort) and tree ERMs accumulate histograms over
+    # point tiles of this many examples.  None = monolithic, unchanged.
+    chunk_size: int | None = None
 
     def num_rounds(self, m: int) -> int:
         """T = ceil(6 * log2 |S|) — Theorem 3.1 with the paper's constants."""

@@ -1,7 +1,10 @@
 """Data pipeline: synthetic corpora with example identity, label noise,
 per-example boosting weights and quarantine masks."""
 
+from repro.data.chunks import (iter_chunks, iter_shard_chunks,
+                               prefetch_to_device)
 from repro.data.pipeline import (DataConfig, SyntheticCorpus, make_batch,
                                  batch_specs)
 
-__all__ = ["DataConfig", "SyntheticCorpus", "make_batch", "batch_specs"]
+__all__ = ["DataConfig", "SyntheticCorpus", "make_batch", "batch_specs",
+           "iter_chunks", "iter_shard_chunks", "prefetch_to_device"]

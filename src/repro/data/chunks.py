@@ -1,0 +1,82 @@
+"""Chunked host→device feed for million-point tasks (streaming tier).
+
+A task with m ≥ 10^6 examples should never need a monolithic
+host→device transfer followed by a monolithic consume: the streaming
+consumers (``repro.core.streaming.build_sketch``, the chunked histogram
+accumulators) fold fixed-size tiles, so the feed's job is to hand them
+device-resident tiles while the PREVIOUS tile is still being consumed.
+
+:func:`iter_chunks` is the plain tiler (host arrays in, host views
+out); :func:`prefetch_to_device` wraps any chunk iterator with a
+one-deep double buffer: it issues ``jax.device_put`` for chunk i+1
+before yielding chunk i, so on asynchronous-dispatch backends the PCIe
+copy of the next tile overlaps the accumulation of the current one.
+Order and values are untouched — the streaming paths' bitwise-parity
+contracts hold with or without prefetching (pinned in
+tests/test_streaming.py).
+"""
+
+from __future__ import annotations
+
+from typing import Iterable, Iterator, Sequence
+
+import jax
+import numpy as np
+
+
+def iter_chunks(arrays: Sequence, chunk_size: int) -> Iterator[tuple]:
+    """Tile equal-length host arrays: yields ``(*slices, start)`` per
+    ``chunk_size`` tile, in index order (the last tile may be ragged).
+
+    ``start`` (python int) is the tile's offset in the full sample —
+    the global-index base :func:`repro.core.streaming.sketch_from_chunk`
+    needs.
+    """
+    if chunk_size < 1:
+        raise ValueError(f"chunk_size must be ≥ 1, got {chunk_size}")
+    m = len(arrays[0])
+    for a in arrays[1:]:
+        if len(a) != m:
+            raise ValueError("chunked arrays must share their length "
+                             f"({len(a)} != {m})")
+    for s in range(0, m, chunk_size):
+        yield tuple(a[s:min(s + chunk_size, m)] for a in arrays) + (s,)
+
+
+def prefetch_to_device(chunks: Iterable[tuple], depth: int = 1,
+                       device=None) -> Iterator[tuple]:
+    """Double-buffered device feed over any chunk iterator.
+
+    Keeps ``depth`` chunks (default 1 — classic double buffering) in
+    flight: each chunk's array members are ``jax.device_put`` BEFORE
+    the previous chunk is yielded, so the async transfer overlaps the
+    consumer's accumulation work.  The trailing ``start`` offset (and
+    any other non-array member) passes through untouched; yield order
+    is exactly the input order.
+    """
+    if depth < 1:
+        raise ValueError(f"depth must be ≥ 1, got {depth}")
+
+    def put(chunk: tuple) -> tuple:
+        return tuple(
+            jax.device_put(a, device) if isinstance(a, (np.ndarray,
+                                                        jax.Array))
+            else a
+            for a in chunk)
+
+    buf: list[tuple] = []
+    for chunk in chunks:
+        buf.append(put(chunk))            # issue the copy immediately
+        if len(buf) > depth:
+            yield buf.pop(0)
+    yield from buf
+
+
+def iter_shard_chunks(x: np.ndarray, y: np.ndarray, w: np.ndarray,
+                      chunk_size: int, depth: int = 1,
+                      device=None) -> Iterator[tuple]:
+    """The sketch builder's feed: ``(x, y, w, start)`` tiles of one
+    player's shard, double-buffered onto the device — compose directly
+    with ``streaming.build_sketch(iter_shard_chunks(...), cap)``."""
+    return prefetch_to_device(iter_chunks((x, y, w), chunk_size),
+                              depth=depth, device=device)

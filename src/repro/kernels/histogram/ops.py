@@ -22,7 +22,7 @@ import jax.numpy as jnp
 from repro.kernels.histogram import kernel as K
 from repro.kernels.histogram.ref import (  # noqa: F401  (re-export oracle)
     best_splits_per_feature, best_splits_ref, bin_index,
-    node_histograms_ref, split_err_surface)
+    node_histograms_chunked_ref, node_histograms_ref, split_err_surface)
 
 
 def _pallas_histograms(x, w, wy, bins: int, interpret: bool):
@@ -41,13 +41,58 @@ def _pallas_histograms(x, w, wy, bins: int, interpret: bool):
     return hw[:, :F, :bins], hwy[:, :F, :bins]
 
 
-def node_histograms(x, w, wy, bins: int, interpret: bool | None = None):
+def _chunked_histograms(x, w, wy, bins: int, interpret: bool | None,
+                        chunk_size: int):
+    """Scan the dispatched kernel over point tiles (streaming tier).
+
+    Whatever :func:`node_histograms` would run monolithically — jnp ref
+    or (interpreted) Pallas — runs per ``chunk_size`` tile inside a
+    ``lax.scan`` that folds into the [(B,) N, F, Q] accumulator, so the
+    O(c·F·Q) intermediate never exceeds one tile.  Bitwise equal to the
+    monolithic path on dyadic weights (exact f32 partial sums)."""
+    c, F = x.shape[-2], x.shape[-1]
+    pc = (-c) % chunk_size
+    lead = ((0, 0),) if x.ndim == 3 else ()
+    xp = jnp.pad(x, lead + ((0, pc), (0, 0)))   # pad rows: zero weight
+    wp = jnp.pad(w, lead + ((0, 0), (0, pc)))   # ⇒ no-op in every bin
+    wyp = jnp.pad(wy, lead + ((0, 0), (0, pc)))
+    t = (c + pc) // chunk_size
+    if x.ndim == 3:
+        b, n = w.shape[0], w.shape[1]
+        xt = jnp.moveaxis(xp.reshape(b, t, chunk_size, F), 1, 0)
+        wt = jnp.moveaxis(wp.reshape(b, n, t, chunk_size), 2, 0)
+        wyt = jnp.moveaxis(wyp.reshape(b, n, t, chunk_size), 2, 0)
+        shape = (b, n, F, bins)
+    else:
+        n = w.shape[0]
+        xt = xp.reshape(t, chunk_size, F)
+        wt = jnp.moveaxis(wp.reshape(n, t, chunk_size), 1, 0)
+        wyt = jnp.moveaxis(wyp.reshape(n, t, chunk_size), 1, 0)
+        shape = (n, F, bins)
+
+    def fold(acc, tile):
+        hw, hwy = node_histograms(*tile, bins, interpret=interpret)
+        return (acc[0] + hw, acc[1] + hwy), None
+
+    init = (jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32))
+    (hw, hwy), _ = jax.lax.scan(fold, init, (xt, wt, wyt))
+    return hw, hwy
+
+
+def node_histograms(x, w, wy, bins: int, interpret: bool | None = None,
+                    chunk_size: int | None = None):
     """(hist_w, hist_wy) [(B,) N, F, Q] — see ref.node_histograms_ref.
 
     ``interpret=None`` (default): Pallas on TPU, jnp ref elsewhere.
     ``interpret=True``: force the interpreted Pallas kernel (parity
     testing).  ``interpret=False``: force the compiled kernel.
+    ``chunk_size``: accumulate over point tiles of that many examples
+    (the streaming tier — caps the one-hot intermediate at one tile;
+    bitwise-equal on the protocol's dyadic weights).  ``None`` is the
+    monolithic path, unchanged.
     """
+    if chunk_size is not None and chunk_size < x.shape[-2]:
+        return _chunked_histograms(x, w, wy, bins, interpret, chunk_size)
     if interpret is None:
         if jax.default_backend() != "tpu":
             return node_histograms_ref(x, w, wy, bins)
@@ -55,11 +100,14 @@ def node_histograms(x, w, wy, bins: int, interpret: bool | None = None):
     return _pallas_histograms(x, w, wy, bins, interpret)
 
 
-def best_node_splits(x, w, wy, bins: int, interpret: bool | None = None):
+def best_node_splits(x, w, wy, bins: int, interpret: bool | None = None,
+                     chunk_size: int | None = None):
     """Histogram + reduce: the best (feature, bin) split per node.
 
     Returns (feat, q, err) each [(B,) N] — the full split-finding step
     of one tree level in one call (kernel contraction + jnp reduction).
+    ``chunk_size`` threads through to :func:`node_histograms`.
     """
-    hw, hwy = node_histograms(x, w, wy, bins, interpret=interpret)
+    hw, hwy = node_histograms(x, w, wy, bins, interpret=interpret,
+                              chunk_size=chunk_size)
     return best_splits_ref(hw, hwy)

@@ -10,6 +10,7 @@ disagree, even for x outside [0, 1) (the clip is part of the split).
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
@@ -35,6 +36,49 @@ def node_histograms_ref(x, w, wy, bins: int):
                 jnp.einsum("bnc,bcfq->bnfq", wy, onehot))
     return (jnp.einsum("nc,cfq->nfq", w, onehot),
             jnp.einsum("nc,cfq->nfq", wy, onehot))
+
+
+def node_histograms_chunked_ref(x, w, wy, bins: int, chunk_size: int):
+    """:func:`node_histograms_ref` accumulated over point tiles.
+
+    Same signature and result shapes, but the [c, F, Q] one-hot — the
+    only O(c·F·Q) intermediate in the whole tree-growth path — never
+    exceeds one ``chunk_size`` tile: points are zero-weight-padded to a
+    tile multiple and a ``lax.scan`` folds per-tile histograms into the
+    [N, F, Q] accumulator.  On dyadic-rational weights (the protocol's
+    2^{−hits} MW weights) every partial sum is exact in f32, so the
+    result is BITWISE equal to the monolithic einsum regardless of the
+    changed reduction order — the contract tests/test_streaming.py pins.
+    """
+    c, F = x.shape[-2], x.shape[-1]
+    if chunk_size >= c:
+        return node_histograms_ref(x, w, wy, bins)
+    pc = (-c) % chunk_size
+    lead = ((0, 0),) if x.ndim == 3 else ()
+    xp = jnp.pad(x, lead + ((0, pc), (0, 0)))   # pad rows: zero weight
+    wp = jnp.pad(w, lead + ((0, 0), (0, pc)))   # ⇒ no-op in every bin
+    wyp = jnp.pad(wy, lead + ((0, 0), (0, pc)))
+    t = (c + pc) // chunk_size
+    if x.ndim == 3:
+        b, n = w.shape[0], w.shape[1]
+        xt = jnp.moveaxis(xp.reshape(b, t, chunk_size, F), 1, 0)
+        wt = jnp.moveaxis(wp.reshape(b, n, t, chunk_size), 2, 0)
+        wyt = jnp.moveaxis(wyp.reshape(b, n, t, chunk_size), 2, 0)
+        shape = (b, n, F, bins)
+    else:
+        n = w.shape[0]
+        xt = xp.reshape(t, chunk_size, F)
+        wt = jnp.moveaxis(wp.reshape(n, t, chunk_size), 1, 0)
+        wyt = jnp.moveaxis(wyp.reshape(n, t, chunk_size), 1, 0)
+        shape = (n, F, bins)
+
+    def fold(acc, tile):
+        hw, hwy = node_histograms_ref(*tile, bins)
+        return (acc[0] + hw, acc[1] + hwy), None
+
+    init = (jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32))
+    (hw, hwy), _ = jax.lax.scan(fold, init, (xt, wt, wyt))
+    return hw, hwy
 
 
 def split_err_surface(hist_w, hist_wy):

@@ -266,6 +266,9 @@ class Completion:
         return self.result.classifier(self.lane)
 
     def validate_ledger(self) -> dict:
+        """Theorem 4.1 accounting ≡ this completion's measured
+        collective payloads (docs/ledger.md walks the checked fields);
+        sharded dispatches only."""
         if not isinstance(self.result,
                           sharded_batched.ShardedClassifyResult):
             raise TypeError("wire validation needs the sharded engine")

@@ -304,7 +304,10 @@ def run_serve_stream(args) -> dict:
     return result
 
 
-def main():
+def build_parser() -> argparse.ArgumentParser:
+    """The serve CLI surface — exposed so the examples smoke test can
+    assert documented flags (e.g. ``--comm-mode``/``--vote-topk``)
+    actually parse without running a workload."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--workload", default="lm",
                     choices=["lm", "classify", "serve-stream"])
@@ -368,7 +371,11 @@ def main():
                     help="preempt dispatch D after R wire rounds "
                          "(repeatable); state checkpoints to --ckpt-dir")
     ap.add_argument("--ckpt-dir", default="experiments/preempt_ckpt")
-    args = ap.parse_args()
+    return ap
+
+
+def main():
+    args = build_parser().parse_args()
     if args.workload == "serve-stream":
         run_serve_stream(args)
     elif args.workload == "classify":

@@ -80,6 +80,12 @@ class HistogramTrees:
     comm_mode: str = "coreset"
     vote_topk: int = 2           # proposals per node per player (voting)
 
+    # Streaming tier (docs/streaming.md): when set, every histogram
+    # build accumulates over point tiles of this many examples instead
+    # of one monolithic [c, F, Q] one-hot — bitwise-equal on the
+    # protocol's dyadic weights, hashable like every other field here.
+    chunk_size: int | None = None
+
     # capability protocol (core/tasks.py, serve/scheduler): this class
     # consumes feature rows [.., F] and needs the randomized coreset
     needs_features: bool = dataclasses.field(default=True, init=False,
@@ -208,7 +214,8 @@ class HistogramTrees:
             onnode = (route[:, None] == jnp.arange(N)[None])      # [c, N]
             wn = jnp.where(onnode, w[:, None], 0.0).T             # [N, c]
             wyn = jnp.where(onnode, wy[:, None], 0.0).T
-            f_n, q_n, _ = H.best_node_splits(xs, wn, wyn, self.bins)
+            f_n, q_n, _ = H.best_node_splits(xs, wn, wyn, self.bins,
+                                             chunk_size=self.chunk_size)
             feats.append(f_n)
             qbins.append(q_n)
             f_pt = f_n[route]
@@ -232,9 +239,14 @@ class HistogramTrees:
                     *, all_gather=None, interpret=None):
         """Distributed greedy grower — the ``comm_mode`` collectives.
 
-        cx [kp, c, F] / cy [kp, c]: per-player coreset shards; pw [kp]:
-        per-player per-example weight (mixture/c — a dead player carries
-        pw = 0 and contributes zero to every histogram and no votes).
+        cx [kp, c, F] float32 / cy [kp, c] int8 ±1: per-player coreset
+        shards; pw [kp] float32: per-player per-example weight
+        (mixture/c — a dead player carries pw = 0 and contributes zero
+        to every histogram and no votes).  With ``chunk_size`` set,
+        each player's local histograms accumulate over point tiles —
+        bitwise-equal to the monolithic build on the protocol's dyadic
+        weights, so the parity contract below is chunking-invariant
+        (docs/streaming.md).
         ``all_gather`` pools a [kp, …] per-player array to [k, …] in
         player order (identity when the caller already holds all k
         players — the host and batched engines; the sharded engine
@@ -282,7 +294,8 @@ class HistogramTrees:
             wyn = jnp.where(onnode, wy[..., None], 0.0)
             hw, hwy = H.node_histograms(
                 cx, wn.transpose(0, 2, 1), wyn.transpose(0, 2, 1),
-                self.bins, interpret=interpret)               # [kp,N,F,Q]
+                self.bins, interpret=interpret,
+                chunk_size=self.chunk_size)                   # [kp,N,F,Q]
             if self.comm_mode == "voting":
                 _, err_f = H.best_splits_per_feature(hw, hwy)  # [kp,N,F]
                 prop = jnp.argsort(err_f, axis=-1,

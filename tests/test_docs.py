@@ -1,0 +1,50 @@
+"""Docs cannot rot: run the CI doc-consistency check as a tier-1 test.
+
+`.github/scripts/check_docs.py` resolves every dotted
+``repro.*``/``benchmarks.*`` backtick reference in docs/*.md +
+README.md via import, and asserts TESTING.md quotes ROADMAP.md's
+tier-1 command verbatim.  Running it here means doc drift fails the
+same `pytest -x -q` gate as a broken test — not just the CI job.
+"""
+
+import importlib.util
+import os
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SCRIPT = os.path.join(REPO, ".github", "scripts", "check_docs.py")
+
+
+def _load():
+    spec = importlib.util.spec_from_file_location("check_docs", SCRIPT)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_docs_exist():
+    for page in ("architecture.md", "ledger.md", "streaming.md"):
+        assert os.path.exists(os.path.join(REPO, "docs", page)), page
+
+
+def test_doc_references_resolve():
+    mod = _load()
+    failures = mod.check_refs(REPO)
+    assert not failures, "\n".join(failures)
+
+
+def test_tier1_command_agrees():
+    mod = _load()
+    failures = mod.check_tier1_command(REPO)
+    assert not failures, "\n".join(failures)
+
+
+def test_checker_catches_a_bad_ref(tmp_path):
+    # the check itself must not rot: a fabricated dangling reference
+    # has to be reported
+    mod = _load()
+    docs = tmp_path / "docs"
+    docs.mkdir()
+    (docs / "bad.md").write_text(
+        "see `repro.core.no_such_module.missing_symbol`")
+    failures = mod.check_refs(str(tmp_path))
+    assert any("no_such_module" in f for f in failures)

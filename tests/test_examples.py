@@ -59,3 +59,23 @@ def test_example_runs(name, monkeypatch, capsys):
     runpy.run_path(path, run_name="__main__")
     # every example narrates what it did; silence means it didn't run
     assert capsys.readouterr().out.strip()
+
+
+def test_documented_serve_flags_parse():
+    """The flags the quickstart/TESTING.md point at must parse.
+
+    quickstart.py and TESTING.md tell users to reach for
+    ``--comm-mode``/``--vote-topk`` (PR 7's distributed tree growth);
+    a CLI rename would orphan that advice silently — the parser is the
+    contract, so parse the documented invocations against it.
+    """
+    from repro.launch.serve import build_parser
+    ap = build_parser()
+    args = ap.parse_args(
+        ["--workload", "classify", "--cls", "tree",
+         "--comm-mode", "voting", "--vote-topk", "1"])
+    assert args.comm_mode == "voting" and args.vote_topk == 1
+    args = ap.parse_args(["--comm-mode", "histogram"])
+    assert args.comm_mode == "histogram"
+    with pytest.raises(SystemExit):       # invalid mode must be refused
+        ap.parse_args(["--comm-mode", "telepathy"])

@@ -1,0 +1,314 @@
+"""Streaming tier: chunked sorts, chunked histograms, bounded-memory
+quantile sketch, and the `chunk_size` engine capability.
+
+The tier's contract (docs/streaming.md) has two halves:
+
+* **Bitwise** — everything on the protocol path is chunked by
+  *identity-preserving* decomposition: `streaming.sort_order` equals
+  the stable `jnp.argsort` exactly, chunked histogram accumulation
+  equals the monolithic kernels exactly on dyadic weights, so
+  `BoostConfig.chunk_size` is invisible to hypotheses, rounds,
+  quarantine and ledger across all three engines.
+* **Self-accounted** — the sketch path (`streaming.build_sketch`) is
+  lossy but HONEST: `streaming.coreset_bound` must dominate the
+  measured sup-loss approximation error, and in the bench regime land
+  under the paper's ε = 1/100 (the pinned ε-approximation guarantee).
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import approximation, batched, classify, sharded_batched
+from repro.core import streaming, tasks, weak
+from repro.core.types import EPS_APPROX, BoostConfig
+from repro.data import chunks as data_chunks
+from repro.kernels.histogram import ops as hist_ops
+
+
+# ---------------------------------------------------------------------------
+# sort_order ≡ stable argsort
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,chunk", [
+    (1024, 128),      # dividing
+    (1000, 128),      # ragged last run
+    (7, 3),           # tiny, odd run count
+    (513, 512),       # one full + one singleton run
+    (64, 64),         # single chunk (delegates)
+    (64, 4096),       # chunk > m (delegates)
+])
+def test_sort_order_matches_argsort(m, chunk):
+    rng = np.random.default_rng(m * 1000 + chunk)
+    n = 1 << 12
+    x_int = jnp.asarray(rng.integers(0, n, m), jnp.int32)
+    got = streaming.sort_order(x_int, chunk, n)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(jnp.argsort(x_int)))
+    x_f = jnp.asarray(rng.normal(size=m), jnp.float32)
+    got_f = streaming.sort_order(x_f, chunk)
+    np.testing.assert_array_equal(np.asarray(got_f),
+                                  np.asarray(jnp.argsort(x_f)))
+
+
+def test_sort_order_stable_under_heavy_ties():
+    # stability is THE property the engines' deterministic coresets
+    # lean on: equal keys must keep index order, exactly as the
+    # monolithic stable argsort does
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.integers(0, 4, 4096), jnp.int32)   # ~1k ties/key
+    got = streaming.sort_order(x, 100, 4)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(jnp.argsort(x)))
+
+
+def test_sort_order_none_is_monolithic():
+    x = jnp.asarray([3, 1, 2], jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(streaming.sort_order(x, None)),
+        np.asarray(jnp.argsort(x)))
+
+
+# ---------------------------------------------------------------------------
+# chunked histograms ≡ monolithic, bitwise, on dyadic weights
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("c,tile,batched_form", [
+    (257, 64, False), (130, 200, False), (512, 128, False),
+    (257, 64, True), (1, 1, True),
+])
+def test_chunked_histograms_bitwise(c, tile, batched_form):
+    rng = np.random.default_rng(c * 7 + tile)
+    F, Q, NODES = 5, 16, 3
+    x = jnp.asarray((rng.integers(0, Q, (c, F)) + 0.5) / Q, jnp.float32)
+    w = jnp.asarray(rng.integers(0, 256, (NODES, c)) / 256.0, jnp.float32)
+    wy = w * jnp.asarray(rng.choice([-1.0, 1.0], (NODES, c)), jnp.float32)
+    if batched_form:
+        x, w, wy = x[None], w[None], wy[None]
+    ref = hist_ops.node_histograms_ref(x, w, wy, Q)
+    chunked_ref = hist_ops.node_histograms_chunked_ref(x, w, wy, Q, tile)
+    for a, b in zip(chunked_ref, ref):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # dispatching entry (covers the Pallas-interpret routing on CPU)
+    got = hist_ops.node_histograms(x, w, wy, Q, chunk_size=tile)
+    for a, b in zip(got, ref):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_chunked_best_splits_bitwise():
+    rng = np.random.default_rng(0)
+    c, F, Q, NODES = 321, 4, 8, 2
+    x = jnp.asarray((rng.integers(0, Q, (c, F)) + 0.5) / Q, jnp.float32)
+    w = jnp.asarray(rng.integers(0, 256, (NODES, c)) / 256.0, jnp.float32)
+    wy = w * jnp.asarray(rng.choice([-1.0, 1.0], (NODES, c)), jnp.float32)
+    ref = hist_ops.best_node_splits(x, w, wy, Q)
+    got = hist_ops.best_node_splits(x, w, wy, Q, chunk_size=100)
+    for a, b in zip(got, ref):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# chunk feed (data/chunks.py)
+# ---------------------------------------------------------------------------
+
+def test_iter_chunks_tiles_and_offsets():
+    x = np.arange(10)
+    y = np.arange(10) * 2
+    tiles = list(data_chunks.iter_chunks((x, y), 4))
+    assert [t[-1] for t in tiles] == [0, 4, 8]
+    np.testing.assert_array_equal(np.concatenate([t[0] for t in tiles]),
+                                  x)
+    np.testing.assert_array_equal(np.concatenate([t[1] for t in tiles]),
+                                  y)
+    assert len(tiles[-1][0]) == 2          # ragged tail preserved
+
+
+def test_iter_chunks_validates():
+    with pytest.raises(ValueError):
+        list(data_chunks.iter_chunks((np.arange(3), np.arange(4)), 2))
+    with pytest.raises(ValueError):
+        list(data_chunks.iter_chunks((np.arange(3),), 0))
+
+
+def test_prefetch_preserves_order_and_values():
+    x = np.arange(100)
+    tiles = list(data_chunks.prefetch_to_device(
+        data_chunks.iter_chunks((x,), 7), depth=2))
+    assert all(isinstance(t[0], jax.Array) for t in tiles)
+    np.testing.assert_array_equal(
+        np.concatenate([np.asarray(t[0]) for t in tiles]), x)
+    assert [t[-1] for t in tiles] == list(range(0, 100, 7))
+
+
+# ---------------------------------------------------------------------------
+# quantile sketch: exactness, honesty, pinned ε
+# ---------------------------------------------------------------------------
+
+def _random_stream(m, seed, n=1 << 14, hmax=13, p_pos=0.5,
+                   dead_frac=0.0):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, n, m).astype(np.int32)
+    y = np.where(rng.random(m) < p_pos, 1, -1).astype(np.int8)
+    hits = rng.integers(0, hmax + 1, m).astype(np.int32)
+    alive = rng.random(m) >= dead_frac
+    w = np.asarray(streaming.sketch_weights(jnp.asarray(hits),
+                                            jnp.asarray(alive)))
+    return x, y, hits, alive, w
+
+
+def _measured_error(idx, x, y, hits, alive, n=1 << 14):
+    # sup over a dense threshold grid, both polarities — the class the
+    # integer track boosts over
+    theta = np.arange(0, n + 1, max(1, n // 256), dtype=np.int32)
+    grid = jnp.asarray(np.stack(
+        [np.concatenate([theta, theta]),
+         np.concatenate([np.ones_like(theta), -np.ones_like(theta)])],
+        axis=1))
+
+    def predict(params, pts):
+        return (jnp.where(pts[None, :] <= params[:, 0:1], 1, -1)
+                * params[:, 1:2])
+
+    return float(approximation.approximation_error(
+        idx, jnp.asarray(x), jnp.asarray(y), jnp.asarray(hits),
+        jnp.asarray(alive), predict, grid))
+
+
+def test_sketch_uncompressed_matches_quantile_coreset():
+    # cap ≥ m ⇒ no compression anywhere ⇒ the sketch coreset IS the
+    # deterministic quantile coreset, index for index
+    m, c = 999, 64
+    x, y, hits, alive, w = _random_stream(m, seed=1)
+    feed = data_chunks.iter_shard_chunks(x, y, w, 128)
+    sk = streaming.build_sketch(feed, cap=1024)
+    got = streaming.sketch_coreset(sk, c)
+    ref = approximation.quantile_coreset(
+        jnp.asarray(x), jnp.asarray(y), jnp.asarray(hits),
+        jnp.asarray(alive), c)
+    gx, gy = x[np.asarray(got)], y[np.asarray(got)]
+    rx, ry = x[np.asarray(ref)], y[np.asarray(ref)]
+    np.testing.assert_array_equal(gx, rx)
+    np.testing.assert_array_equal(gy, ry)
+    assert float(streaming.coreset_bound(sk, c)) <= 4 / c + 1e-6
+
+
+@pytest.mark.parametrize("m,hmax,p_pos,dead", [
+    (20_000, 13, 0.5, 0.0),
+    (20_000, 13, 0.9, 0.1),
+    (50_000, 40, 0.5, 0.0),     # extreme skew: 2^-40 weights
+    (50_000, 0, 0.5, 0.3),
+])
+def test_sketch_bound_is_honest(m, hmax, p_pos, dead):
+    # the sketch may be coarse, but it must never claim better than it
+    # delivers: measured sup-loss error ≤ its self-accounted bound
+    x, y, hits, alive, w = _random_stream(m, seed=m + hmax, hmax=hmax,
+                                          p_pos=p_pos, dead_frac=dead)
+    feed = data_chunks.iter_shard_chunks(x, y, w, 2048)
+    sk = streaming.build_sketch(feed, cap=4096)
+    c = 256
+    idx = streaming.sketch_coreset(sk, c)
+    bound = float(streaming.coreset_bound(sk, c))
+    measured = _measured_error(idx, x, y, hits, alive)
+    assert measured <= bound + 1e-6, (measured, bound)
+
+
+def test_sketch_pinned_epsilon_guarantee():
+    # the bench regime (cap=16384, c=1024): the self-accounted bound
+    # must land under the paper's ε = 1/100, and the measured error
+    # under the bound — the streaming tier's ε-approximation pin
+    m = 100_000
+    x, y, hits, alive, w = _random_stream(m, seed=5)
+    feed = data_chunks.iter_shard_chunks(x, y, w, 16_384)
+    sk = streaming.build_sketch(feed, cap=16_384)
+    c = 1024
+    idx = streaming.sketch_coreset(sk, c)
+    bound = float(streaming.coreset_bound(sk, c))
+    measured = _measured_error(idx, x, y, hits, alive)
+    assert measured <= bound + 1e-6, (measured, bound)
+    assert bound <= EPS_APPROX, bound
+
+
+def test_build_sketch_empty_stream_raises():
+    with pytest.raises(ValueError):
+        streaming.build_sketch(iter(()), cap=64)
+
+
+# ---------------------------------------------------------------------------
+# chunk_size is bitwise invisible to the engines
+# ---------------------------------------------------------------------------
+
+def _engine_cfg(chunk, n, k=4):
+    return BoostConfig(k=k, coreset_size=64, domain_size=n,
+                       opt_budget=32, chunk_size=chunk)
+
+
+def test_host_engine_chunk_parity():
+    n = 1 << 12
+    cls = weak.Thresholds(n=n)
+    task = tasks.make_task(cls, m=1024, k=4, noise=3, seed=2)
+    x, y = jnp.asarray(task.x), jnp.asarray(task.y)
+    key = jax.random.key(0)
+    ref = classify.run_accurately_classify(x, y, key,
+                                           _engine_cfg(None, n), cls)
+    got = classify.run_accurately_classify(x, y, key,
+                                           _engine_cfg(100, n), cls)
+    np.testing.assert_array_equal(np.asarray(ref.hypotheses),
+                                  np.asarray(got.hypotheses))
+    assert ref.rounds == got.rounds
+    assert ref.attempts == got.attempts
+    assert ref.ledger.total_bits == got.ledger.total_bits
+
+
+def test_batched_engine_chunk_parity():
+    n = 1 << 12
+    cls = weak.Thresholds(n=n)
+    B, k = 2, 4
+    x, y, _ = tasks.make_batch(cls, B, 512, k, 3, seed0=11)
+    keys = jax.random.split(jax.random.key(5), B)
+    ref = batched.run_accurately_classify_batched(
+        x, y, keys, _engine_cfg(None, n), cls)
+    got = batched.run_accurately_classify_batched(
+        x, y, keys, _engine_cfg(100, n), cls)
+    for f in ("hypotheses", "rounds", "ok", "attempts", "disputed",
+              "alive", "min_loss"):
+        np.testing.assert_array_equal(np.asarray(getattr(ref, f)),
+                                      np.asarray(getattr(got, f)), f)
+    for b in range(B):
+        assert ref.ledger(b).total_bits == got.ledger(b).total_bits
+
+
+def test_sharded_engine_chunk_parity():
+    n = 1 << 12
+    cls = weak.Thresholds(n=n)
+    B, k = 2, 4
+    x, y, _ = tasks.make_batch(cls, B, 512, k, 3, seed0=11)
+    keys = jax.random.split(jax.random.key(5), B)
+    ref = sharded_batched.run_accurately_classify_sharded(
+        x, y, keys, _engine_cfg(None, n), cls)
+    got = sharded_batched.run_accurately_classify_sharded(
+        x, y, keys, _engine_cfg(100, n), cls)
+    for f in ("hypotheses", "rounds", "ok", "attempts", "disputed"):
+        np.testing.assert_array_equal(np.asarray(getattr(ref, f)),
+                                      np.asarray(getattr(got, f)), f)
+
+
+def test_tree_class_chunk_parity():
+    # feature-track: HistTrees with chunk_size must produce the same
+    # splits (histograms are bitwise ⇒ argmin ties break identically)
+    from repro.weak_tree import trees as T
+    rng = np.random.default_rng(3)
+    c, F = 300, 4
+    cls = T.HistogramTrees(num_features=F, depth=2, bins=16)
+    cls_chunked = T.HistogramTrees(num_features=F, depth=2, bins=16,
+                                   chunk_size=128)
+    x = jnp.asarray(rng.normal(size=(c, F)), jnp.float32)
+    y = jnp.asarray(rng.choice([-1, 1], c), jnp.int8)
+    # dyadic weights (the protocol's 2^-hits regime): partial f32 sums
+    # are exact, so chunked accumulation is bitwise — the contract
+    w = jnp.asarray(rng.integers(0, 256, c) / 256.0, jnp.float32)
+    p_ref, l_ref = cls.erm(x, y, w)
+    p_got, l_got = cls_chunked.erm(x, y, w)
+    np.testing.assert_array_equal(np.asarray(p_ref), np.asarray(p_got))
+    np.testing.assert_array_equal(np.asarray(l_ref), np.asarray(l_got))
