@@ -166,9 +166,17 @@ def main() -> None:
     ap.add_argument("--no-trajectory", action="store_true",
                     help="skip the dated BENCH_<n>.json repo-root "
                          "snapshot")
+    ap.add_argument("--list", action="store_true",
+                    help="print registered suites and their expected "
+                         "gates, then exit 0 (no benchmark runs)")
     args = ap.parse_args()
     _ensure_src_importable()
     suite = _suite()
+    if args.list:
+        for name in sorted(suite):
+            gates = EXPECTED_GATES.get(name, ())
+            print(name if not gates else f"{name}: {' '.join(gates)}")
+        return
     if args.only:
         names = [n.strip() for n in args.only.split(",") if n.strip()]
         unknown = [n for n in names if n not in suite]

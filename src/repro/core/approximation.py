@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import weights as W
+from repro.core.pinned import pinned_argmax
 
 
 def quantile_coreset(x: jax.Array, y: jax.Array, hits: jax.Array,
@@ -87,16 +88,23 @@ def quantile_coreset(x: jax.Array, y: jax.Array, hits: jax.Array,
     lvls = jnp.stack([(j + 0.5) * w_pos / c_posf,
                       (j - c_posf + 0.5) * w_neg / c_negf])  # [2, c]
     idx2 = jnp.clip(jax.vmap(jnp.searchsorted)(cum, lvls), 0, m - 1)
-    pos_sel = jnp.arange(c) < c_pos
+    pos_sel = jnp.arange(c, dtype=jnp.int32) < c_pos
     idx_sorted = jnp.where(pos_sel, idx2[0], idx2[1])
     return order[idx_sorted]
 
 
 def sampled_coreset(key: jax.Array, hits: jax.Array, alive: jax.Array,
                     c: int) -> jax.Array:
-    """Randomized coreset: c i.i.d. categorical draws from p_t^i."""
+    """Randomized coreset: c i.i.d. categorical draws from p_t^i.
+
+    Gumbel-max spelled out (the exact construction
+    ``jax.random.categorical`` uses) so the winning index comes from
+    ``pinned_argmax``: same gumbel draws, same sums — bit-identical
+    draws where categorical's bare argmax has a unique winner, lowest
+    index where it would tie (tie order is backend-defined; RL001)."""
     logp = W.normalized_log_probs(hits, alive) * W.LN2  # natural-log logits
-    return jax.random.categorical(key, logp, shape=(c,))
+    g = jax.random.gumbel(key, (c,) + logp.shape, logp.dtype)
+    return pinned_argmax(g + logp[None, :], axis=-1)
 
 
 def select_coreset(key: jax.Array, x: jax.Array, y: jax.Array,

@@ -28,6 +28,8 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.core.pinned import pinned_argmin
+
 
 @dataclasses.dataclass
 class FiniteResult:
@@ -48,7 +50,7 @@ def learn_finite(x, y, hyp_params: jax.Array, cls) -> FiniteResult:
 
     per_player = jax.vmap(player_errors)(x, y)        # [k, H]
     totals = per_player.sum(0)                        # [H]
-    j = int(jnp.argmin(totals))
+    j = int(pinned_argmin(totals))
     errors = int(totals[j])
     H = hyp_params.shape[0]
     bits = (k * H * max(1, math.ceil(math.log2(max(m, 2))))

@@ -79,6 +79,38 @@ def vote_entries_per_player(cls) -> int:
     return 0
 
 
+def collective_sites_per_round(cls, *, no_center: bool = False) -> dict:
+    """Mesh-collective call sites ONE wire round of the sharded engine
+    executes — the static census ``tools/repro_lint`` verifies against
+    the traced jaxpr, so a new collective cannot ship unaccounted.
+
+    Every entry corresponds to a charged (or control) payload in this
+    module's accounting:
+
+    * ``all_gather`` — the step 2(a)/2(b) exchanges (coreset x, coreset
+      y, weight sums: 3 sites, charged as ``bits_coresets`` /
+      ``bits_weight_sums``); a distributed ``comm_mode`` adds its
+      per-level merges (histogram: hw + hwy = 2·depth, charged as
+      ``bits_histograms``; voting: proposals + alive mask + elected
+      hw/hwy = 4·depth, charged as ``bits_votes`` +
+      ``bits_histograms``).
+    * ``psum`` — the alive-example count (control traffic, not a
+      payload the ledger charges) plus, under the §2.2 no-center
+      model, the hypothesis/loss broadcast pair (charged as
+      ``bits_hypotheses``).
+    """
+    mode = tree_comm_mode(cls)
+    all_gather = 3
+    if mode == "histogram":
+        all_gather += 2 * cls.depth
+    elif mode == "voting":
+        all_gather += 4 * cls.depth
+    psum = 1
+    if no_center and mode == "coreset":
+        psum += 2
+    return {"all_gather": all_gather, "psum": psum}
+
+
 def histogram_cell_bits(m: int, num_rounds: int) -> int:
     """One histogram scalar on the wire — a weight-scale quantity, so
     the same fixed-point format as a weight sum."""

@@ -1,0 +1,52 @@
+"""Tie-pinned reductions — the repo-law replacements for bare argmin/argmax.
+
+Backend tie-breaking of ``jnp.argmin``/``jnp.argmax``/``lax.top_k`` is
+NOT a contract: XLA:CPU happens to return the first occurrence, but TPU
+reduction layouts make no such promise, and the whole value proposition
+of the engines (bit-identical host/batched/sharded outputs, engine-
+independent ERM winners) collapses if a tie can resolve differently per
+backend.  Every selection on a value surface that can tie — ERM
+candidate errors, split gains, vote elections — must therefore go
+through a helper that spells the tie-break out in portable ops.
+
+These helpers pin ties to the LOWEST index along the reduced axis,
+implemented with ``min``/``where``/``iota`` only (no argmin/argmax
+primitive reaches the jaxpr — ``tools/repro_lint`` audits traced
+engines for exactly that).  On XLA:CPU the result is bit-identical to
+the bare op, so adopting them is invisible to the parity suites.
+
+``kernels/histogram/ref._pinned_argmin`` is the same construction,
+kept local so the kernel oracle stays dependency-free; this module is
+the canonical import for everything outside the kernel triples.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _pin_lowest(match: jnp.ndarray, axis: int) -> jnp.ndarray:
+    """Lowest index along ``axis`` where ``match`` holds (int32)."""
+    size = match.shape[axis]
+    shape = [1] * match.ndim
+    shape[axis] = size
+    idx = jnp.arange(size, dtype=jnp.int32).reshape(shape)
+    return jnp.min(jnp.where(match, idx, jnp.int32(size)), axis=axis)
+
+
+def pinned_argmin(v: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    """Index of the minimum along ``axis``, ties pinned to the lowest
+    index — explicitly, not via argmin's backend-dependent tie order."""
+    v = jnp.asarray(v)
+    axis = axis % v.ndim
+    vmin = jnp.min(v, axis=axis, keepdims=True)
+    return _pin_lowest(v == vmin, axis)
+
+
+def pinned_argmax(v: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    """Index of the maximum along ``axis``, ties pinned to the lowest
+    index (the mirror of :func:`pinned_argmin`)."""
+    v = jnp.asarray(v)
+    axis = axis % v.ndim
+    vmax = jnp.max(v, axis=axis, keepdims=True)
+    return _pin_lowest(v == vmax, axis)

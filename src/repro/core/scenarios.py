@@ -146,7 +146,7 @@ def _corrupt_boundary(rng, x, y, noise, params, cls):
     elif t == 5.0:                             # tree: nearest node cut
         flat = x.reshape((-1,) + x.shape[2:]).astype(np.float64)
         ni, Q = cls.nodes, cls.bins
-        feats = params[1:1 + ni].astype(int)
+        feats = params[1:1 + ni].astype(np.int64)
         qbins = params[1 + ni:1 + 2 * ni]
         dist = np.full(flat.shape[0], np.inf)
         for f, q in zip(feats, qbins):
@@ -165,7 +165,7 @@ def _corrupt_drift(rng, x, y, noise, params, cls, waves: int = 4):
     order = np.argsort(_x1d(x), kind="stable")
     flip = np.zeros(m, bool)
     waves = max(min(waves, noise if noise else 1, m), 1)
-    bounds = np.linspace(0, m, waves + 1).astype(int)
+    bounds = np.linspace(0, m, waves + 1).astype(np.int64)
     per = [noise // waves + (1 if g < noise % waves else 0)
            for g in range(waves)]
     for g in range(waves):
@@ -383,7 +383,7 @@ def _plant_feature_concept(cls, spec: ScenarioSpec, rng) -> np.ndarray:
     f1 = int(rng.integers(F))
     widths = np.power(0.62, np.arange(b))
     cuts = np.round(np.cumsum(widths / widths.sum())[:-1] * Q)
-    cuts = np.clip(cuts.astype(int)
+    cuts = np.clip(cuts.astype(np.int64)
                    + rng.integers(-1, 2, size=b - 1), 1, Q - 1)
     cuts = _require_distinct_cuts(cuts, f"bands×{b}", Q)
     lv = _bst_cut_levels(cuts)

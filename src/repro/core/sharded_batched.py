@@ -70,6 +70,7 @@ from repro.ckpt import msgpack_ckpt
 from repro.core import approximation, batched, classify, ledger as L
 from repro.core import streaming, weak
 from repro.core import weights as W
+from repro.core.pinned import pinned_argmax
 from repro.core.boost_attempt import _center_erm, _gather_coreset, _shard_map
 from repro.core.types import BoostConfig
 
@@ -198,7 +199,7 @@ def _round_body(cfg: BoostConfig, cls, k: int, x, y, alive, x_orders,
         # all other summands are literal zeros).
         pid = jax.lax.axis_index(AXIS)
         center = (jnp.int32(0) if player_alive is None
-                  else jnp.argmax(player_alive).astype(jnp.int32))
+                  else pinned_argmax(player_alive))
         cdev = center // kloc
         h0, loss0 = jax.lax.cond(
             pid == cdev,

@@ -401,7 +401,7 @@ def sketch_coreset(s: QuantileSketch, c: int) -> jax.Array:
                       (j - c_posf + 0.5) * w_neg / c_negf])  # [2, c]
     i2 = jnp.clip(jax.vmap(jnp.searchsorted)(cum, lvls), 0,
                   s.x.shape[0] - 1)
-    pos_sel = jnp.arange(c) < c_pos
+    pos_sel = jnp.arange(c, dtype=jnp.int32) < c_pos
     return jnp.where(pos_sel, s.ip[i2[0]], s.i_n[i2[1]])
 
 

@@ -17,6 +17,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any
 
+import jax
 import jax.numpy as jnp
 
 # The paper's constants (Figure 1 / Theorem 3.1).
@@ -58,7 +59,11 @@ class BoostConfig:
     def num_rounds(self, m: int) -> int:
         """T = ceil(6 * log2 |S|) — Theorem 3.1 with the paper's constants."""
         m = max(int(m), 2)
-        return int(jnp.ceil(self.rounds_factor * jnp.log2(m)))
+        # m is always a host int; ensure_compile_time_eval keeps this
+        # concrete (same f32 math, bit for bit) when a caller sits
+        # inside a trace — e.g. the jaxpr audit tracing init_state
+        with jax.ensure_compile_time_eval():
+            return int(jnp.ceil(self.rounds_factor * jnp.log2(m)))
 
 
 @dataclasses.dataclass

@@ -46,6 +46,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.pinned import pinned_argmax, pinned_argmin
+
 PARAM_DIM = 4
 
 
@@ -137,7 +139,7 @@ class Singletons:
         first = _first_occurrence(xs_s)
         # segment sums of (w·1[y=+1], w·1[y=−1]) per unique value run:
         # run containing position j spans [start(j), end(j)).
-        idx = jnp.arange(k)
+        idx = jnp.arange(k, dtype=jnp.int32)
         start = jnp.where(first, idx, 0)
         start = jax.lax.associative_scan(jnp.maximum, start)        # run start
         nxt_first = jnp.concatenate([first[1:], jnp.ones((1,), bool)])
@@ -147,14 +149,14 @@ class Singletons:
         seg_wn = cwn[end] - jnp.where(start > 0, cwn[start - 1], 0.0)
         # err(h_a) = Wp_total − seg_wp(a) + seg_wn(a)  for a in coreset
         errs = Wp - seg_wp + seg_wn
-        j = jnp.argmin(errs)
+        j = pinned_argmin(errs)
         best_in, err_in = xs_s[j].astype(jnp.float32), errs[j]
         # off-coreset candidate: first free point (behaviour = constant −1)
         cand = jnp.concatenate(
             [jnp.zeros((1,), xs_s.dtype), (xs_s + 1) % self.n])
         pos = jnp.searchsorted(xs_s, cand)
         present = (pos < k) & (xs_s[jnp.clip(pos, 0, k - 1)] == cand)
-        free_a = cand[jnp.argmin(present)].astype(jnp.float32)  # first False
+        free_a = cand[pinned_argmin(present)].astype(jnp.float32)  # first False
         take_free = (Wp < err_in) | jnp.all(present)
         a = jnp.where(take_free & ~jnp.all(present), free_a, best_in)
         loss = jnp.where(take_free & ~jnp.all(present), Wp, err_in)
@@ -194,13 +196,14 @@ class Thresholds:
         first = _first_occurrence(xs_s)
         # θ at position j ⇒ pred −s for i<j, +s for i≥j (value-aligned
         # only at first occurrences; j = k is the constant −s hypothesis).
-        prev_wp = jnp.concatenate([jnp.zeros((1,)), cwp])   # Σ_{i<j} wp
-        prev_wn = jnp.concatenate([jnp.zeros((1,)), cwn])
+        prev_wp = jnp.concatenate(
+            [jnp.zeros((1,), jnp.float32), cwp])            # Σ_{i<j} wp
+        prev_wn = jnp.concatenate([jnp.zeros((1,), jnp.float32), cwn])
         err_plus = prev_wp + (Wn - prev_wn)                 # s = +1
         valid = jnp.concatenate([first, jnp.ones((1,), bool)])
         err_plus = jnp.where(valid, err_plus, jnp.inf)
         err_minus = jnp.where(valid, (Wp + Wn) - err_plus, jnp.inf)
-        jp, jm = jnp.argmin(err_plus), jnp.argmin(err_minus)
+        jp, jm = pinned_argmin(err_plus), pinned_argmin(err_minus)
         use_plus = err_plus[jp] <= err_minus[jm]
         j = jnp.where(use_plus, jp, jm)
         theta = jnp.where(j < k, xs_s[jnp.clip(j, 0, k - 1)].astype(jnp.float32),
@@ -244,16 +247,17 @@ class Intervals:
         # prefix of gain g = wp − wn at run *ends* (value boundaries)
         P = cwp - cwn
         P_end = jnp.where(nxt_first, P, -jnp.inf)          # usable right ends
-        prevP = jnp.concatenate([jnp.zeros((1,)), P[:-1]])
+        prevP = jnp.concatenate([jnp.zeros((1,), jnp.float32), P[:-1]])
         first = _first_occurrence(xs_s)
         prevP_start = jnp.where(first, prevP, jnp.inf)     # usable left starts
         cummin = jax.lax.associative_scan(jnp.minimum, prevP_start)
         gain = P_end - cummin                              # best Σ ending at j
-        j = jnp.argmax(gain)
+        j = pinned_argmax(gain)
         best_gain = gain[j]
         # left index: argmin of prevP_start over [0, j]
-        masked = jnp.where(jnp.arange(k) <= j, prevP_start, jnp.inf)
-        i = jnp.argmin(masked)
+        masked = jnp.where(jnp.arange(k, dtype=jnp.int32) <= j,
+                           prevP_start, jnp.inf)
+        i = pinned_argmin(masked)
         a = xs_s[i].astype(jnp.float32)
         b = xs_s[j].astype(jnp.float32)
         loss_in = Wp - best_gain
@@ -316,7 +320,7 @@ class AxisStumps:
             return thr.erm(col, ys, w)
 
         params_f, losses = jax.vmap(per_feature, in_axes=1)(xs)
-        f = jnp.argmin(losses)
+        f = pinned_argmin(losses)
         p = params_f[f]
         params = jnp.stack(
             [jnp.float32(4), f.astype(jnp.float32), p[1], p[3]])
@@ -368,7 +372,7 @@ def ensemble_predict(cls, hyp_params: jax.Array, rounds: jax.Array,
         p = cls.predict(hyp_params[t], x).astype(jnp.int32)
         return jnp.where(t < rounds, p, 0)
 
-    votes = jnp.sum(jax.vmap(one)(jnp.arange(T)), axis=0)
+    votes = jnp.sum(jax.vmap(one)(jnp.arange(T, dtype=jnp.int32)), axis=0)
     return jnp.where(votes >= 0, jnp.int8(1), jnp.int8(-1))
 
 

@@ -15,8 +15,8 @@ def flash_attention_ref(q, k, v, causal: bool = True, window: int = 0):
     kf = k.astype(jnp.float32)
     vf = v.astype(jnp.float32)
     s = jnp.einsum("bkgsh,bkth->bkgst", qg, kf) * hd ** -0.5
-    qpos = jnp.arange(S)[:, None]
-    kpos = jnp.arange(T)[None, :]
+    qpos = jnp.arange(S, dtype=jnp.int32)[:, None]
+    kpos = jnp.arange(T, dtype=jnp.int32)[None, :]
     live = jnp.ones((S, T), bool)
     if causal:
         live &= kpos <= qpos

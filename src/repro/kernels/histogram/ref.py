@@ -30,7 +30,8 @@ def node_histograms_ref(x, w, wy, bins: int):
        hist[n, f, q] = Σ_i w[n, i] · 1[bin(x[i, f]) == q].
     """
     b = bin_index(x, bins)
-    onehot = (b[..., None] == jnp.arange(bins)).astype(jnp.float32)
+    onehot = (b[..., None]
+              == jnp.arange(bins, dtype=jnp.int32)).astype(jnp.float32)
     if x.ndim == 3:
         return (jnp.einsum("bnc,bcfq->bnfq", w, onehot),
                 jnp.einsum("bnc,bcfq->bnfq", wy, onehot))

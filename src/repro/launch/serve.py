@@ -52,6 +52,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import base
+from repro.core.pinned import pinned_argmax
 from repro.models import build, frontend
 
 
@@ -77,12 +78,12 @@ def run(args) -> dict:
     logits, caches = prefill(params, batch)
     logits.block_until_ready()
     t_prefill = time.time() - t0
-    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    tok = pinned_argmax(logits, -1)[:, None].astype(jnp.int32)
     out_tokens = [tok]
     t0 = time.time()
     for _ in range(args.gen):
         logits, caches = decode(params, caches, tok)
-        tok = (jnp.argmax(logits, -1)[:, None]
+        tok = (pinned_argmax(logits, -1)[:, None]
                % cfg.vocab_size).astype(jnp.int32)
         out_tokens.append(tok)
     jax.block_until_ready(tok)

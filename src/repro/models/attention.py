@@ -107,8 +107,8 @@ def gqa_scores_mask(q, k, v, mask):
 def causal_mask(S: int, T: int, offset: int = 0, window: int = 0):
     """[S, T] bool; query i attends key j iff j ≤ i+offset and, with a
     window, j > i+offset−window."""
-    i = jnp.arange(S)[:, None] + offset
-    j = jnp.arange(T)[None, :]
+    i = jnp.arange(S, dtype=jnp.int32)[:, None] + offset
+    j = jnp.arange(T, dtype=jnp.int32)[None, :]
     m = j <= i
     if window > 0:
         m &= j > (i - window)
@@ -167,7 +167,7 @@ def decode_attention(p, cfg, x, cache, *, window=0, use_rope=True):
     # validity of cache slots: slot s holds absolute position
     #   p(s) = s + C*floor((len-1-s)/C ... ring arithmetic; with the
     # invariant "entries written in the last min(len, C) steps are live":
-    slots = jnp.arange(C)[None, :]                        # [1, C]
+    slots = jnp.arange(C, dtype=jnp.int32)[None, :]       # [1, C]
     ln = cache["len"][:, None]
     live = slots < jnp.minimum(ln, C)
     if window > 0:

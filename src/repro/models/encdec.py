@@ -56,7 +56,7 @@ def init_params(key, cfg):
 
 def encode(params, cfg, frames):
     """frames: [B, Se, D] stub frontend embeddings -> [B, Se, D]."""
-    positions = jnp.arange(frames.shape[1])[None, :]
+    positions = jnp.arange(frames.shape[1], dtype=jnp.int32)[None, :]
 
     def body(h, lp):
         hn = L.rms_norm(lp["norm1"], h, cfg.norm_eps)
@@ -77,8 +77,8 @@ def decode_train(params, cfg, enc_out, tokens):
     """Teacher-forced decoder.  tokens: [B, St] -> logits [B, St, Vp]."""
     h = L.embed(params["embed"], tokens)
     St = tokens.shape[1]
-    positions = jnp.arange(St)[None, :]
-    enc_positions = jnp.arange(enc_out.shape[1])[None, :]
+    positions = jnp.arange(St, dtype=jnp.int32)[None, :]
+    enc_positions = jnp.arange(enc_out.shape[1], dtype=jnp.int32)[None, :]
 
     def body(h, lp):
         hn = L.rms_norm(lp["norm1"], h, cfg.norm_eps)

@@ -51,7 +51,12 @@ def _route(p, cfg, x2d):
     plus aux losses."""
     logits = (x2d.astype(jnp.float32) @ p["router"]["w"].astype(jnp.float32))
     probs = jax.nn.softmax(logits, axis=-1)                    # [T, E]
-    gates, idx = jax.lax.top_k(probs, cfg.experts_per_token)   # [T, K]
+    # top-k via stable argsort, not lax.top_k: equal-prob experts must
+    # resolve to the lowest expert id on every backend (top_k tie order
+    # is not a contract; see repro.core.pinned / RL001)
+    order = jnp.argsort(-probs, axis=-1, stable=True)
+    idx = order[..., :cfg.experts_per_token]                   # [T, K]
+    gates = jnp.take_along_axis(probs, idx, axis=-1)
     gates = gates / jnp.maximum(
         jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
     # load-balance aux (Switch): E * Σ_e fraction_tokens(e)·mean_prob(e)
@@ -110,12 +115,13 @@ def _sort_moe(p, cfg, x2d, exact=False):
     C = T * K if exact else max(1, int(T * K / E * cfg.capacity_factor))
     gates, idx, aux = _route(p, cfg, x2d)
     flat_e = idx.reshape(-1)                        # [T*K] expert ids
-    flat_t = jnp.repeat(jnp.arange(T), K)           # token of each assignment
+    flat_t = jnp.repeat(jnp.arange(T, dtype=jnp.int32), K)  # token per slot
     flat_g = gates.reshape(-1)
     order = jnp.argsort(flat_e, stable=True)
     e_sorted = flat_e[order]
-    start = jnp.searchsorted(e_sorted, jnp.arange(Ep))
-    pos = jnp.arange(T * K) - start[e_sorted]       # rank within expert
+    start = jnp.searchsorted(e_sorted, jnp.arange(Ep, dtype=jnp.int32))
+    pos = (jnp.arange(T * K, dtype=jnp.int32)
+           - start[e_sorted])                       # rank within expert
     keep = pos < C
     slot = jnp.where(keep, e_sorted * C + pos, Ep * C)  # Ep*C = drop bin
     xe_flat = jnp.zeros((Ep * C + 1, D), jnp.bfloat16).at[slot].set(

@@ -96,7 +96,8 @@ def forward(p, cfg, x):
         u_p = u
     nch = u_p.shape[1] // CHUNK
     uc = u_p.reshape(B, nch, CHUNK, -1).transpose(1, 0, 2, 3)
-    valid = (jnp.arange(nch * CHUNK) < S).reshape(nch, 1, CHUNK)
+    valid = (jnp.arange(nch * CHUNK, dtype=jnp.int32)
+             < S).reshape(nch, 1, CHUNK)
 
     def combine(a, b):
         (a1, b1), (a2, b2) = a, b

@@ -148,7 +148,7 @@ def forward(params, cfg, tokens, prefix_embeds=None, use_flash=False):
     if prefix_embeds is not None:
         h = jnp.concatenate([prefix_embeds.astype(h.dtype), h], axis=1)
     S = h.shape[1]
-    positions = jnp.arange(S)[None, :]
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :]
     h, aux, _ = _stack_forward(params, cfg, h, positions,
                                window=cfg.sliding_window,
                                use_flash=use_flash)
@@ -204,7 +204,7 @@ def prefill(params, cfg, tokens, prefix_embeds=None, use_flash=False,
     if prefix_embeds is not None:
         h = jnp.concatenate([prefix_embeds.astype(h.dtype), h], axis=1)
     S = h.shape[1]
-    positions = jnp.arange(S)[None, :]
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :]
     h, aux, caches = _stack_forward(
         params, cfg, h, positions, window=window or cfg.sliding_window,
         use_flash=use_flash, collect_cache=True)

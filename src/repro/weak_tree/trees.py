@@ -211,7 +211,8 @@ class HistogramTrees:
         feats, qbins = [], []
         for level in range(self.depth):
             N = 1 << level
-            onnode = (route[:, None] == jnp.arange(N)[None])      # [c, N]
+            onnode = (route[:, None]
+                      == jnp.arange(N, dtype=jnp.int32)[None])    # [c, N]
             wn = jnp.where(onnode, w[:, None], 0.0).T             # [N, c]
             wyn = jnp.where(onnode, wy[:, None], 0.0).T
             f_n, q_n, _ = H.best_node_splits(xs, wn, wyn, self.bins,
@@ -223,7 +224,7 @@ class HistogramTrees:
             xv = jnp.take_along_axis(b, f_pt[:, None], axis=1)[:, 0]
             route = route * 2 + (xv >= q_pt).astype(jnp.int32)
         NL = self.leaves
-        onleaf = (route[:, None] == jnp.arange(NL)[None])
+        onleaf = (route[:, None] == jnp.arange(NL, dtype=jnp.int32)[None])
         w_leaf = jnp.sum(jnp.where(onleaf, w[:, None], 0.0), axis=0)
         wy_leaf = jnp.sum(jnp.where(onleaf, wy[:, None], 0.0), axis=0)
         sign = jnp.where(wy_leaf >= 0, 1.0, -1.0)    # sign(0) := +1
@@ -289,7 +290,8 @@ class HistogramTrees:
         sel = q_n = hw_m = hwy_m = None
         for level in range(self.depth):
             N = 1 << level
-            onnode = (route[..., None] == jnp.arange(N))      # [kp, c, N]
+            onnode = (route[..., None]
+                      == jnp.arange(N, dtype=jnp.int32))      # [kp, c, N]
             wn = jnp.where(onnode, w[..., None], 0.0)
             wyn = jnp.where(onnode, wy[..., None], 0.0)
             hw, hwy = H.node_histograms(
@@ -302,11 +304,13 @@ class HistogramTrees:
                                    stable=True)[..., :self.vote_topk]
                 votes_all = ag(prop)                          # [k,N,topk]
                 alive_all = ag(pw > 0)                        # [k]
-                onefeat = ((votes_all[..., None] == jnp.arange(F))
+                onefeat = ((votes_all[..., None]
+                            == jnp.arange(F, dtype=jnp.int32))
                            & alive_all[:, None, None, None])
                 votes = jnp.sum(onefeat.astype(jnp.int32),
                                 axis=(0, 2))                  # [N, F]
-                rank = votes * F + jnp.arange(F - 1, -1, -1)
+                rank = votes * F + jnp.arange(F - 1, -1, -1,
+                                              dtype=jnp.int32)
                 _, elect = jax.lax.top_k(rank, self.elected)  # [N, E]
                 gidx = elect[None, :, :, None]
                 hw_e = jnp.take_along_axis(hw, gidx, axis=2)

@@ -135,9 +135,11 @@ def test_log_weight_math():
     rng = np.random.default_rng(1)
     hits = jnp.asarray(rng.integers(0, 40, 256), jnp.int32)
     alive = jnp.asarray(rng.random(256) < 0.8)
-    direct = float(jnp.sum(jnp.where(alive,
-                                     2.0 ** (-hits.astype(jnp.float64)),
-                                     0.0)))
+    # float64 oracle on host numpy: jnp.float64 would silently truncate
+    # to f32 with x64 off (and now warns-as-errors under pytest.ini)
+    direct = float(np.sum(np.where(np.asarray(alive),
+                                   2.0 ** (-np.asarray(hits, np.float64)),
+                                   0.0)))
     lw = float(weights.log_weight_sum(hits, alive))
     np.testing.assert_allclose(2.0 ** lw, direct, rtol=1e-5)
     p = weights.probs(hits, alive)

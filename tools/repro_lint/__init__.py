@@ -1,0 +1,18 @@
+"""Static analysis for the repro tree: AST rules + jaxpr verification.
+
+Two layers (see docs/static_analysis.md):
+
+* ``tools.repro_lint.rules`` — RL001–RL005 AST rules over ``src/repro``;
+* ``tools.repro_lint.jaxpr_audit`` — traces both boosting engines and
+  checks the primitive denylist, dtype census, and collective census
+  against :func:`repro.core.ledger.collective_sites_per_round`.
+
+CLI: ``python -m tools.repro_lint src/ [--jaxpr]``.
+"""
+
+from tools.repro_lint.engine import (Violation, lint_paths, lint_source,
+                                     load_baseline)
+from tools.repro_lint.rules import ALL_RULES, RULE_IDS
+
+__all__ = ["Violation", "lint_paths", "lint_source", "load_baseline",
+           "ALL_RULES", "RULE_IDS"]

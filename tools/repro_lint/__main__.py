@@ -1,0 +1,106 @@
+"""CLI: ``python -m tools.repro_lint [paths…] [--jaxpr]``.
+
+Exit codes: 0 clean, 1 violations/audit failures, 2 usage error.
+Writes a summary table to ``$GITHUB_STEP_SUMMARY`` when set (the CI
+lint job surfaces per-rule counts without scrolling logs).
+"""
+
+from __future__ import annotations
+
+import argparse
+import collections
+import os
+import sys
+
+
+def _ensure_src_importable() -> None:
+    """The jaxpr audit imports ``repro``; running from the repo root
+    without PYTHONPATH=src is the common case, so fall back to the
+    in-tree layout (append, never mutate precedence of existing entries).
+    """
+    try:
+        import repro  # noqa: F401
+        return
+    except ImportError:
+        pass
+    here = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    src = os.path.join(here, "src")
+    if os.path.isdir(src) and src not in sys.path:
+        sys.path.append(src)
+
+
+def _step_summary(lines: list[str]) -> None:
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path:
+        return
+    with open(path, "a", encoding="utf-8") as f:
+        f.write("\n".join(lines) + "\n")
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m tools.repro_lint",
+        description="repro-lint: AST rules + jaxpr verification")
+    parser.add_argument("paths", nargs="*", default=None,
+                        help="files/dirs to lint (default: src/)")
+    parser.add_argument("--jaxpr", action="store_true",
+                        help="also run the jaxpr audit (traces both "
+                             "engines; needs repro importable)")
+    parser.add_argument("--baseline", default=None,
+                        help="suppressions file (default: "
+                             "tools/repro_lint/baseline_suppressions.txt)")
+    args = parser.parse_args(argv)
+
+    repo_root = os.getcwd()
+    paths = args.paths or ["src"]
+    for p in paths:
+        if not os.path.exists(p):
+            print(f"repro-lint: no such path: {p}", file=sys.stderr)
+            return 2
+
+    from tools.repro_lint.engine import lint_paths, load_baseline
+    from tools.repro_lint.rules import ALL_RULES
+
+    baseline_path = args.baseline or os.path.join(
+        os.path.dirname(os.path.abspath(__file__)),
+        "baseline_suppressions.txt")
+    baseline = load_baseline(baseline_path)
+
+    violations, suppressed = lint_paths(paths, ALL_RULES,
+                                        repo_root=repo_root,
+                                        baseline=baseline)
+    per_rule = collections.Counter(v.rule for v in violations)
+    for v in violations:
+        print(v)
+
+    audit_failures: list[str] = []
+    if args.jaxpr:
+        _ensure_src_importable()
+        from tools.repro_lint.jaxpr_audit import run_audit
+        audit_failures = run_audit()
+        for msg in audit_failures:
+            print(f"jaxpr-audit: {msg}")
+
+    summary = ["### repro-lint", "",
+               "| check | findings |", "| --- | ---: |"]
+    from tools.repro_lint.rules import RULE_IDS
+    for rid in RULE_IDS:
+        summary.append(f"| {rid} | {per_rule.get(rid, 0)} |")
+    if args.jaxpr:
+        summary.append(f"| jaxpr audit | {len(audit_failures)} |")
+    if suppressed:
+        summary.append(f"| baseline-suppressed | {len(suppressed)} |")
+    _step_summary(summary)
+
+    n = len(violations) + len(audit_failures)
+    tail = f", {len(suppressed)} baseline-suppressed" if suppressed else ""
+    print(f"repro-lint: {len(violations)} violation(s)"
+          + (f", {len(audit_failures)} jaxpr audit failure(s)"
+                 if args.jaxpr else "")
+          + tail)
+    return 1 if n else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,175 @@
+"""repro-lint rule engine: AST rules over ``src/repro``.
+
+The engine is deliberately small: a rule is a class with an ``rule_id``,
+a one-line ``title``, a ``rationale`` docstring, an ``applies_to(relpath)``
+path scope, and a ``check(tree, src, relpath)`` returning
+:class:`Violation` rows.  Directory-shape rules (RL004) implement
+``check_tree(root)`` instead.  The CLI (``python -m tools.repro_lint``)
+and the tests both go through :func:`lint_paths` so fixtures exercise the
+exact production path.
+
+Suppression channels, in increasing order of friction:
+
+* inline pragma ``# repro-lint: allow=RL00X <reason>`` on the flagged
+  line — for pinned sites whose determinism is argued locally;
+* ``ALLOWLIST`` entries in :mod:`tools.repro_lint.rules` — path +
+  enclosing qualname + reason, reviewed like code;
+* ``baseline_suppressions.txt`` — ``path:RULE`` rows for pre-existing
+  debt.  The repo's policy (docs/static_analysis.md) is that this file
+  stays EMPTY: new rules land together with the fixes they require.
+
+Fixtures declare a virtual path via a first-lines pragma
+``# lint-fixture-path: src/repro/...`` so path-scoped rules fire on
+files that physically live under ``tools/repro_lint/fixtures/``.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+
+PRAGMA_ALLOW_RE = re.compile(r"#\s*repro-lint:\s*allow=([A-Z]{2}\d{3})\b")
+FIXTURE_PATH_RE = re.compile(r"#\s*lint-fixture-path:\s*(\S+)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def key(self) -> str:
+        """Baseline-suppression key — line-insensitive so the baseline
+        does not churn on unrelated edits."""
+        return f"{self.path}:{self.rule}"
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+
+class SourceRule:
+    """Base class for per-file AST rules."""
+
+    rule_id: str = "RL000"
+    title: str = ""
+    rationale: str = ""
+
+    def applies_to(self, relpath: str) -> bool:
+        return True
+
+    def check(self, tree: ast.AST, src: str, relpath: str) -> list[Violation]:
+        raise NotImplementedError
+
+    def violation(self, relpath: str, node: ast.AST, message: str) -> Violation:
+        return Violation(self.rule_id, relpath,
+                         getattr(node, "lineno", 0), message)
+
+
+class TreeRule:
+    """Base class for directory-shape rules (run once per scanned root)."""
+
+    rule_id: str = "RL000"
+    title: str = ""
+    rationale: str = ""
+
+    def check_tree(self, root: str) -> list[Violation]:
+        raise NotImplementedError
+
+
+def virtual_path(src: str, default: str) -> str:
+    """Honour the ``# lint-fixture-path:`` pragma (first 5 lines)."""
+    for line in src.splitlines()[:5]:
+        m = FIXTURE_PATH_RE.search(line)
+        if m:
+            return m.group(1)
+    return default
+
+
+def _pragma_allowed(src_lines: list[str], v: Violation) -> bool:
+    if 1 <= v.line <= len(src_lines):
+        m = PRAGMA_ALLOW_RE.search(src_lines[v.line - 1])
+        if m and m.group(1) == v.rule:
+            return True
+    return False
+
+
+def lint_source(src: str, relpath: str,
+                rules: list[SourceRule]) -> list[Violation]:
+    """Lint one file's source text under its (possibly virtual) path."""
+    relpath = virtual_path(src, relpath)
+    try:
+        tree = ast.parse(src, filename=relpath)
+    except SyntaxError as e:  # a file the linter cannot read is a finding
+        return [Violation("RL000", relpath, e.lineno or 0,
+                          f"syntax error: {e.msg}")]
+    out: list[Violation] = []
+    lines = src.splitlines()
+    for rule in rules:
+        if not isinstance(rule, SourceRule):
+            continue              # TreeRules need a directory, not a file
+        if not rule.applies_to(relpath):
+            continue
+        for v in rule.check(tree, src, relpath):
+            if not _pragma_allowed(lines, v):
+                out.append(v)
+    return out
+
+
+def iter_py_files(root: str):
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = sorted(d for d in dirnames
+                             if d not in {"__pycache__", ".git"})
+        for name in sorted(filenames):
+            if name.endswith(".py"):
+                yield os.path.join(dirpath, name)
+
+
+def load_baseline(path: str) -> set[str]:
+    """Read ``path:RULE`` suppression keys; blank lines/comments skipped."""
+    keys: set[str] = set()
+    if not os.path.exists(path):
+        return keys
+    with open(path, encoding="utf-8") as f:
+        for line in f:
+            line = line.strip()
+            if line and not line.startswith("#"):
+                keys.add(line)
+    return keys
+
+
+def lint_paths(paths: list[str], rules: list | None = None,
+               repo_root: str | None = None,
+               baseline: set[str] | None = None):
+    """Lint files/directories.  Returns (violations, suppressed)."""
+    if rules is None:
+        from tools.repro_lint.rules import ALL_RULES
+        rules = ALL_RULES
+    source_rules = [r for r in rules if isinstance(r, SourceRule)]
+    tree_rules = [r for r in rules if isinstance(r, TreeRule)]
+    repo_root = repo_root or os.getcwd()
+    baseline = baseline if baseline is not None else set()
+
+    violations: list[Violation] = []
+    for path in paths:
+        if os.path.isdir(path):
+            for fp in iter_py_files(path):
+                violations.extend(_lint_file(fp, repo_root, source_rules))
+            for rule in tree_rules:
+                violations.extend(rule.check_tree(path))
+        else:
+            violations.extend(_lint_file(path, repo_root, source_rules))
+
+    kept = [v for v in violations if v.key() not in baseline]
+    suppressed = [v for v in violations if v.key() in baseline]
+    return kept, suppressed
+
+
+def _lint_file(path: str, repo_root: str,
+               rules: list[SourceRule]) -> list[Violation]:
+    relpath = os.path.relpath(path, repo_root).replace(os.sep, "/")
+    with open(path, encoding="utf-8") as f:
+        src = f.read()
+    return lint_source(src, relpath, rules)

@@ -1,0 +1,12 @@
+# lint-fixture-path: src/repro/core/fixture_rl001.py
+"""RL001 fail: bare jnp extrema + top_k + unstable argsort."""
+import jax
+import jax.numpy as jnp
+
+
+def erm(errs, gains, ranks):
+    j = jnp.argmin(errs)                       # RL001: bare argmin
+    g = jnp.argmax(gains)                      # RL001: bare argmax
+    _, top = jax.lax.top_k(ranks, 2)           # RL001: bare top_k
+    order = jnp.argsort(errs, stable=False)    # RL001: unstable argsort
+    return j, g, top, order

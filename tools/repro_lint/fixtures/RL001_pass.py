@@ -1,0 +1,17 @@
+# lint-fixture-path: src/repro/core/fixture_rl001.py
+"""RL001 pass: pinned helpers, numpy-host extrema, stable argsort."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pinned import pinned_argmax, pinned_argmin
+
+
+def erm(errs, gains):
+    j = pinned_argmin(errs)           # pinned: ties break to lowest index
+    g = pinned_argmax(gains)
+    order = jnp.argsort(errs, stable=True)
+    return j, g, order
+
+
+def host_side(a):
+    return np.argmin(a), np.argmax(a)  # numpy pins first occurrence

@@ -1,0 +1,23 @@
+# lint-fixture-path: src/repro/core/sharded_batched.py
+"""RL002 fail: a collective with no wire-counter binding in the same
+function, and a schema wire field whose accumulation was deleted."""
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class _RoundCarry(NamedTuple):
+    wire_core: jax.Array
+
+
+STATE_DTYPES = dict(wire_bytes="int32")
+
+
+def _round_body(c, cx):
+    cx_all = jax.lax.all_gather(cx, "players")   # RL002: unaccounted
+    return _RoundCarry(c.wire_core)              # no accumulation either
+
+
+def _one_step(s, out):
+    return {"rounds": s["rounds"] + 1}           # wire_bytes update gone

@@ -1,0 +1,24 @@
+# lint-fixture-path: src/repro/core/sharded_batched.py
+"""RL002 pass: collectives paired with wire counters; every schema wire
+field has a maintaining accumulation."""
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class _RoundCarry(NamedTuple):
+    wire_core: jax.Array
+
+
+STATE_DTYPES = dict(wire_bytes="int32")
+
+
+def _round_body(c, cx):
+    cx_all = jax.lax.all_gather(cx, "players")
+    n_examples = cx_all.shape[0] * cx_all.shape[1]
+    return _RoundCarry(wire_core=c.wire_core + n_examples)
+
+
+def _one_step(s, out):
+    return {"wire_bytes": s["wire_bytes"] + out.wire_core * 8}

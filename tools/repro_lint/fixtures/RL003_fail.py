@@ -1,0 +1,11 @@
+# lint-fixture-path: src/repro/core/fixture_rl003.py
+"""RL003 fail: dtype-less jnp constructors, bare astype, jnp f64."""
+import jax.numpy as jnp
+
+
+def build(m, x):
+    idx = jnp.arange(m)                 # RL003: dtype-less (f64 under x64)
+    buf = jnp.zeros((m,))               # RL003: dtype-less
+    bad = x.astype(float)               # RL003: host-dependent width
+    wide = jnp.asarray(x, jnp.float64)  # RL003: f64 literal
+    return idx, buf, bad, wide

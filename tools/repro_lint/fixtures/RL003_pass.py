@@ -1,0 +1,14 @@
+# lint-fixture-path: src/repro/core/fixture_rl003.py
+"""RL003 pass: every jnp constructor names its dtype; astype is
+explicit; host numpy keeps its own (allowed) defaults."""
+import jax.numpy as jnp
+import numpy as np
+
+
+def build(m):
+    idx = jnp.arange(m, dtype=jnp.int32)
+    buf = jnp.zeros((m,), jnp.float32)
+    pad = jnp.full((m,), -1, dtype=jnp.int32)
+    out = buf.astype(jnp.float32)
+    host = np.arange(m)                 # host-side numpy: out of scope
+    return idx, buf, pad, out, host

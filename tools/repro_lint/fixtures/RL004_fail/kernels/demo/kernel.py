@@ -1,0 +1,5 @@
+"""RL004 fail fixture: kernel with no ref.py and no interpret routing."""
+
+
+def demo_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]

@@ -1,0 +1,5 @@
+"""RL004 fail fixture: entry point without an interpret flag."""
+
+
+def demo(x):
+    return x

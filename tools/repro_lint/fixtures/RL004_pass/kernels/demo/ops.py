@@ -1,0 +1,5 @@
+"""RL004 pass fixture: public entry routing the interpret flag."""
+
+
+def demo(x, *, interpret=None):
+    return x

@@ -1,0 +1,5 @@
+"""RL004 pass fixture: pure-jnp ground truth."""
+
+
+def demo_ref(x):
+    return x

@@ -1,0 +1,15 @@
+# lint-fixture-path: src/repro/core/fixture_rl005.py
+"""RL005 fail: sys.path mutation, host clock/RNG in a jitted module."""
+import random                            # RL005: host RNG module
+import sys
+import time                              # RL005: host clock
+
+import numpy as np
+
+sys.path.insert(0, "/tmp/somewhere")     # RL005: sys.path mutation
+
+
+def sample(m):
+    np.random.seed(0)                    # RL005: legacy global state
+    t0 = time.time()
+    return np.random.rand(m), random.random(), t0

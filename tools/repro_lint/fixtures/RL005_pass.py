@@ -1,0 +1,8 @@
+# lint-fixture-path: src/repro/core/fixture_rl005.py
+"""RL005 pass: seeded generator API only, no host clock, no sys.path."""
+import numpy as np
+
+
+def sample(seed, m):
+    rng = np.random.default_rng(seed)   # seeded Generator API: allowed
+    return rng.standard_normal(m)

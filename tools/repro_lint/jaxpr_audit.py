@@ -1,0 +1,267 @@
+"""Layer 2: trace both boosting engines and audit the jaxprs.
+
+Three checks over ``init_state`` / ``run_rounds`` traces of the batched
+and sharded engines (stumps, a 1-D protocol class, and histogram trees
+in each ``comm_mode``, at one canonical small config):
+
+* **primitive denylist** — no nondeterministic or host-callback
+  primitives (``argmin``/``argmax`` tie order is backend-defined;
+  callbacks smuggle host state into traced programs);
+* **dtype census** — no float64/complex anywhere in any trace (the
+  STATE_DTYPES contract is f32/int32/int8/bool/uint32);
+* **collective census** — the sharded step trace contains EXACTLY the
+  ``all_gather``/``psum`` eqn counts that
+  :func:`repro.core.ledger.collective_sites_per_round` declares (and
+  nothing else from the collective family); the batched trace contains
+  none.  A new collective cannot ship without ledger accounting.
+
+Tracing is abstract (``jax.eval_shape`` state + ``jax.make_jaxpr``):
+no kernels execute, so the audit runs in seconds on CPU CI.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import batched, ledger, sharded_batched
+from repro.core.types import BoostConfig
+from repro.core.weak import AxisStumps, Thresholds
+from repro.weak_tree.trees import HistogramTrees
+
+# Nondeterministic / host-coupled primitives that must never appear in
+# an engine trace.  NOTE ``top_k`` is absent on purpose: the voting
+# election uses it on all-distinct ranks (RL001 allowlist) — the AST
+# layer polices call sites, the jaxpr layer polices what cannot be
+# argued safe at any site.
+DENY_PRIMITIVES = frozenset({
+    "argmin", "argmax",
+    "rng_bit_generator",
+    "pure_callback", "io_callback", "outside_call", "debug_callback",
+    "infeed", "outfeed",
+})
+
+BAD_DTYPES = frozenset({"float64", "complex64", "complex128"})
+
+COLLECTIVE_FAMILY = frozenset({
+    "all_gather", "psum", "pmean", "pmax", "pmin", "ppermute",
+    "all_to_all", "psum_scatter", "reduce_scatter",
+})
+
+CANON = dict(B=1, k=2, mloc=8, F=3)
+
+
+def canonical_config() -> BoostConfig:
+    return BoostConfig(k=CANON["k"], coreset_size=4, domain_size=64,
+                       opt_budget=2)
+
+
+def engine_cases():
+    """(name, cls, no_center) — the class/mode grid the audit traces."""
+    F = CANON["F"]
+    return [
+        ("thresholds", Thresholds(n=64), False),
+        ("stumps", AxisStumps(num_features=F), False),
+        ("stumps-nocenter", AxisStumps(num_features=F), True),
+        ("tree-coreset",
+         HistogramTrees(num_features=F, depth=2, bins=8,
+                        comm_mode="coreset"), False),
+        ("tree-histogram",
+         HistogramTrees(num_features=F, depth=2, bins=8,
+                        comm_mode="histogram"), False),
+        ("tree-voting",
+         HistogramTrees(num_features=F, depth=2, bins=8,
+                        comm_mode="voting"), False),
+    ]
+
+
+def _inputs(cls, cfg: BoostConfig):
+    """Canonical [B, k, mloc(, F)] inputs — values never execute (the
+    traces are abstract), only shapes/dtypes matter."""
+    B, k, mloc, F = (CANON["B"], CANON["k"], CANON["mloc"], CANON["F"])
+    if getattr(cls, "needs_features", False):
+        x = np.zeros((B, k, mloc, F), np.float32)
+    else:
+        x = np.zeros((B, k, mloc), np.int32)
+    y = np.ones((B, k, mloc), np.int8)
+    keys = jax.random.split(jax.random.key(0), B)
+    return x, y, keys
+
+
+# ---------------------------------------------------------------------------
+# jaxpr walking
+# ---------------------------------------------------------------------------
+
+def _sub_jaxprs(params: dict):
+    """Yield every (Closed)Jaxpr reachable from an eqn's params —
+    pjit/while/cond/scan/shard_map all stash sub-jaxprs differently, so
+    duck-type instead of enumerating param names."""
+    stack = list(params.values())
+    while stack:
+        v = stack.pop()
+        if isinstance(v, (tuple, list)):
+            stack.extend(v)
+        elif hasattr(v, "jaxpr") and hasattr(v, "consts"):  # ClosedJaxpr
+            yield v.jaxpr
+        elif hasattr(v, "eqns") and hasattr(v, "invars"):   # open Jaxpr
+            yield v
+
+
+def iter_eqns(jaxpr):
+    """Depth-first over every eqn, including nested sub-jaxprs."""
+    if hasattr(jaxpr, "jaxpr"):          # ClosedJaxpr → Jaxpr
+        jaxpr = jaxpr.jaxpr
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for sub in _sub_jaxprs(eqn.params):
+            yield from iter_eqns(sub)
+
+
+def primitive_census(jaxpr) -> collections.Counter:
+    return collections.Counter(e.primitive.name for e in iter_eqns(jaxpr))
+
+
+def dtype_census(jaxpr) -> collections.Counter:
+    out = collections.Counter()
+    for eqn in iter_eqns(jaxpr):
+        for var in eqn.outvars:
+            dt = getattr(var.aval, "dtype", None)
+            if dt is not None:
+                out[str(dt)] += 1
+    return out
+
+
+# ---------------------------------------------------------------------------
+# engine tracing
+# ---------------------------------------------------------------------------
+
+def trace_engine(cls, cfg: BoostConfig, engine: str,
+                 no_center: bool = False):
+    """(init_jaxpr, step_jaxpr) for one engine/class/mode."""
+    x, y, keys = _inputs(cls, cfg)
+    # cfg.num_rounds does host-side int() math — resolve it before
+    # tracing (init_state would otherwise hit a ConcretizationTypeError
+    # under the abstract trace)
+    t_buf = cfg.num_rounds(CANON["k"] * CANON["mloc"])
+    if engine == "batched":
+        def init_fn(xx, yy, kk):
+            return batched.init_state(xx, yy, kk, cfg, t_buf=t_buf,
+                                      cls=cls)
+
+        def step_fn(st, xx, yy):
+            return batched.run_rounds(st, xx, yy, cfg, cls, n=1)
+    elif engine == "sharded":
+        mesh = sharded_batched.make_players_mesh(cfg.k)
+
+        def init_fn(xx, yy, kk):
+            return sharded_batched.init_state_sharded(
+                xx, yy, kk, cfg, t_buf=t_buf, cls=cls)
+
+        def step_fn(st, xx, yy):
+            return sharded_batched.run_rounds_sharded(
+                st, xx, yy, cfg, cls, mesh=mesh, n=1,
+                no_center=no_center)
+    else:
+        raise ValueError(f"unknown engine {engine!r}")
+    state = jax.eval_shape(init_fn, x, y, keys)
+    init_jaxpr = jax.make_jaxpr(init_fn)(x, y, keys)
+    step_jaxpr = jax.make_jaxpr(step_fn)(state, x, y)
+    return init_jaxpr, step_jaxpr
+
+
+@dataclasses.dataclass
+class EngineReport:
+    name: str                     # e.g. "sharded/tree-voting"
+    primitives: collections.Counter
+    dtypes: collections.Counter
+    collectives: dict             # observed counts, collective family only
+    expected: dict | None         # ledger census (None for batched)
+    failures: list
+
+
+def audit_case(name: str, cls, no_center: bool, engine: str,
+               cfg: BoostConfig | None = None) -> EngineReport:
+    cfg = cfg or canonical_config()
+    init_jaxpr, step_jaxpr = trace_engine(cls, cfg, engine,
+                                          no_center=no_center)
+    prims = primitive_census(init_jaxpr) + primitive_census(step_jaxpr)
+    dts = dtype_census(init_jaxpr) + dtype_census(step_jaxpr)
+    label = f"{engine}/{name}"
+    failures: list[str] = []
+
+    for p in sorted(DENY_PRIMITIVES & set(prims)):
+        failures.append(f"{label}: denied primitive `{p}` "
+                        f"×{prims[p]} in trace")
+    for dt in sorted(BAD_DTYPES & set(dts)):
+        failures.append(f"{label}: {dt} appears ×{dts[dt]} in trace "
+                        f"(STATE_DTYPES contract is 32-bit)")
+
+    observed = {p: n for p, n in prims.items() if p in COLLECTIVE_FAMILY}
+    if engine == "batched":
+        expected = None
+        if observed:
+            failures.append(f"{label}: batched engine trace contains "
+                            f"collectives {observed} — it must be "
+                            f"mesh-free")
+    else:
+        expected = ledger.collective_sites_per_round(
+            cls, no_center=no_center)
+        init_coll = {p: n
+                     for p, n in primitive_census(init_jaxpr).items()
+                     if p in COLLECTIVE_FAMILY}
+        if init_coll:
+            failures.append(f"{label}: init_state trace contains "
+                            f"collectives {init_coll} — init must not "
+                            f"touch the wire")
+        step_coll = {p: n
+                     for p, n in primitive_census(step_jaxpr).items()
+                     if p in COLLECTIVE_FAMILY}
+        extra = set(step_coll) - set(expected)
+        if extra:
+            failures.append(
+                f"{label}: unaccounted collective family members "
+                f"{sorted(extra)} (ledger census only declares "
+                f"{sorted(expected)})")
+        for p, want in expected.items():
+            got = step_coll.get(p, 0)
+            if got != want:
+                failures.append(
+                    f"{label}: `{p}` eqn count {got} != {want} "
+                    f"declared by ledger.collective_sites_per_round "
+                    f"— a collective site changed without matching "
+                    f"ledger accounting")
+    return EngineReport(label, prims, dts, observed, expected, failures)
+
+
+def run_audit(cases=None, engines=("batched", "sharded"),
+              cfg: BoostConfig | None = None) -> list[str]:
+    """Full audit; returns failure strings (empty == pass)."""
+    failures: list[str] = []
+    for name, cls, no_center in (cases or engine_cases()):
+        for engine in engines:
+            if engine == "batched" and no_center:
+                continue          # no_center only exists sharded
+            failures.extend(
+                audit_case(name, cls, no_center, engine, cfg).failures)
+    return failures
+
+
+def finalize_smoke(cfg: BoostConfig | None = None) -> None:
+    """Concrete init → finalize round-trip for both engines (stumps):
+    finalize is host-side materialisation, so it has no jaxpr to audit
+    — this asserts it stays that way (consumes stepped state without
+    launching device programs that could hide primitives)."""
+    cfg = cfg or canonical_config()
+    cls = AxisStumps(num_features=CANON["F"])
+    x, y, keys = _inputs(cls, cfg)
+    st = batched.init_state(x, y, keys, cfg, cls=cls)
+    res = batched.finalize(st, x, y, jnp.ones(y.shape, bool), cfg, cls)
+    assert isinstance(res.rounds, np.ndarray)
+    st2 = sharded_batched.init_state_sharded(x, y, keys, cfg, cls=cls)
+    res2 = sharded_batched.finalize_sharded(
+        st2, x, y, jnp.ones(y.shape, bool), cfg, cls)
+    assert isinstance(res2.wire_bytes, np.ndarray)
