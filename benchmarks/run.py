@@ -59,18 +59,22 @@ EXPECTED_GATES = {
                    "tree_comm_savings"),
     "streaming": ("streaming_small_m_parity", "streaming_hist_parity",
                   "streaming_peak_memory", "streaming_sketch_epsilon"),
+    "observability": ("obs_trace_ledger_exact", "obs_trace_masked",
+                      "obs_trace_preempt_resume",
+                      "obs_disabled_overhead"),
 }
 
 
 def _suite():
     from benchmarks import (baselines, batched_classify, checkpointing,
                             fault_injection, finite_class, kernel_micro,
-                            paper_claims, roofline, serving,
-                            sharded_scenarios, streaming, tree_comms,
-                            trees)
+                            observability, paper_claims, roofline,
+                            serving, sharded_scenarios, streaming,
+                            tree_comms, trees)
     return {
         "batched_classify": batched_classify.run_all,
         "serving": serving.run_all,
+        "observability": observability.run_all,
         "fault_injection": fault_injection.run_all,
         "checkpointing": checkpointing.run_all,
         "trees": trees.run_all,
@@ -135,6 +139,80 @@ def write_trajectory_snapshot(all_rows: dict, failures: int,
     return path
 
 
+def _collect_trend(root: str | None = None) -> dict:
+    """bench name → [(snapshot n, date, us_per_call), …] across every
+    BENCH_<n>.json at the repo root, in snapshot order."""
+    root = _repo_root() if root is None else root
+    snaps = []
+    for f in glob.glob(os.path.join(root, "BENCH_*.json")):
+        m = re.fullmatch(r"BENCH_(\d+)\.json", os.path.basename(f))
+        if not m:
+            continue
+        try:
+            with open(f) as fh:
+                snap = json.load(fh)
+        except (OSError, ValueError):
+            continue                     # unreadable snapshot: skip
+        snaps.append((int(m.group(1)), snap))
+    snaps.sort()
+    series: dict = {}
+    for n, snap in snaps:
+        for suite_name, rows in (snap.get("results") or {}).items():
+            if not isinstance(rows, list):
+                continue
+            for row in rows:
+                if not isinstance(row, dict):
+                    continue
+                try:
+                    us = float(row.get("us_per_call"))
+                except (TypeError, ValueError):
+                    continue
+                if us <= 0:              # failed or untimed rows
+                    continue
+                series.setdefault(row.get("bench", suite_name),
+                                  []).append((n, snap.get("date", ""),
+                                              us))
+    return series
+
+
+def write_report(tolerance_pct: float = 25.0,
+                 root: str | None = None) -> int:
+    """Merge the BENCH_<n>.json trajectory into a per-bench trend
+    table: latest vs previous snapshot, % delta, regressions beyond
+    the tolerance flagged.  Printed to stdout and appended to
+    GITHUB_STEP_SUMMARY when CI provides one; returns the number of
+    flagged benches (reported, not an exit failure — snapshot-to-
+    snapshot wall time is machine-noisy; the correctness gates are the
+    hard bar)."""
+    series = _collect_trend(root)
+    lines = ["| bench | latest µs | prev µs | Δ% | snapshots | flag |",
+             "|---|---|---|---|---|---|"]
+    flagged = 0
+    for bench in sorted(series):
+        pts = series[bench]
+        _, _, us1 = pts[-1]
+        if len(pts) > 1:
+            _, _, us0 = pts[-2]
+            delta = (us1 - us0) / us0 * 100.0
+            flag = "REGRESSED" if delta > tolerance_pct else ""
+            flagged += bool(flag)
+            lines.append(f"| {bench} | {us1:.0f} | {us0:.0f} "
+                         f"| {delta:+.1f}% | {len(pts)} | {flag} |")
+        else:
+            lines.append(f"| {bench} | {us1:.0f} | — | — | 1 | |")
+    table = "\n".join(lines)
+    print(table)
+    if flagged:
+        print(f"# {flagged} bench(es) regressed beyond "
+              f"{tolerance_pct:.0f}%", file=sys.stderr)
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as f:
+            f.write(f"## Benchmark trend (tolerance "
+                    f"{tolerance_pct:.0f}%)\n\n" + table + "\n")
+    return flagged
+
+
 def _write_gate_summary(suite: dict, gates_executed: dict) -> None:
     """Print the executed-gate table; append it to GITHUB_STEP_SUMMARY
     when CI provides one, so every run records WHICH correctness gates
@@ -169,7 +247,20 @@ def main() -> None:
     ap.add_argument("--list", action="store_true",
                     help="print registered suites and their expected "
                          "gates, then exit 0 (no benchmark runs)")
+    ap.add_argument("--report", action="store_true",
+                    help="merge the BENCH_<n>.json snapshots into a "
+                         "per-bench trend table (latest vs previous, "
+                         "%% delta, regressions flagged) and exit — "
+                         "no benchmark runs")
+    ap.add_argument("--report-tolerance", type=float, default=25.0,
+                    metavar="PCT",
+                    help="--report: flag benches whose latest "
+                         "us_per_call regressed more than PCT%% over "
+                         "the previous snapshot (default 25)")
     args = ap.parse_args()
+    if args.report:
+        write_report(args.report_tolerance)
+        return
     _ensure_src_importable()
     suite = _suite()
     if args.list:

@@ -41,11 +41,13 @@ checkpoint under the final name (the prior snapshot survives intact).
 
 from __future__ import annotations
 
+import contextlib
 import hashlib
 import os
 import queue
 import tempfile
 import threading
+import time
 import warnings
 from typing import Callable
 
@@ -53,6 +55,9 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
+
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 FORMAT = 2
 
@@ -159,27 +164,42 @@ def leaf_hash(arr: np.ndarray) -> str:
 
 def _save_flat(path: str, flat: dict, meta: dict, treedef: str | None,
                base: str | None, base_hashes: dict | None) -> dict:
-    """Serialize a flattened {name: array} dict; returns its hashes."""
-    hashes = {k: leaf_hash(v) for k, v in flat.items()}
-    if base is not None and base_hashes is not None:
-        write = {k: v for k, v in flat.items()
-                 if hashes[k] != base_hashes.get(k)}
-        base_name = os.path.basename(base)
-    else:
-        write, base_name = flat, None
-    payload = {
-        "__meta__": dict(meta or {}),
-        "__format__": FORMAT,
-        "__treedef__": treedef,
-        "__base__": base_name,
-        "__hashes__": hashes,
-        "arrays": {
-            k: {"dtype": str(v.dtype), "shape": list(v.shape),
-                "data": v.tobytes()}
-            for k, v in write.items()
-        },
-    }
-    _write_atomic(path, msgpack.packb(payload))
+    """Serialize a flattened {name: array} dict; returns its hashes.
+
+    Every write path funnels through here (sync :func:`save_pytree`,
+    the :class:`AsyncCheckpointer` worker, :class:`CheckpointManager`),
+    so this is also where the observability hooks live: a
+    ``ckpt_write`` trace span (worker-thread saves show up under their
+    own tid in Perfetto) and the ``ckpt.save_s`` histogram / counters
+    of `repro.obs.metrics.default_registry`.
+    """
+    t0 = time.perf_counter()
+    with obs_trace.span("ckpt_write", "checkpoint", path=path,
+                        full=base is None) as sp:
+        hashes = {k: leaf_hash(v) for k, v in flat.items()}
+        if base is not None and base_hashes is not None:
+            write = {k: v for k, v in flat.items()
+                     if hashes[k] != base_hashes.get(k)}
+            base_name = os.path.basename(base)
+        else:
+            write, base_name = flat, None
+        sp.update(leaves_written=len(write), leaves_total=len(flat))
+        payload = {
+            "__meta__": dict(meta or {}),
+            "__format__": FORMAT,
+            "__treedef__": treedef,
+            "__base__": base_name,
+            "__hashes__": hashes,
+            "arrays": {
+                k: {"dtype": str(v.dtype), "shape": list(v.shape),
+                    "data": v.tobytes()}
+                for k, v in write.items()
+            },
+        }
+        _write_atomic(path, msgpack.packb(payload))
+    reg = obs_metrics.default_registry()
+    reg.counter("ckpt.saves").inc()
+    reg.histogram("ckpt.save_s").observe(time.perf_counter() - t0)
     return hashes
 
 
@@ -243,6 +263,19 @@ def _load_arrays(path: str, _depth: int = 0):
     return arrays, payload
 
 
+@contextlib.contextmanager
+def _restore_scope(path: str):
+    """One restore's observability: a ``ckpt_restore`` trace span plus
+    the ``ckpt.restore_s`` histogram / ``ckpt.restores`` counter of
+    `repro.obs.metrics.default_registry` (metrics only on success)."""
+    t0 = time.perf_counter()
+    with obs_trace.span("ckpt_restore", "checkpoint", path=path):
+        yield
+    reg = obs_metrics.default_registry()
+    reg.counter("ckpt.restores").inc()
+    reg.histogram("ckpt.restore_s").observe(time.perf_counter() - t0)
+
+
 def load_pytree(path: str, like=None):
     """Returns (tree_or_flat_dict, meta).  With ``like``, restores the
     exact pytree structure of ``like``.
@@ -255,34 +288,38 @@ def load_pytree(path: str, like=None):
     checkpoint/resume bit-parity depends on the state landing in
     exactly the slots (and representations) it left.
     """
-    arrays, payload = _load_arrays(path)
-    meta = payload.get("__meta__", {})
-    if like is None:
-        return arrays, meta
-    ref = _flatten_with_paths(like)
-    missing = set(ref) - set(arrays)
-    if missing:
-        raise KeyError(f"checkpoint missing keys: {sorted(missing)[:5]}...")
-    flat, _ = jax.tree_util.tree_flatten_with_path(like)
-    leaves = []
-    for tree_path, leaf in flat:
-        key = "/".join(_entry_key(p) for p in tree_path)
-        arr = arrays[key]
-        if tuple(arr.shape) != tuple(np.shape(leaf)):
-            raise ValueError(
-                f"checkpoint leaf {key!r} has shape {tuple(arr.shape)} "
-                f"but the template expects {tuple(np.shape(leaf))} — "
-                f"restore against the inputs the state was saved for "
-                f"(file: {path})")
-        want = np.dtype(getattr(leaf, "dtype", np.asarray(leaf).dtype))
-        if arr.dtype != want:
-            raise ValueError(
-                f"checkpoint leaf {key!r} has dtype {arr.dtype} but the "
-                f"template expects {want} — a silent astype here would "
-                f"break bit-parity invisibly (file: {path})")
-        leaves.append(jnp.asarray(arr))
-    return jax.tree_util.tree_unflatten(
-        jax.tree_util.tree_structure(like), leaves), meta
+    with _restore_scope(path):
+        arrays, payload = _load_arrays(path)
+        meta = payload.get("__meta__", {})
+        if like is None:
+            return arrays, meta
+        ref = _flatten_with_paths(like)
+        missing = set(ref) - set(arrays)
+        if missing:
+            raise KeyError(
+                f"checkpoint missing keys: {sorted(missing)[:5]}...")
+        flat, _ = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for tree_path, leaf in flat:
+            key = "/".join(_entry_key(p) for p in tree_path)
+            arr = arrays[key]
+            if tuple(arr.shape) != tuple(np.shape(leaf)):
+                raise ValueError(
+                    f"checkpoint leaf {key!r} has shape "
+                    f"{tuple(arr.shape)} but the template expects "
+                    f"{tuple(np.shape(leaf))} — restore against the "
+                    f"inputs the state was saved for (file: {path})")
+            want = np.dtype(getattr(leaf, "dtype",
+                                    np.asarray(leaf).dtype))
+            if arr.dtype != want:
+                raise ValueError(
+                    f"checkpoint leaf {key!r} has dtype {arr.dtype} but "
+                    f"the template expects {want} — a silent astype "
+                    f"here would break bit-parity invisibly "
+                    f"(file: {path})")
+            leaves.append(jnp.asarray(arr))
+        return jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(like), leaves), meta
 
 
 def restore_pytree(path: str):
@@ -290,17 +327,20 @@ def restore_pytree(path: str):
     checkpoint's own manifest — leaf names, dtypes, shapes, and the
     :func:`register_treedef` name recorded at save time.  No engine
     init, no template, no discarded device compute."""
-    arrays, payload = _load_arrays(path)
-    name = payload.get("__treedef__") or "nested_dict"
-    if name not in _TREEDEF_REGISTRY:
-        raise KeyError(
-            f"checkpoint treedef {name!r} is not registered — import "
-            f"the module that defines it (known: "
-            f"{sorted(_TREEDEF_REGISTRY)})")
-    # hand the reconstructor the raw host arrays: a jnp.asarray here
-    # would silently truncate dtypes (e.g. int64→int32 without x64)
-    # BEFORE the engine's dtype check could refuse the drift
-    return _TREEDEF_REGISTRY[name](arrays), payload.get("__meta__", {})
+    with _restore_scope(path):
+        arrays, payload = _load_arrays(path)
+        name = payload.get("__treedef__") or "nested_dict"
+        if name not in _TREEDEF_REGISTRY:
+            raise KeyError(
+                f"checkpoint treedef {name!r} is not registered — "
+                f"import the module that defines it (known: "
+                f"{sorted(_TREEDEF_REGISTRY)})")
+        # hand the reconstructor the raw host arrays: a jnp.asarray
+        # here would silently truncate dtypes (e.g. int64→int32
+        # without x64) BEFORE the engine's dtype check could refuse
+        # the drift
+        return _TREEDEF_REGISTRY[name](arrays), payload.get(
+            "__meta__", {})
 
 
 def snapshot_base(path: str) -> str | None:

@@ -61,6 +61,7 @@ from repro.ckpt import msgpack_ckpt
 from repro.core import boost_attempt, classify, ledger as L, streaming, weak
 from repro.core import weights as W
 from repro.core.types import BoostConfig, ClassifyResult, Ledger
+from repro.obs import trace as obs_trace
 
 
 class StepState(NamedTuple):
@@ -375,7 +376,10 @@ def run_rounds(state: StepState, x, y, cfg: BoostConfig, cls,
     B, k = x.shape[0], x.shape[1]
     sched = canon_player_sched(player_sched, B, k)
     n_arr = _RUN_FOREVER if n is None else jnp.int32(n)
-    return _run_rounds_jit(x, y, sched, state, n_arr, cfg, cls)
+    with obs_trace.span("run_rounds", "engine", engine="batched", B=B,
+                        n=(-1 if n is None else int(n))), \
+            obs_trace.annotate("run_rounds"):
+        return _run_rounds_jit(x, y, sched, state, n_arr, cfg, cls)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "cls", "t_buf"))
@@ -421,9 +425,11 @@ def lower_classify(x, y, alive, keys, cfg: BoostConfig, cls,
     """
     t_buf = cfg.num_rounds(x.shape[1] * x.shape[2])
     sched = canon_player_sched(player_sched, x.shape[0], x.shape[1])
-    return _classify_batched_jit.lower(
-        jnp.asarray(x), jnp.asarray(y), jnp.asarray(alive), keys, sched,
-        cfg, cls, t_buf).compile()
+    with obs_trace.span("compile", "compile", engine="batched",
+                        B=int(x.shape[0]), mloc=int(x.shape[2])):
+        return _classify_batched_jit.lower(
+            jnp.asarray(x), jnp.asarray(y), jnp.asarray(alive), keys,
+            sched, cfg, cls, t_buf).compile()
 
 
 @dataclasses.dataclass
@@ -558,7 +564,8 @@ def finalize(state: StepState, x, y, alive0, cfg: BoostConfig, cls,
     materialisation — no protocol math happens here, so finalizing a
     restored checkpoint equals finalizing the original state bit for
     bit (tests/test_preemption.py)."""
-    out = jax.device_get(state)
+    with obs_trace.span("finalize", "engine", engine="batched"):
+        out = jax.device_get(state)
     return BatchedClassifyResult(
         hypotheses=out.h_params, rounds=out.rounds,
         ok=np.asarray(out.done), attempts=out.attempt,

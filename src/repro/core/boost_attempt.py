@@ -48,6 +48,7 @@ else:
 from repro.core import approximation, weights as W
 from repro.core import streaming, weak
 from repro.core.types import BoostAttemptResult, BoostConfig
+from repro.obs import trace as obs_trace
 
 
 class _Carry(NamedTuple):
@@ -82,12 +83,16 @@ def _center_erm(cls, cx, cy, mix, c):
     sharded engine's real collectives produce (bit-parity per mode).
     """
     k = cy.shape[0]
-    if getattr(cls, "comm_mode", "coreset") != "coreset":
-        return cls.erm_players(cx, cy, mix / c)
-    w = jnp.broadcast_to(mix[:, None] / c, (k, c)).reshape(-1)
-    cx_flat = cx.reshape((k * c,) + cx.shape[2:])
-    cy_flat = cy.reshape(-1)
-    return cls.erm(cx_flat, cy_flat, w)
+    # jax.named_scope is device-side metadata (it adds no ops and no
+    # host work) — profiler traces group the ERM under this label; it
+    # is NOT an obs emission, so RL006 permits it in traced code
+    with jax.named_scope("center_erm"):
+        if getattr(cls, "comm_mode", "coreset") != "coreset":
+            return cls.erm_players(cx, cy, mix / c)
+        w = jnp.broadcast_to(mix[:, None] / c, (k, c)).reshape(-1)
+        cx_flat = cx.reshape((k * c,) + cx.shape[2:])
+        cy_flat = cy.reshape(-1)
+        return cls.erm(cx_flat, cy_flat, w)
 
 
 def _round_body(cfg: BoostConfig, cls, x, y, alive, x_orders,
@@ -194,8 +199,14 @@ def run_boost_attempt(x, y, alive, key, cfg: BoostConfig,
     m = int(jnp.sum(alive)) if not isinstance(alive, bool) else x.size
     num_rounds = cfg.num_rounds(max(m, 2))
     hits0 = W.init_hits(x.shape[:2])
-    out = _boost_attempt_jit(x, y, alive, hits0, key, cfg, cls, num_rounds)
-    out = jax.device_get(out)
+    with obs_trace.span("boost_attempt", "attempt", m_alive=m,
+                        bound=num_rounds) as sp, \
+            obs_trace.annotate("boost_attempt"):
+        out = _boost_attempt_jit(x, y, alive, hits0, key, cfg, cls,
+                                 num_rounds)
+        out = jax.device_get(out)
+        if obs_trace.enabled():
+            sp.update(rounds=int(out.t), stuck=bool(out.stuck))
     return BoostAttemptResult(
         stuck=bool(out.stuck), rounds=int(out.t),
         hypotheses=out.h_params,

@@ -41,6 +41,7 @@ import numpy as np
 
 from repro.core import boost_attempt, ledger as L, weak
 from repro.core.types import BoostConfig, ClassifyResult, Ledger
+from repro.obs import trace as obs_trace
 
 
 # ---------------------------------------------------------------------------
@@ -173,6 +174,22 @@ def _point_counts(x: np.ndarray, y: np.ndarray, alive: np.ndarray,
     return pos.sum(0).astype(np.int64), neg.sum(0).astype(np.int64)
 
 
+def _emit_attempt(sp, att_led: Ledger, res, q_control: int,
+                  q_dispute: int) -> None:
+    """Annotate a host attempt span with its per-category wire bits —
+    the attempt's Theorem 4.1 ledger delta plus the quarantine charges
+    — in the ``task_bits`` format ``repro.obs.roundtrace``'s validator
+    sums (the host engine is single-task: everything lands on task 0).
+    """
+    bits = obs_trace.ledger_bits(att_led)
+    bits["control"] += q_control
+    bits["quarantine"] += q_dispute
+    sp.update(task_bits={"0": bits},
+              task_rounds={"0": res.rounds + (1 if res.stuck else 0)},
+              task_attempts={"0": 1},
+              rounds=res.rounds, stuck=res.stuck)
+
+
 def run_accurately_classify(x, y, key, cfg: BoostConfig, cls,
                             alive=None) -> ClassifyResult:
     """Host-driven outer loop (≤ opt_budget BoostAttempt calls).
@@ -194,37 +211,50 @@ def run_accurately_classify(x, y, key, cfg: BoostConfig, cls,
     m_bits_m = max(int(np.ceil(np.log2(max(k * mloc, 2)))), 1)
     n = L.domain_size(cls)
     for _attempt in range(cfg.opt_budget + 1):
-        key, sub = jax.random.split(key)
-        m_alive = int(alive_np.sum())
-        res = boost_attempt.run_boost_attempt(
-            jnp.asarray(x_np), jnp.asarray(y_np), jnp.asarray(alive_np),
-            sub, cfg, cls)
-        led = led + L.boost_attempt_ledger(cfg, cls, max(m_alive, 2),
-                                           res.rounds, res.stuck)
-        stuck_history.append(res.stuck)
-        if not res.stuck:
-            result = res
-            break
-        # ---- full-point quarantine of the non-realizable coreset ----
-        cx = np.asarray(res.coreset_x).reshape(
-            (-1,) + tuple(np.asarray(res.coreset_x).shape[2:]))
-        pts = np.unique(cx, axis=0) if cx.ndim == 2 else np.unique(cx)
-        pos, neg = _point_counts(x_np, y_np, alive_np, pts)
-        # A coreset from a fully-dead shard can name points with zero
-        # alive copies (repeat-disputed or initially-padded).  They
-        # carry no label evidence, so they don't enter the D-table /
-        # classifier vote (the ensemble decides there) — this keeps f
-        # identical to the mask-based batched engine.  The broadcast
-        # still happened, so the ledger below charges the full |pts|.
-        keep = (pos + neg) > 0
-        dis_pts.append(pts[keep])
-        dis_pos.append(pos[keep])
-        dis_neg.append(neg[keep])
-        alive_np = _kill_points(x_np, alive_np, pts)
-        # ledger: point-set broadcast + per-player count reports
-        P = int(pts.shape[0])
-        led.bits_control += cfg.k * P * L.point_bits(n)       # broadcast
-        led.bits_dispute += cfg.k * P * 2 * m_bits_m          # counts up
+        with obs_trace.span("attempt", "protocol", engine="host",
+                            attempt=_attempt) as att_sp:
+            key, sub = jax.random.split(key)
+            m_alive = int(alive_np.sum())
+            res = boost_attempt.run_boost_attempt(
+                jnp.asarray(x_np), jnp.asarray(y_np),
+                jnp.asarray(alive_np), sub, cfg, cls)
+            att_led = L.boost_attempt_ledger(cfg, cls, max(m_alive, 2),
+                                             res.rounds, res.stuck)
+            led = led + att_led
+            stuck_history.append(res.stuck)
+            if not res.stuck:
+                result = res
+                if obs_trace.enabled():
+                    _emit_attempt(att_sp, att_led, res, 0, 0)
+                break
+            # ---- full-point quarantine of the non-realizable coreset
+            with obs_trace.span("quarantine", "protocol",
+                                attempt=_attempt):
+                cx = np.asarray(res.coreset_x).reshape(
+                    (-1,) + tuple(np.asarray(res.coreset_x).shape[2:]))
+                pts = (np.unique(cx, axis=0) if cx.ndim == 2
+                       else np.unique(cx))
+                pos, neg = _point_counts(x_np, y_np, alive_np, pts)
+                # A coreset from a fully-dead shard can name points
+                # with zero alive copies (repeat-disputed or
+                # initially-padded).  They carry no label evidence, so
+                # they don't enter the D-table / classifier vote (the
+                # ensemble decides there) — this keeps f identical to
+                # the mask-based batched engine.  The broadcast still
+                # happened, so the ledger below charges the full |pts|.
+                keep = (pos + neg) > 0
+                dis_pts.append(pts[keep])
+                dis_pos.append(pos[keep])
+                dis_neg.append(neg[keep])
+                alive_np = _kill_points(x_np, alive_np, pts)
+                # ledger: point-set broadcast + per-player count reports
+                P = int(pts.shape[0])
+                q_control = cfg.k * P * L.point_bits(n)       # broadcast
+                q_dispute = cfg.k * P * 2 * m_bits_m          # counts up
+                led.bits_control += q_control
+                led.bits_dispute += q_dispute
+            if obs_trace.enabled():
+                _emit_attempt(att_sp, att_led, res, q_control, q_dispute)
     if result is None:
         raise RuntimeError(
             f"AccuratelyClassify exceeded opt_budget={cfg.opt_budget}; "

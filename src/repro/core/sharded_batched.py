@@ -73,6 +73,7 @@ from repro.core import weights as W
 from repro.core.pinned import pinned_argmax
 from repro.core.boost_attempt import _center_erm, _gather_coreset, _shard_map
 from repro.core.types import BoostConfig
+from repro.obs import trace as obs_trace
 
 AXIS = "players"
 
@@ -511,7 +512,11 @@ def run_rounds_sharded(state: dict, x, y, cfg: BoostConfig, cls,
         mesh = make_players_mesh(k)
     fn = _build_sharded_step(mesh, cfg, cls, no_center)
     n_arr = batched._RUN_FOREVER if n is None else jnp.int32(n)
-    return fn(x, y, sched, state, n_arr)
+    with obs_trace.span("run_rounds", "engine", engine="sharded", B=B,
+                        n=(-1 if n is None else int(n)),
+                        mesh_devices=int(mesh.shape[AXIS])), \
+            obs_trace.annotate("run_rounds_sharded"):
+        return fn(x, y, sched, state, n_arr)
 
 
 @functools.lru_cache(maxsize=None)
@@ -539,8 +544,10 @@ def lower_classify_sharded(x, y, alive, keys, cfg: BoostConfig, cls,
     sched = batched.canon_player_sched(player_sched, x.shape[0],
                                        x.shape[1])
     fn = _build_sharded(mesh, cfg, cls, t_buf, no_center)
-    return fn.lower(jnp.asarray(x), jnp.asarray(y), jnp.asarray(alive),
-                    keys, sched).compile()
+    with obs_trace.span("compile", "compile", engine="sharded",
+                        B=int(x.shape[0]), mloc=int(x.shape[2])):
+        return fn.lower(jnp.asarray(x), jnp.asarray(y),
+                        jnp.asarray(alive), keys, sched).compile()
 
 
 @dataclasses.dataclass
@@ -672,7 +679,8 @@ def finalize_sharded(state: dict, x, y, alive0, cfg: BoostConfig, cls,
     ``hist_wire_*``, [B] int32 ``wire_*``) that
     ``validate_ledger`` checks against the Theorem 4.1 accounting
     (docs/ledger.md).  Pure materialisation, no protocol math."""
-    out = jax.device_get(state)
+    with obs_trace.span("finalize", "engine", engine="sharded"):
+        out = jax.device_get(state)
     return ShardedClassifyResult(
         hypotheses=out["h_params"], rounds=out["rounds"],
         ok=np.asarray(out["done"]), attempts=out["attempt"],

@@ -74,6 +74,7 @@ import numpy as np
 from repro.ckpt import msgpack_ckpt
 from repro.core import batched, scenarios, sharded_batched, tasks, weak
 from repro.core.types import BoostConfig
+from repro.obs import trace as obs_trace
 
 
 # ---------------------------------------------------------------------------
@@ -226,7 +227,10 @@ class CompileCache:
             self.stats.hits += 1
             return self._entries[key]
         t0 = time.perf_counter()
-        compiled = build()
+        with obs_trace.span("compile", "compile", scope="scheduler",
+                            B=key.B, mloc=key.mloc,
+                            engine=getattr(key.compat, "engine", str(key.compat))):
+            compiled = build()
         self.stats.compile_s += time.perf_counter() - t0
         self.stats.misses += 1
         self.stats.compiles += 1
@@ -283,6 +287,10 @@ class SchedulerStats:
     padded_requests: int = 0
     preemptions: int = 0
     resumes: int = 0
+    # (B, mloc, engine) -> (served real lanes, dispatched lane capacity)
+    # — capacity accumulates B per dispatch, so served/capacity is the
+    # bucket's lane occupancy (repro.obs.metrics.publish_scheduler_stats
+    # exports all three as gauges)
     per_bucket: dict = dataclasses.field(default_factory=dict)
 
     def note(self, bucket: BucketKey, n_real: int, B: int):
@@ -290,7 +298,8 @@ class SchedulerStats:
         self.served += n_real
         self.filler_lanes += B - n_real
         key = (bucket.B, bucket.mloc, bucket.compat.engine)
-        self.per_bucket[key] = self.per_bucket.get(key, 0) + n_real
+        served, capacity = self.per_bucket.get(key, (0, 0))
+        self.per_bucket[key] = (served + n_real, capacity + B)
 
 
 @dataclasses.dataclass
@@ -444,15 +453,18 @@ class BoostScheduler:
         compiled = self._compiled(bucket, x, y, alive, keys)
         compat = bucket.compat
         t0 = time.perf_counter()
-        if compat.engine == "sharded":
-            res = sharded_batched.run_accurately_classify_sharded(
-                x, y, keys, compat.cfg, compat.cls,
-                mesh=self._mesh(compat.cfg.k), alive=alive,
-                compiled=compiled, m_true=m_true)
-        else:
-            res = batched.run_accurately_classify_batched(
-                x, y, keys, compat.cfg, compat.cls, alive=alive,
-                compiled=compiled, m_true=m_true)
+        with obs_trace.span("dispatch", "scheduler",
+                            engine=compat.engine, B=bucket.B,
+                            mloc=bucket.mloc):
+            if compat.engine == "sharded":
+                res = sharded_batched.run_accurately_classify_sharded(
+                    x, y, keys, compat.cfg, compat.cls,
+                    mesh=self._mesh(compat.cfg.k), alive=alive,
+                    compiled=compiled, m_true=m_true)
+            else:
+                res = batched.run_accurately_classify_batched(
+                    x, y, keys, compat.cfg, compat.cls, alive=alive,
+                    compiled=compiled, m_true=m_true)
         return res, time.perf_counter() - t0
 
     # -- round-granular engine access (preemption path) --------------------
@@ -501,12 +513,17 @@ class BoostScheduler:
         later ones serialize only changed leaves."""
         os.makedirs(self.ckpt_dir, exist_ok=True)
         path = os.path.join(self.ckpt_dir, f"preempt_{seq:04d}.msgpack")
-        self._ckpt_writer().save(
-            path, state,
-            meta={"rounds_done": rounds_done,
-                  "engine": bucket.compat.engine,
-                  "rids": [a[0].rid for a in admitted]},
-            treedef=self._state_treedef(bucket), chain=chain)
+        # the span covers only what the loop pays (device→host copy +
+        # enqueue); the writer thread's own packb+fsync time lands in
+        # the ckpt.save_s metric histogram (ckpt/msgpack_ckpt.py)
+        with obs_trace.span("ckpt_save", "checkpoint", path=path,
+                            rounds_done=rounds_done, chain=chain):
+            self._ckpt_writer().save(
+                path, state,
+                meta={"rounds_done": rounds_done,
+                      "engine": bucket.compat.engine,
+                      "rids": [a[0].rid for a in admitted]},
+                treedef=self._state_treedef(bucket), chain=chain)
         return path
 
     def _preempt_dispatch(self, seq: int, bucket: BucketKey, admitted,
@@ -516,12 +533,15 @@ class BoostScheduler:
         for resume."""
         x, y, alive, keys = payload
         t0 = time.perf_counter()
-        state = self._engine_init(bucket, x, y, alive, keys)
-        state = self._engine_run(bucket, state, x, y, n=n_rounds)
-        chain = f"d{seq:04d}"
-        path = self._checkpoint(seq, bucket, state, admitted, n_rounds,
-                                chain)
-        del state                              # the preemption: state dies
+        with obs_trace.span("preempt", "scheduler", seq=seq,
+                            rounds=n_rounds,
+                            engine=bucket.compat.engine):
+            state = self._engine_init(bucket, x, y, alive, keys)
+            state = self._engine_run(bucket, state, x, y, n=n_rounds)
+            chain = f"d{seq:04d}"
+            path = self._checkpoint(seq, bucket, state, admitted,
+                                    n_rounds, chain)
+            del state                          # the preemption: state dies
         self._suspended.append(_Suspended(
             bucket=bucket, admitted=admitted, payload=payload,
             m_true=m_true, ckpt_path=path, rounds_done=n_rounds,
@@ -543,24 +563,32 @@ class BoostScheduler:
         """
         x, y, alive, keys = sus.payload
         t0 = time.perf_counter()
-        self._ckpt_writer().wait()             # tip durable before read
-        state, _meta = msgpack_ckpt.restore_pytree(sus.ckpt_path)
-        self.stats.resumes += 1
-        n_pre = self.preempt.get(seq)
-        if n_pre is not None:                  # preempted AGAIN mid-resume
-            state = self._engine_run(sus.bucket, state, x, y, n=n_pre)
-            path = self._checkpoint(seq, sus.bucket, state, sus.admitted,
-                                    sus.rounds_done + n_pre, sus.chain)
-            del state
-            self._suspended.append(dataclasses.replace(
-                sus, ckpt_path=path,
-                rounds_done=sus.rounds_done + n_pre,
-                paths=sus.paths + (path,)))
-            self.stats.preemptions += 1
-            return [], time.perf_counter() - t0
-        state = self._engine_run(sus.bucket, state, x, y, n=None)
-        res = self._engine_finalize(sus.bucket, state, x, y, alive,
-                                    sus.m_true)
+        # early returns inside the span still close it — a resume that
+        # is itself preempted leaves no dangling event in the trace
+        with obs_trace.span("resume", "scheduler", seq=seq,
+                            rounds_done=sus.rounds_done,
+                            engine=sus.bucket.compat.engine) as r_sp:
+            self._ckpt_writer().wait()         # tip durable before read
+            state, _meta = msgpack_ckpt.restore_pytree(sus.ckpt_path)
+            self.stats.resumes += 1
+            n_pre = self.preempt.get(seq)
+            if n_pre is not None:              # preempted AGAIN mid-resume
+                r_sp.update(repreempted=True, rounds=n_pre)
+                state = self._engine_run(sus.bucket, state, x, y, n=n_pre)
+                path = self._checkpoint(seq, sus.bucket, state,
+                                        sus.admitted,
+                                        sus.rounds_done + n_pre,
+                                        sus.chain)
+                del state
+                self._suspended.append(dataclasses.replace(
+                    sus, ckpt_path=path,
+                    rounds_done=sus.rounds_done + n_pre,
+                    paths=sus.paths + (path,)))
+                self.stats.preemptions += 1
+                return [], time.perf_counter() - t0
+            state = self._engine_run(sus.bucket, state, x, y, n=None)
+            res = self._engine_finalize(sus.bucket, state, x, y, alive,
+                                        sus.m_true)
         service_s = time.perf_counter() - t0
         self._ckpt_writer().forget(sus.chain)
         for p in sus.paths:                    # consumed — don't litter

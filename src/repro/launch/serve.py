@@ -54,6 +54,8 @@ import numpy as np
 from repro.configs import base
 from repro.core.pinned import pinned_argmax
 from repro.models import build, frontend
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 
 def run(args) -> dict:
@@ -284,6 +286,9 @@ def run_serve_stream(args) -> dict:
         sched.warm(reqs)                # compile every reachable bucket
     warm = dataclasses.replace(sched.cache.stats)
     done = sched.run_stream(reqs)
+    reg = obs_metrics.default_registry()
+    obs_metrics.publish_cache_stats(sched.cache.stats, reg)
+    obs_metrics.publish_scheduler_stats(sched.stats, reg)
     result = {
         "workload": "serve-stream", "engine": args.engine,
         "trace": args.trace, "policy": args.policy,
@@ -372,17 +377,33 @@ def build_parser() -> argparse.ArgumentParser:
                     help="preempt dispatch D after R wire rounds "
                          "(repeatable); state checkpoints to --ckpt-dir")
     ap.add_argument("--ckpt-dir", default="experiments/preempt_ckpt")
+    # observability (repro/obs): host-span tracing + metrics snapshot
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record host protocol spans and write a "
+                         "Chrome/Perfetto trace JSON here (load it at "
+                         "https://ui.perfetto.dev)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the metrics registry (scheduler/cache "
+                         "counters, ckpt timing histograms) as JSON")
     return ap
 
 
 def main():
     args = build_parser().parse_args()
-    if args.workload == "serve-stream":
-        run_serve_stream(args)
-    elif args.workload == "classify":
-        run_classify(args)
-    else:
-        run(args)
+    rec = obs_trace.enable() if args.trace_out else None
+    try:
+        if args.workload == "serve-stream":
+            run_serve_stream(args)
+        elif args.workload == "classify":
+            run_classify(args)
+        else:
+            run(args)
+    finally:
+        if rec is not None:
+            obs_trace.disable()
+            rec.save(args.trace_out)
+        if args.metrics_out:
+            obs_metrics.default_registry().save(args.metrics_out)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,26 @@
+"""Observability: host-side tracing + metrics (docs/observability.md).
+
+Two pillars, both disabled by default and free when off:
+
+* :mod:`repro.obs.trace`   — span/event recorder emitting Chrome-trace
+  JSON (Perfetto-viewable), with ``jax.profiler`` hooks so device
+  activity nests under protocol spans;
+* :mod:`repro.obs.metrics` — counters / gauges / fixed-bucket latency
+  histograms (p50/p99 derivable) that scheduler and checkpoint stats
+  publish into.
+
+:mod:`repro.obs.roundtrace` drives an engine one wire round at a time
+and derives each round's per-category wire bits from state-counter
+deltas — the trace↔ledger cross-validation that makes the trace a
+second, independent witness of the Theorem 4.1 accounting.
+
+Emission is HOST-SIDE ONLY: repro-lint rule RL006 rejects obs calls
+reachable from traced (jitted) code, where they would silently become
+trace-time constants.
+"""
+
+from repro.obs import trace, metrics, roundtrace  # noqa: F401  (order:
+# trace/metrics are dependency-free; roundtrace pulls repro.core.ledger
+# and must come last so a core → obs.trace import never cycles)
+
+__all__ = ["metrics", "roundtrace", "trace"]

@@ -61,7 +61,7 @@ def test_baseline_suppressions_file_is_empty():
 # fixture pairs, one per rule
 # ---------------------------------------------------------------------------
 
-SOURCE_RULES = ("RL001", "RL002", "RL003", "RL005")
+SOURCE_RULES = ("RL001", "RL002", "RL003", "RL005", "RL006")
 
 
 @pytest.mark.parametrize("rid", SOURCE_RULES)

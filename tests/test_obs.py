@@ -1,0 +1,275 @@
+"""repro/obs: tracing + metrics units, and trace integrity under faults.
+
+Three layers:
+
+* instrument units — the no-op fast path when tracing is disabled, span
+  args/update semantics, Chrome-trace export, fixed-bucket histogram
+  quantiles, registry get-or-create discipline;
+* fault integrity — a round span interrupted mid-protocol still closes
+  (the event is recorded, the exception propagates), a checkpoint/resume
+  pair merges into one ledger-exact trace with no double-counted bits,
+  and dropout rounds record dead players as explicit zero-bit events;
+* the validator bites — tampering with a traced event (dropping a round,
+  zeroing a category) is an AssertionError, not a silent pass.
+
+The full engine × comm-mode × mask validation matrix lives in
+benchmarks/observability.py (gated); these tests keep the small fast
+cases in tier-1.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import msgpack_ckpt
+from repro.core import batched, tasks, weak
+from repro.core.types import BoostConfig
+from repro.obs import metrics as M
+from repro.obs import roundtrace
+from repro.obs import trace as T
+
+B, K, MLOC = 2, 2, 64
+N_DOMAIN = 1 << 10
+
+# player 0 sits out wire round 1 (canon_player_sched extends the last row)
+MASK_SCHED = np.ones((4, K), bool)
+MASK_SCHED[1, 0] = False
+
+
+def _problem(seed0=11):
+    cls = weak.make_class("thresholds", n=N_DOMAIN)
+    cfg = BoostConfig(k=K, coreset_size=32, domain_size=N_DOMAIN,
+                      opt_budget=8)
+    x, y, _ = tasks.make_batch(cls, B, MLOC, K, 3, seed0=seed0)
+    keys = jax.random.split(jax.random.key(3), B)
+    return cls, cfg, x, y, keys
+
+
+def _step(x, y, cfg, cls, player_sched=None):
+    return lambda s: batched.run_rounds(s, x, y, cfg, cls, n=1,
+                                        player_sched=player_sched)
+
+
+def _traced_to_completion(player_sched=None, seed0=11):
+    cls, cfg, x, y, keys = _problem(seed0)
+    rec = T.TraceRecorder()
+    st = batched.init_state(x, y, keys, cfg, cls=cls)
+    st = roundtrace.trace_rounds(_step(x, y, cfg, cls, player_sched),
+                                 st, cfg, cls, recorder=rec)
+    res = batched.finalize(st, x, y, np.ones(y.shape, bool), cfg, cls)
+    return rec, res
+
+
+# ---------------------------------------------------------------------------
+# instrument units: trace
+# ---------------------------------------------------------------------------
+
+def test_disabled_tracing_is_shared_noop():
+    assert not T.enabled()
+    sp = T.span("anything", "protocol", x=1)
+    assert sp is T.span("other")            # one preallocated null span
+    with sp as s:
+        s.update(ignored=True)              # no-op, no recorder touched
+    T.instant("nothing")                    # no-op
+    assert T.active() is None
+
+
+def test_recording_scope_and_span_args(tmp_path):
+    with T.recording() as rec:
+        assert T.enabled() and T.active() is rec
+        with T.span("work", "engine", engine="batched") as sp:
+            sp.update(rounds=3)
+        T.instant("mark", "engine", task=0)
+    assert not T.enabled()                  # scope restored
+    ev = {e["name"]: e for e in rec.events}
+    assert ev["work"]["ph"] == "X"
+    assert ev["work"]["cat"] == "engine"
+    assert ev["work"]["dur"] >= 0.0
+    assert ev["work"]["args"] == {"engine": "batched", "rounds": 3}
+    assert ev["mark"]["ph"] == "i"
+    out = os.path.join(tmp_path, "trace.json")
+    rec.save(out)
+    with open(out, encoding="utf-8") as f:
+        doc = json.load(f)
+    assert doc["displayTimeUnit"] == "ms"
+    assert doc["traceEvents"] == rec.events
+
+
+def test_span_records_event_even_when_body_raises():
+    rec = T.TraceRecorder()
+    with pytest.raises(RuntimeError):
+        with rec.span("interrupted", "protocol"):
+            raise RuntimeError("preempted")
+    assert [e["name"] for e in rec.events] == ["interrupted"]
+    assert rec.events[0]["ph"] == "X"
+
+
+def test_ledger_bits_covers_every_category():
+    import types as pytypes
+    led = pytypes.SimpleNamespace(
+        **{field: i for i, field in
+           enumerate(T.CATEGORY_FIELDS.values(), start=1)})
+    bits = T.ledger_bits(led)
+    assert set(bits) == set(T.CATEGORY_FIELDS)
+    assert sorted(bits.values()) == list(
+        range(1, len(T.CATEGORY_FIELDS) + 1))
+
+
+# ---------------------------------------------------------------------------
+# instrument units: metrics
+# ---------------------------------------------------------------------------
+
+def test_histogram_quantiles_are_deterministic():
+    h = M.Histogram("t", buckets=(1.0, 2.0, 4.0))
+    assert h.quantile(0.5) == 0.0           # empty
+    for v in (0.5,) * 50 + (3.0,) * 50:
+        h.observe(v)
+    assert h.count == 100
+    assert h.sum == pytest.approx(175.0)
+    assert 0.0 < h.quantile(0.25) <= 1.0    # inside the first bucket
+    assert 2.0 < h.quantile(0.99) <= 4.0    # inside the third
+    assert h.quantile(0.25) <= h.quantile(0.5) <= h.quantile(0.99)
+    with pytest.raises(ValueError):
+        h.quantile(1.5)
+    d = h.to_dict()
+    assert d["type"] == "histogram" and "p50" in d and "p99" in d
+
+
+def test_histogram_rejects_unsorted_buckets():
+    with pytest.raises(ValueError):
+        M.Histogram("bad", buckets=(2.0, 1.0))
+
+
+def test_registry_get_or_create_and_kind_discipline(tmp_path):
+    reg = M.MetricsRegistry()
+    c = reg.counter("a.count")
+    c.inc()
+    assert reg.counter("a.count") is c      # get-or-create, not replace
+    assert reg.counter("a.count").value == 1
+    reg.gauge("a.gauge").set(2.5)
+    reg.histogram("a.lat").observe(0.01)
+    with pytest.raises(TypeError):
+        reg.gauge("a.count")                # a name holds ONE kind
+    assert reg.names() == ["a.count", "a.gauge", "a.lat"]
+    out = os.path.join(tmp_path, "metrics.json")
+    reg.save(out)
+    with open(out, encoding="utf-8") as f:
+        doc = json.load(f)
+    assert doc["a.count"] == {"type": "counter", "value": 1}
+    assert doc["a.gauge"]["value"] == 2.5
+
+
+def test_default_registry_reset_isolation():
+    reg = M.default_registry()
+    assert M.default_registry() is reg
+    fresh = M.reset_default_registry()
+    assert fresh is not reg
+    assert M.default_registry() is fresh
+
+
+# ---------------------------------------------------------------------------
+# fault integrity
+# ---------------------------------------------------------------------------
+
+def test_round_span_closes_when_step_preempted_mid_protocol():
+    cls, cfg, x, y, keys = _problem()
+    st = batched.init_state(x, y, keys, cfg, cls=cls)
+    calls = {"n": 0}
+
+    def step(s):
+        calls["n"] += 1
+        if calls["n"] == 2:
+            raise RuntimeError("dispatch preempted")
+        return batched.run_rounds(s, x, y, cfg, cls, n=1)
+
+    rec = T.TraceRecorder()
+    with pytest.raises(RuntimeError, match="preempted"):
+        roundtrace.trace_rounds(step, st, cfg, cls, recorder=rec)
+    rounds = [e for e in rec.events if e["name"] == "round"]
+    assert len(rounds) == 2                 # interrupted span still closed
+    assert all(e["ph"] == "X" for e in rounds)
+    assert "task_bits" in rounds[0]["args"]  # the completed round's bits
+
+
+def test_resumed_run_does_not_double_count(tmp_path):
+    cls, cfg, x, y, keys = _problem(seed0=21)
+    step = _step(x, y, cfg, cls)
+    path = os.path.join(tmp_path, "preempt.msgpack")
+
+    rec_a = T.TraceRecorder()
+    st = batched.init_state(x, y, keys, cfg, cls=cls)
+    st = roundtrace.trace_rounds(step, st, cfg, cls, recorder=rec_a,
+                                 max_rounds=2)
+    msgpack_ckpt.save_pytree(path, jax.device_get(st),
+                             treedef=batched.STATE_TREEDEF)
+    del st                                   # the preemption: state dies
+
+    restored, _meta = msgpack_ckpt.restore_pytree(path)
+    rec_b = T.TraceRecorder()
+    restored = roundtrace.trace_rounds(step, restored, cfg, cls,
+                                       recorder=rec_b)
+    res = batched.finalize(restored, x, y, np.ones(y.shape, bool), cfg,
+                           cls)
+
+    assert rec_a.events and rec_b.events
+    merged = rec_a.events + rec_b.events
+    ledgers = {b: res.ledger(b) for b in range(B)}
+    rep = roundtrace.validate_trace(merged, ledgers)
+    # the merged segments account for every round exactly once
+    for b in range(B):
+        assert rep[b]["traced"]["rounds"] == int(res.ledger(b).rounds)
+    # either half alone under-counts (the other half moved bits too)
+    with pytest.raises(AssertionError):
+        roundtrace.validate_trace(rec_a.events, ledgers)
+    with pytest.raises(AssertionError):
+        roundtrace.validate_trace(rec_b.events, ledgers)
+
+
+def test_dropout_rounds_emit_zero_bit_dead_player_events():
+    rec, res = _traced_to_completion(player_sched=MASK_SCHED)
+    roundtrace.validate_trace(rec, {b: res.ledger(b) for b in range(B)})
+    dead = [e for e in rec.events if e["name"] == "dead_players"]
+    assert dead, "masked round must record its dead players"
+    for e in dead:
+        assert e["ph"] == "i"
+        assert e["args"]["bits"] == 0        # absent players move nothing
+        assert e["args"]["players_dead"] >= 1
+        assert (e["args"]["players_alive"]
+                + e["args"]["players_dead"]) == K
+
+
+# ---------------------------------------------------------------------------
+# the validator bites
+# ---------------------------------------------------------------------------
+
+def test_validate_trace_detects_tampering():
+    rec, res = _traced_to_completion()
+    ledgers = {b: res.ledger(b) for b in range(B)}
+    roundtrace.validate_trace(rec, ledgers)  # clean baseline
+
+    events = json.loads(json.dumps(rec.events))  # deep copy
+    victim = next(e for e in events
+                  if (e.get("args") or {}).get("task_bits"))
+    task, bits = next(iter(victim["args"]["task_bits"].items()))
+    cat = next((c for c, v in bits.items() if v), "ws")
+    bits[cat] += 1
+    with pytest.raises(AssertionError, match=f"task {task} {cat}"):
+        roundtrace.validate_trace(events, ledgers)
+
+    idx = next(i for i, e in enumerate(rec.events)
+               if (e.get("args") or {}).get("task_bits"))
+    dropped = rec.events[:idx] + rec.events[idx + 1:]
+    with pytest.raises(AssertionError):
+        roundtrace.validate_trace(dropped, ledgers)
+
+
+def test_validate_trace_rejects_unknown_tasks():
+    rec, res = _traced_to_completion()
+    rec.instant("bogus", task_bits={"99": {"ws": 1}})
+    with pytest.raises(AssertionError, match="unknown tasks"):
+        roundtrace.validate_trace(rec, {b: res.ledger(b)
+                                        for b in range(B)})

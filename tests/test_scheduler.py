@@ -316,6 +316,71 @@ def test_fill_policy_two_bucket_burst_dispatches_full_batch():
         [c.queue_wait_s for c in burst]
 
 
+def test_padded_requests_counter_counts_only_padded_shapes():
+    """m=64,k=2 fits mloc 32 exactly; m=80,k=2 pads 40 → 48."""
+    sched = S.BoostScheduler(lattice=LATTICE)
+    sched.submit(S.Request(rid=0, m=64, k=2, **COMMON))
+    assert sched.stats.padded_requests == 0
+    sched.submit(S.Request(rid=1, m=80, k=2, **COMMON))
+    assert sched.stats.padded_requests == 1
+    sched.submit(S.Request(rid=2, m=80, k=2, seed=1, **COMMON))
+    assert sched.stats.padded_requests == 2
+
+
+def test_stats_note_accumulates_per_bucket_occupancy():
+    """note() tracks (served, capacity) per bucket so occupancy is
+    derivable without re-walking completions."""
+    stats = S.SchedulerStats()
+    compat = S.CompatKey(engine="batched", cfg=None, cls=None)
+    b4 = S.BucketKey(compat=compat, B=4, mloc=32)
+    b2 = S.BucketKey(compat=compat, B=2, mloc=64)
+    stats.note(b4, 3, 4)
+    stats.note(b4, 4, 4)
+    stats.note(b2, 1, 2)
+    assert stats.dispatches == 3
+    assert stats.served == 8
+    assert stats.filler_lanes == 2
+    assert stats.per_bucket[(4, 32, "batched")] == (7, 8)
+    assert stats.per_bucket[(2, 64, "batched")] == (1, 2)
+
+
+def test_preempt_resume_counters_and_metrics_export(tmp_path):
+    """stats.preemptions/resumes count injected faults, and the whole
+    stats surface exports through the metrics registry (satellite of
+    the observability tentpole)."""
+    from repro.obs import metrics as M
+
+    reqs = _stream(4, rate=1e-3, seed=9)
+    sched = S.BoostScheduler(lattice=LATTICE, ckpt_dir=str(tmp_path),
+                             preempt={0: 1, 1: 1})
+    done = sched.run_stream(reqs)
+    assert len(done) == 4
+    # seq 0 preempted; seq 1 is its resume, preempted AGAIN; seq 2
+    # completes the batch
+    assert sched.stats.preemptions == 2
+    assert sched.stats.resumes == 2
+
+    reg = M.MetricsRegistry()
+    M.publish_scheduler_stats(sched.stats, reg)
+    M.publish_cache_stats(sched.cache.stats, reg)
+    out = reg.to_dict()
+    assert out["scheduler.preemptions"]["value"] == 2
+    assert out["scheduler.resumes"]["value"] == 2
+    assert (out["scheduler.padded_requests"]["value"]
+            == sched.stats.padded_requests)
+    assert (out["scheduler.dispatches"]["value"]
+            == sched.stats.dispatches)
+    assert (out["scheduler.compile_cache.compiles"]["value"]
+            == sched.cache.stats.compiles)
+    # one occupancy gauge per bucket, equal to served/capacity
+    for key, (served, cap) in sched.stats.per_bucket.items():
+        tag = f"B{key[0]}_mloc{key[1]}_{key[2]}"
+        assert out[f"scheduler.bucket.{tag}.served"]["value"] == served
+        assert out[f"scheduler.bucket.{tag}.capacity"]["value"] == cap
+        assert (out[f"scheduler.bucket.{tag}.occupancy"]["value"]
+                == served / cap)
+
+
 def test_fill_policy_batches_fuller_than_pack():
     """Under a trickle of arrivals, fill holds for full batches while
     pack dispatches eagerly — fewer, fuller dispatches."""

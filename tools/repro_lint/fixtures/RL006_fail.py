@@ -1,0 +1,25 @@
+# lint-fixture-path: src/repro/core/fixture_rl006.py
+"""RL006 fail: span/metric emission inside the traced closure."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import default_registry
+
+
+def _round(carry):
+    s, i = carry
+    with obs_trace.span("round", "engine"):      # RL006: while_loop body
+        s = s + jnp.float32(1.0)
+    default_registry().counter("rounds").inc()   # RL006: metrics in trace
+    return s, i + 1
+
+
+@functools.partial(jax.jit, static_argnames=())
+def _run(s):
+    obs_trace.instant("step", "engine")          # RL006: jitted function
+    out, _ = jax.lax.while_loop(lambda c: c[1] < 4, _round,
+                                (s, jnp.int32(0)))
+    return out

@@ -1,4 +1,4 @@
-"""RL001–RL005: the repo's determinism / dtype / accounting invariants.
+"""RL001–RL006: the repo's determinism / dtype / accounting invariants.
 
 Each rule's ``rationale`` is the short form of the catalog entry in
 ``docs/static_analysis.md``; each has a pass/fail fixture pair under
@@ -459,7 +459,157 @@ class HostPurity(SourceRule):
         return out
 
 
+# ---------------------------------------------------------------------------
+# RL006 — observability is host-side only
+# ---------------------------------------------------------------------------
+
+# Last dotted component of callables that put a function argument inside
+# a trace: passing `f` by name to any of these makes `f`'s body traced.
+_TRANSFORMS = {
+    "jit", "vmap", "pmap", "shard_map", "_shard_map",
+    "while_loop", "scan", "fori_loop", "cond", "switch",
+    "checkpoint", "remat",
+}
+
+# Decorators that jit the function they sit on (directly or via
+# functools.partial(jax.jit, ...)).
+_JIT_DECORATORS = {"jit", "pmap", "checkpoint", "remat"}
+
+
+def _last(dotted: str | None) -> str:
+    return (dotted or "").rsplit(".", 1)[-1]
+
+
+def _is_jit_decorator(d: ast.AST) -> bool:
+    if _last(_dotted(d)) in _JIT_DECORATORS:
+        return True
+    if isinstance(d, ast.Call):
+        fl = _last(_dotted(d.func))
+        if fl in _JIT_DECORATORS:
+            return True
+        if fl == "partial" and d.args:
+            return _last(_dotted(d.args[0])) in _JIT_DECORATORS
+    return False
+
+
+def _obs_imports(tree: ast.AST) -> tuple[set[str], set[str]]:
+    """(module aliases bound to repro.obs[.x], names imported FROM it)."""
+    aliases: set[str] = set()
+    direct: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "repro.obs" or a.name.startswith("repro.obs."):
+                    if a.asname:
+                        aliases.add(a.asname)
+                    # plain `import repro.obs.trace` binds `repro`; call
+                    # sites then spell the full repro.obs.* chain, which
+                    # _obs_call matches by prefix.
+        elif isinstance(node, ast.ImportFrom):
+            mod = node.module or ""
+            if mod == "repro":
+                for a in node.names:
+                    if a.name == "obs":
+                        aliases.add(a.asname or "obs")
+            elif mod == "repro.obs":
+                for a in node.names:
+                    aliases.add(a.asname or a.name)
+            elif mod.startswith("repro.obs."):
+                for a in node.names:
+                    direct.add(a.asname or a.name)
+    return aliases, direct
+
+
+def _obs_call(node: ast.Call, aliases: set[str],
+              direct: set[str]) -> str | None:
+    d = _dotted(node.func)
+    if d:
+        if d.startswith("repro.obs."):
+            return d
+        if "." in d and d.split(".", 1)[0] in aliases:
+            return d
+    if isinstance(node.func, ast.Name) and node.func.id in direct:
+        return node.func.id
+    return None
+
+
+class HostSideObservability(SourceRule):
+    rule_id = "RL006"
+    title = "no span/metric emission inside jitted code"
+    rationale = (
+        "obs spans/metrics are host-side Python side effects; inside a "
+        "traced function they fire once at trace time (then never "
+        "again from the compiled program) and their timestamps bound "
+        "tracing, not execution — silently wrong numbers.  The rule "
+        "takes the traced closure (jit-decorated functions, functions "
+        "passed by name to jit/vmap/shard_map/while_loop/scan/…, plus "
+        "everything they reference module-locally) and bans repro.obs "
+        "calls inside it.  `jax.named_scope` is the device-visible "
+        "label that IS allowed in traced code; spans wrap the dispatch "
+        "from the host side (see run_rounds)."
+    )
+
+    def applies_to(self, relpath):
+        return in_jitted_module(relpath)
+
+    def check(self, tree, src, relpath):
+        aliases, direct = _obs_imports(tree)
+        if not aliases and not direct:
+            return []
+
+        funcs: dict[str, list[ast.AST]] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                funcs.setdefault(node.name, []).append(node)
+
+        roots: set[str] = set()
+        for name, defs in funcs.items():
+            if any(_is_jit_decorator(d) for fn in defs
+                   for d in fn.decorator_list):
+                roots.add(name)
+        for node in ast.walk(tree):
+            if (isinstance(node, ast.Call)
+                    and _last(_dotted(node.func)) in _TRANSFORMS):
+                for a in node.args:
+                    if isinstance(a, ast.Name) and a.id in funcs:
+                        roots.add(a.id)
+
+        # conservative transitive closure: any module-local function
+        # NAME referenced inside a traced function joins the closure
+        # (covers functools.partial(_round_body, …) handed to while_loop)
+        closure: set[str] = set()
+        todo = sorted(roots)
+        while todo:
+            name = todo.pop()
+            if name in closure:
+                continue
+            closure.add(name)
+            for fn in funcs[name]:
+                for n in ast.walk(fn):
+                    if (isinstance(n, ast.Name) and n.id in funcs
+                            and n.id not in closure):
+                        todo.append(n.id)
+
+        out: list[Violation] = []
+        seen: set[int] = set()
+        for name in sorted(closure):
+            for fn in funcs[name]:
+                for n in ast.walk(fn):
+                    if not isinstance(n, ast.Call):
+                        continue
+                    label = _obs_call(n, aliases, direct)
+                    if label and n.lineno not in seen:
+                        seen.add(n.lineno)
+                        out.append(self.violation(
+                            relpath, n,
+                            f"obs call `{label}` inside the traced "
+                            f"closure (via `{name}`) — spans/metrics "
+                            f"are host-side only; use jax.named_scope "
+                            f"for device-visible labels"))
+        return out
+
+
 ALL_RULES = [NoBareExtrema(), LedgerPairing(), DtypeDiscipline(),
-             KernelTriple(), HostPurity()]
+             KernelTriple(), HostPurity(), HostSideObservability()]
 
 RULE_IDS = sorted(r.rule_id for r in ALL_RULES)
